@@ -1,0 +1,204 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+Reads experiments/artifacts/<arch>__<shape>__<mesh>.json (produced by
+launch/dryrun.py: per-device HLO flops/bytes from cost_analysis, per-chip
+collective wire bytes parsed from the optimized HLO) and derives, per
+cell:
+
+  compute_s    = HLO_flops_per_chip / peak_bf16
+  memory_s     = HLO_bytes_per_chip / HBM_bw
+  collective_s = wire_bytes_per_chip / ICI_bw
+
+  bottleneck   = argmax of the three
+  model_flops  = 6*N*D (train) or 2*N*D (fwd-only), N = active params
+  usefulness   = model_flops_per_chip / HLO_flops_per_chip
+  frac         = compute_s / max(terms)   (roofline fraction: 1.0 means
+                 the cell is pure-MXU-bound — nothing else to win)
+
+Usage: python -m benchmarks.roofline [--mesh pod1] [--markdown out.md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from benchmarks.common import ARTIFACTS, HBM_GBPS, PEAK_BF16_TFLOPS
+
+ICI_GBPS = 50.0  # per-link ICI
+
+
+def _param_count(arch: str) -> tuple[float, float]:
+    """(total, active) parameter counts — cached analytic eval_shape."""
+    import jax
+    from repro.configs import get_config
+    from repro.runtime.serve_step import abstract_params
+    cfg = get_config(arch)
+    ap = abstract_params(cfg)
+    total = sum(
+        int(__import__("numpy").prod(l.shape)) for l in jax.tree.leaves(ap))
+    active = total
+    if cfg.num_experts:
+        # non-shared expert weights scale by top_k/num_experts
+        expert = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(ap)[0]:
+            p = "/".join(str(getattr(k, "key", k)) for k in path)
+            if any(t in p for t in ("/wi/", "/wg/", "/wo/")) and \
+                    leaf.ndim >= 3 and cfg.num_experts in leaf.shape:
+                expert += int(__import__("numpy").prod(leaf.shape))
+        active = total - expert + expert * cfg.top_k / cfg.num_experts
+    return float(total), float(active)
+
+
+_PC_CACHE: dict = {}
+
+
+def param_count(arch: str) -> tuple[float, float]:
+    if arch not in _PC_CACHE:
+        _PC_CACHE[arch] = _param_count(arch)
+    return _PC_CACHE[arch]
+
+
+def model_flops(arch: str, shape: str, microbatches: int = 1) -> float:
+    """Global useful model flops per step (6ND train, 2ND forward)."""
+    from repro.configs import LM_SHAPES
+    sh = LM_SHAPES[shape]
+    _, active = param_count(arch)
+    if sh.mode == "train":
+        tokens = sh.global_batch * sh.seq_len
+        return 6.0 * active * tokens
+    if sh.mode == "prefill":
+        tokens = sh.global_batch * sh.seq_len
+        return 2.0 * active * tokens
+    # decode: one token per sequence
+    return 2.0 * active * sh.global_batch
+
+
+def analyse(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    chips = 1
+    for d in rec["mesh"]:
+        chips *= d
+    # trip-count-aware per-chip costs from repro.analysis.hlo_cost
+    # (falls back to the raw — trip-count-blind — cost_analysis numbers
+    # for artifacts written before the analyzer existed)
+    tc = rec.get("tc_cost")
+    if tc:
+        flops = tc["flops"]
+        bytes_ = tc["bytes_accessed"]
+        wire = tc["collective_bytes"]
+    else:
+        flops = rec["cost"].get("flops", 0.0)
+        bytes_ = rec["cost"].get("bytes accessed", 0.0)
+        wire = rec["collectives"]["total_bytes"]
+    compute_s = flops / (PEAK_BF16_TFLOPS * 1e12)
+    memory_s = bytes_ / (HBM_GBPS * 1e9)
+    collective_s = wire / (ICI_GBPS * 1e9)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    mflops = model_flops(rec["arch"], rec["shape"])
+    useful = mflops / chips / max(flops, 1.0)
+    return {
+        "cell": rec["cell"], "arch": rec["arch"], "shape": rec["shape"],
+        "chips": chips, "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "bottleneck": bottleneck,
+        "step_s": step_s, "useful_flops_ratio": useful,
+        "roofline_frac": compute_s / step_s if step_s else 0.0,
+        "model_tflops_per_chip_s":
+            mflops / chips / step_s / 1e12 if step_s else 0.0,
+        "mfu": (mflops / chips / step_s) / (PEAK_BF16_TFLOPS * 1e12)
+               if step_s else 0.0,
+    }
+
+
+def load_all(mesh: str = "pod1", tag: str = "") -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(
+            ARTIFACTS, f"*__{mesh}{tag}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        a = analyse(rec)
+        if a:
+            out.append(a)
+        elif rec.get("status") == "skipped":
+            out.append({"cell": rec["cell"], "skipped": True,
+                        "reason": rec.get("reason", "")})
+    return out
+
+
+def to_markdown(rows: list[dict]) -> str:
+    lines = [
+        "| cell | compute_s | memory_s | collective_s | bottleneck |"
+        " roofline_frac | useful_flops | MFU |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("skipped"):
+            lines.append(f"| {r['cell']} | — | — | — | skipped | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['cell']} | {r['compute_s']:.4f} | {r['memory_s']:.4f} |"
+            f" {r['collective_s']:.4f} | **{r['bottleneck']}** |"
+            f" {r['roofline_frac']:.2f} | {r['useful_flops_ratio']:.2f} |"
+            f" {r['mfu']:.2f} |")
+    return "\n".join(lines)
+
+
+def load_dir(directory: str, mesh: str = "pod1") -> dict[str, dict]:
+    out = {}
+    for path in sorted(glob.glob(os.path.join(directory,
+                                              f"*__{mesh}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        a = analyse(rec)
+        if a:
+            out[f"{rec['arch']}__{rec['shape']}"] = a
+    return out
+
+
+def compare_markdown(base_dir: str, opt_dir: str, mesh: str = "pod1") -> str:
+    """Baseline vs optimized step-bound table (§Perf summary)."""
+    base = load_dir(base_dir, mesh)
+    opt = load_dir(opt_dir, mesh)
+    lines = [
+        "| cell | base step_s (bound) | opt step_s (bound) | speedup |"
+        " opt frac |",
+        "|---|---|---|---|---|",
+    ]
+    for cell in sorted(base):
+        b = base[cell]
+        o = opt.get(cell)
+        if not o:
+            continue
+        sp = b["step_s"] / o["step_s"] if o["step_s"] else float("inf")
+        lines.append(
+            f"| {cell} | {b['step_s']:.3f} ({b['bottleneck'][:4]}) |"
+            f" {o['step_s']:.3f} ({o['bottleneck'][:4]}) | {sp:.1f}x |"
+            f" {o['roofline_frac']:.2f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod1")
+    ap.add_argument("--markdown")
+    ap.add_argument("--compare", nargs=2, metavar=("BASE_DIR", "OPT_DIR"),
+                    help="emit baseline-vs-optimized step-bound table")
+    args = ap.parse_args()
+    if args.compare:
+        md = compare_markdown(args.compare[0], args.compare[1], args.mesh)
+    else:
+        md = to_markdown(load_all(args.mesh))
+    print(md)
+    if args.markdown:
+        with open(args.markdown, "w") as f:
+            f.write(md + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Benchmark aggregator: one section per paper table/figure.
+
+  Fig. 6  GEMM throughput by interface          benchmarks.gemm_perf
+  Fig. 7  batched 16x16 GEMM vs batch size      benchmarks.batched_gemm_perf
+  Fig. 8  ||e||_max vs N (+ the +-16 text expt) benchmarks.precision_error
+  Fig. 9  error-vs-cost plane                   benchmarks.refine_tradeoff
+  (g)     roofline table from dry-run artifacts benchmarks.roofline
+
+Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sweeps (CI-sized)")
+    args = ap.parse_args()
+
+    from benchmarks import (batched_gemm_perf, gemm_perf, precision_error,
+                            refine_tradeoff)
+
+    t0 = time.time()
+    print("#" * 72)
+    print("# repro benchmarks — Markidis et al. IPDPSW'18 on TPU terms")
+    print("#" * 72)
+
+    if args.quick:
+        gemm_perf.run(ns=(256, 512), reps=2)
+        batched_gemm_perf.run(batches=(256, 1024), reps=2)
+        precision_error.run(ns=(512, 1024))
+        precision_error.run(ns=(1024,), value_range=16.0)
+        refine_tradeoff.run(n=1024, seeds=(0,), reps=2)
+    else:
+        gemm_perf.run()
+        batched_gemm_perf.run()
+        precision_error.run()
+        precision_error.run(ns=(1024, 4096), value_range=16.0)
+        refine_tradeoff.run()
+
+    # Roofline table (only if dry-run artifacts exist).
+    try:
+        from benchmarks import roofline
+        rows = roofline.load_all("pod1")
+        if rows:
+            print("\n== Roofline (single-pod dry-run artifacts) ==")
+            print(roofline.to_markdown(rows))
+        else:
+            print("\n(no dry-run artifacts yet: run "
+                  "`PYTHONPATH=src python -m repro.launch.dryrun --all`)")
+    except Exception as e:  # roofline needs artifacts; not fatal here
+        print(f"\n(roofline table skipped: {e})")
+
+    print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""End-to-end training driver example: a GPT-2-class (~100M-param) LM
+trained with the full framework stack — synthetic data pipeline,
+policy-routed matmuls, AdamW, async sharded checkpoints, restart
+recovery and straggler telemetry.
+
+Presets:
+  tiny   ~1.6M params  (CI / quick CPU check;   ~200 steps in minutes)
+  small  ~25M  params  (CPU-patient)
+  gpt2   ~124M params  (the "~100M model, few hundred steps" deliverable;
+                        sized for a real accelerator, runnable on CPU)
+
+Run:  PYTHONPATH=src python examples/train_lm.py --preset tiny --steps 200
+Kill it mid-run and re-run with the same --ckpt-dir: it resumes from the
+latest complete checkpoint (the fault-tolerance path).
+"""
+
+import argparse
+
+from repro.configs.base import ModelConfig, Segment
+from repro.core.precision import PrecisionPolicy
+from repro.data.pipeline import DataConfig
+from repro.launch.train import TrainLoop
+from repro.optim import adamw
+
+PRESETS = {
+    "tiny": dict(d_model=128, layers=4, d_ff=512, heads=4, kv=2,
+                 vocab=2048, batch=8, seq=64),
+    "small": dict(d_model=512, layers=8, d_ff=2048, heads=8, kv=4,
+                  vocab=16384, batch=8, seq=128),
+    "gpt2": dict(d_model=768, layers=12, d_ff=3072, heads=12, kv=12,
+                 vocab=32768, batch=8, seq=256),
+}
+
+
+def build_config(p) -> ModelConfig:
+    return ModelConfig(
+        name="example-lm", family="dense", d_model=p["d_model"],
+        num_layers=p["layers"],
+        segments=(Segment(("attn", "mlp"), p["layers"]),),
+        vocab_size=p["vocab"], num_heads=p["heads"], num_kv_heads=p["kv"],
+        head_dim=p["d_model"] // p["heads"], d_ff=p["d_ff"],
+        mlp_kind="swiglu")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=PRESETS, default="tiny")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--policy", default="bf16")
+    ap.add_argument("--logits-policy", default="bf16x3",
+                    help="the paper's technique on the error-critical "
+                         "vocab matmul")
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    p = PRESETS[args.preset]
+    cfg = build_config(p)
+    import jax
+    n_params = sum(
+        int(__import__("numpy").prod(l.shape)) for l in jax.tree.leaves(
+            jax.eval_shape(lambda: __import__(
+                "repro.models.api", fromlist=["api"]).init_params(
+                    jax.random.PRNGKey(0), cfg))))
+    print(f"preset={args.preset}: {n_params/1e6:.1f}M params, "
+          f"policy={args.policy}/logits={args.logits_policy}")
+
+    loop = TrainLoop(
+        cfg,
+        policy=PrecisionPolicy(default=args.policy,
+                               logits=args.logits_policy),
+        opt_cfg=adamw.AdamWConfig(lr=1e-3, warmup_steps=20,
+                                  total_steps=args.steps),
+        data_cfg=DataConfig(global_batch=p["batch"], seq_len=p["seq"],
+                            vocab_size=p["vocab"]),
+        ckpt_dir=args.ckpt_dir, microbatches=args.microbatches,
+        remat=False, ckpt_every=50)
+    _, _, hist = loop.run(args.steps, log_every=10)
+    print(f"\nfinal loss {hist[-1]:.4f} (start {hist[0]:.4f}); "
+          f"checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,361 @@
+"""Trip-count-aware cost analysis over optimized HLO text.
+
+``compiled.cost_analysis()`` visits each while-loop (lax.scan) body ONCE,
+so for scanned layer stacks it undercounts flops/bytes by the trip count
+(verified empirically: scan of 10 matmuls reports 1 matmul of flops).
+XLA's optimized HLO records ``backend_config={"known_trip_count":{"n":..}}``
+on while ops, so exact correction is possible by walking the call graph
+and multiplying each computation's costs by its aggregate trip count.
+
+Counted per computation, then multiplied along the ENTRY->callee chain:
+
+  flops            dot ops: 2 * prod(result dims) * prod(contracted dims)
+                   (operand shapes resolved from the computation-local
+                   symbol table)
+  collective bytes per-chip wire bytes: factor * max(operand, result)
+                   bytes; factor 2 for all-reduce (ring RS+AG), 1 for
+                   all-gather / reduce-scatter / all-to-all /
+                   collective-permute
+  memory bytes     fusion-level operands+outputs of top-level ops in
+                   non-fusion computations (the HloCostAnalysis
+                   convention), skipping shape-only ops
+
+Used by launch/dryrun.py (stores corrected numbers in the artifact) and
+benchmarks/roofline.py (the roofline table).
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# op definition:   %name = TYPE opcode(operands...), attrs
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+
+
+def _split_rhs(rhs: str) -> tuple[str, str, str] | None:
+    """'TYPE opcode(rest' -> (type_text, opcode, rest).
+
+    TYPE may be a tuple '(...)' containing nested parens and
+    '/*index=N*/' comments; match parens with a counter.
+    """
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    type_text, rest = rhs[:i + 1], rhs[i + 1:]
+                    break
+        else:
+            return None
+    else:
+        m = re.match(r"[\w\[\],{}]+", rhs)
+        if not m:
+            return None
+        type_text, rest = m.group(0), rhs[m.end():]
+    m = re.match(r"\s*([a-z][\w\-]*)\((.*)$", rest)
+    if not m:
+        return None
+    return type_text, m.group(1), m.group(2)
+# computation header: %name (args...) -> type {   /  ENTRY %name ...
+# (arg list may contain nested parens: only anchor on the name + '(')
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLEE_RE = re.compile(
+    r"(?:body=|condition=|calls=|to_apply=|branch_computations=\{)%?"
+    r"([\w.\-]+)")
+_INT_CONST_RE = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_NO_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "iota", "after-all", "partition-id",
+               "replica-id"}
+_CONTROL_FLOW = {"while", "conditional", "call"}
+
+
+def _shapes(text: str) -> list[tuple[str, int]]:
+    """All (dtype, nelems) array shapes mentioned in a type string."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append((dt, n))
+    return out
+
+
+def _bytes(text: str) -> int:
+    return sum(n * _DTYPE_BYTES[dt] for dt, n in _shapes(text))
+
+
+def _dims(type_text: str) -> list[int]:
+    """Dims of the FIRST array shape in a type string."""
+    m = _SHAPE_RE.search(type_text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class _Op:
+    name: str
+    opcode: str
+    type_text: str
+    rest: str          # operand list + attributes
+
+
+@dataclass
+class _Comp:
+    name: str
+    ops: list = field(default_factory=list)
+    # (callee_name, trip_multiplier) edges
+    calls: list = field(default_factory=list)
+    is_fusion: bool = False
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_type: dict = field(default_factory=dict)
+    collective_counts: dict = field(default_factory=dict)
+    dot_flops_by_comp: dict = field(default_factory=dict)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops, "bytes_accessed": self.bytes_accessed,
+            "collective_bytes": self.collective_bytes,
+            "collective_by_type": self.collective_by_type,
+            "collective_counts": self.collective_counts,
+        }
+
+
+def _dus_update_bytes(op: _Op, comps: dict[str, _Comp]) -> int | None:
+    """If ``op`` is a fusion whose called computation is rooted in a
+    dynamic-update-slice, return the update operand's bytes (the real
+    in-place traffic); else None."""
+    m = re.search(r"calls=%?([\w.\-]+)", op.rest)
+    if not m or m.group(1) not in comps:
+        return None
+    fused = comps[m.group(1)]
+    if not fused.ops:
+        return None
+    root = fused.ops[-1]
+    if root.opcode != "dynamic-update-slice":
+        return None
+    symtab = {o.name: o.type_text for o in fused.ops}
+    ops_ = _OPERAND_RE.findall(root.rest)
+    if len(ops_) > 1 and ops_[1] in symtab:
+        return _bytes(symtab[ops_[1]])
+    return None
+
+
+def _parse(hlo: str) -> dict[str, _Comp]:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        if not s or s.startswith(("//", "HloModule")):
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if s.endswith("{") and "->" in s:
+            m = _COMP_RE.match(s)
+            if m:
+                cur = _Comp(name=m.group(1))
+                cur.is_fusion = "fused" in cur.name or "wrapped" in cur.name
+                comps[cur.name] = cur
+            continue
+        if cur is None or "=" not in s:
+            continue
+        m = _OP_RE.match(s)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        parts = _split_rhs(rhs)
+        if parts is None:
+            continue
+        type_text, opcode, rest = parts
+        cur.ops.append(_Op(name=name, opcode=opcode,
+                           type_text=type_text.strip(), rest=rest))
+    return comps
+
+
+def analyze_hlo(hlo: str) -> HloCost:
+    comps = _parse(hlo)
+
+    # ---- entry detection: prefer the module's ENTRY; fall back to 'main'
+    entry = None
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.M)
+    if m:
+        entry = m.group(1)
+    if entry not in comps:
+        cands = [n for n in comps if n.startswith("main")]
+        entry = cands[0] if cands else next(iter(comps))
+
+    # per-computation max s32 constant (trip-count fallback for while
+    # conditions that lack a backend_config known_trip_count)
+    max_const: dict[str, int] = {}
+    for comp in comps.values():
+        cs = []
+        for op in comp.ops:
+            if (op.opcode == "constant"
+                    and op.type_text.strip().startswith("s32[]")):
+                m = re.match(r"(\d+)\)", op.rest)
+                if m:
+                    cs.append(int(m.group(1)))
+        max_const[comp.name] = max(cs) if cs else 1
+
+    # ---- call edges with trip multipliers
+    for comp in comps.values():
+        for op in comp.ops:
+            trip = 1
+            callees = _CALLEE_RE.findall(op.rest)
+            if op.opcode == "while":
+                tm = _TRIP_RE.search(op.rest)
+                if tm:
+                    trip = int(tm.group(1))
+                else:  # fall back to the loop bound in the condition comp
+                    cond = re.search(r"condition=%?([\w.\-]+)", op.rest)
+                    if cond and cond.group(1) in max_const:
+                        trip = max_const[cond.group(1)]
+            for callee in callees:
+                if callee in comps:
+                    comp.calls.append((callee, trip))
+
+    # ---- propagate multipliers from entry
+    mult: dict[str, float] = {entry: 1.0}
+    stack = [entry]
+    while stack:
+        c = stack.pop()
+        for callee, trip in comps[c].calls:
+            add = mult[c] * trip
+            if callee in mult:
+                mult[callee] += add
+            else:
+                mult[callee] = add
+                stack.append(callee)
+    # note: a computation called from several sites accumulates each
+    # site's multiplier (correct for cost purposes; HLO computations are
+    # not recursive).
+
+    cost = HloCost()
+    for comp in comps.values():
+        m_ = mult.get(comp.name, 0.0)
+        if m_ == 0.0:
+            continue
+        symtab = {op.name: op.type_text for op in comp.ops}
+        comp_dot_flops = 0.0
+        for op in comp.ops:
+            # ----------------------------------------------------- flops
+            if op.opcode == "dot":
+                out_elems = 1
+                for d in _dims(op.type_text):
+                    out_elems *= d
+                contracted = 1
+                lhs = _OPERAND_RE.search(op.rest)
+                cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+                if lhs and cm and lhs.group(1) in symtab:
+                    ldims = _dims(symtab[lhs.group(1)])
+                    for i in (int(x) for x in cm.group(1).split(",") if x):
+                        if i < len(ldims):
+                            contracted *= ldims[i]
+                flops = 2.0 * out_elems * contracted
+                comp_dot_flops += flops
+                cost.flops += m_ * flops
+            # ----------------------------------------------- collectives
+            base = op.opcode.removesuffix("-start").removesuffix("-done")
+            if base in _COLLECTIVES and not op.opcode.endswith("-done"):
+                cand = [_bytes(op.type_text)]
+                for o in _OPERAND_RE.findall(op.rest):
+                    if o in symtab:
+                        cand.append(_bytes(symtab[o]))
+                        break   # first operand is the payload
+                largest = max(
+                    [b for dt, n in _shapes(op.type_text)
+                     for b in [n * _DTYPE_BYTES[dt]]] + cand[1:] or [0])
+                factor = 2.0 if base == "all-reduce" else 1.0
+                wire = factor * largest
+                cost.collective_bytes += m_ * wire
+                cost.collective_by_type[base] = (
+                    cost.collective_by_type.get(base, 0.0) + m_ * wire)
+                cost.collective_counts[base] = (
+                    cost.collective_counts.get(base, 0) + int(m_))
+            # ---------------------------------------------- memory bytes
+            # HloCostAnalysis-style: output + operand bytes per op, with
+            # slicing ops counting the SLICE not the sliced-from tensor
+            # (a dynamic-slice of one layer from a 96-layer stacked param
+            # reads layer-sized bytes, not the whole stack) and
+            # control-flow ops counting nothing at the call site (their
+            # bodies are counted separately via the multiplier).
+            if (not comp.is_fusion and op.opcode not in _NO_TRAFFIC
+                    and op.opcode not in _CONTROL_FLOW):
+                out_b = _bytes(op.type_text)
+                if op.opcode in ("dynamic-slice", "slice", "gather"):
+                    b = 2 * out_b            # read slice + write slice
+                elif op.opcode in ("dynamic-update-slice", "scatter"):
+                    # read+write the update region (in-place on TPU);
+                    # update operand is the 2nd (DUS) / 3rd (scatter)
+                    ops_ = _OPERAND_RE.findall(op.rest)
+                    i_upd = 1 if op.opcode == "dynamic-update-slice" else 2
+                    upd = (_bytes(symtab[ops_[i_upd]])
+                           if len(ops_) > i_upd and ops_[i_upd] in symtab
+                           else out_b)
+                    b = 2 * upd
+                elif op.opcode == "fusion" and _dus_update_bytes(
+                        op, comps) is not None:
+                    # DUS-rooted fusion (scan writing one slice of a
+                    # stacked buffer): in-place update — count the
+                    # update region twice + the non-buffer operands,
+                    # NOT the full buffer (matches in-place semantics).
+                    upd = _dus_update_bytes(op, comps)
+                    b = 2 * upd
+                    for o in set(_OPERAND_RE.findall(op.rest)):
+                        if o in symtab and _bytes(symtab[o]) != out_b:
+                            b += _bytes(symtab[o])
+                else:
+                    b = out_b
+                    seen = set()
+                    for o in _OPERAND_RE.findall(op.rest):
+                        if o in symtab and o not in seen:
+                            seen.add(o)
+                            b += _bytes(symtab[o])
+                cost.bytes_accessed += m_ * b
+        if comp_dot_flops:
+            cost.dot_flops_by_comp[comp.name] = comp_dot_flops * m_
+    return cost
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("hlo_file")
+    args = ap.parse_args()
+    with open(args.hlo_file) as f:
+        cost = analyze_hlo(f.read())
+    print(json.dumps(cost.as_dict(), indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Checkpoint substrate: atomic sharded save/restore + elastic reshard."""
+
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

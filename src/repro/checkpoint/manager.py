@@ -1,0 +1,170 @@
+"""Sharded, atomic, restart-safe checkpointing.
+
+Layout (one directory per step):
+
+    <root>/step_000123.tmp-<pid>/      # staged writes
+    <root>/step_000123/                # atomic rename on completion
+        meta.json                      # step, leaf paths, shapes, dtypes
+        proc_000/leaf_<i>_shard_<j>.npy
+
+Each process writes only its ADDRESSABLE shards (ZeRO-style: no
+gather-to-host-0 at 340B scale); `meta.json` records every shard's
+global index so restore can reassemble on a DIFFERENT mesh — that is
+the elastic-rescale path (runtime/elastic.py): restore builds arrays
+via ``jax.make_array_from_callback`` against the NEW sharding and reads
+whichever saved shards intersect each requested index.
+
+A checkpoint directory is valid iff the atomic rename happened; crashes
+mid-save leave only ``.tmp-*`` garbage that ``latest_step`` ignores and
+``clean`` removes. ``save_async`` runs serialization on a background
+thread (double-buffered: at most one outstanding save).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import ml_dtypes  # noqa: F401  (registers bfloat16 et al. with numpy)
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+
+def _leaf_paths(tree: Any) -> list[tuple[str, Any]]:
+    out = []
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        path = "/".join(
+            str(getattr(k, "key", getattr(k, "name", getattr(k, "idx", k))))
+            for k in kp)
+        out.append((path, leaf))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, root: str, max_to_keep: int = 3):
+        self.root = root
+        self.max_to_keep = max_to_keep
+        os.makedirs(root, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------- save
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:09d}")
+
+    def save(self, step: int, tree: Any) -> str:
+        """Blocking save of a pytree of (possibly sharded) jax arrays."""
+        proc = jax.process_index()
+        final = self._step_dir(step)
+        tmp = f"{final}.tmp-{os.getpid()}"
+        pdir = os.path.join(tmp, f"proc_{proc:03d}")
+        os.makedirs(pdir, exist_ok=True)
+
+        meta: dict[str, Any] = {"step": step, "leaves": []}
+        for i, (path, leaf) in enumerate(_leaf_paths(tree)):
+            leaf = jax.block_until_ready(leaf)
+            entry = {"path": path, "shape": list(np.shape(leaf)),
+                     "dtype": str(leaf.dtype), "shards": []}
+            if hasattr(leaf, "addressable_shards"):
+                seen = set()
+                for j, sh in enumerate(leaf.addressable_shards):
+                    idx = tuple(
+                        (s.start or 0, s.stop if s.stop is not None else dim)
+                        for s, dim in zip(sh.index, leaf.shape))
+                    if idx in seen:   # replicated shard: write once
+                        continue
+                    seen.add(idx)
+                    fn = f"leaf_{i:04d}_shard_{j:03d}.npy"
+                    np.save(os.path.join(pdir, fn), np.asarray(sh.data))
+                    entry["shards"].append(
+                        {"file": f"proc_{proc:03d}/{fn}",
+                         "index": [list(t) for t in idx]})
+            else:
+                fn = f"leaf_{i:04d}_shard_000.npy"
+                arr = np.asarray(leaf)
+                np.save(os.path.join(pdir, fn), arr)
+                entry["shards"].append(
+                    {"file": f"proc_{proc:03d}/{fn}",
+                     "index": [[0, d] for d in arr.shape]})
+            meta["leaves"].append(entry)
+
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        os.replace(tmp, final) if not os.path.exists(final) else shutil.rmtree(tmp)
+        self._gc()
+        return final
+
+    def save_async(self, step: int, tree: Any) -> None:
+        """Background save; waits for any outstanding save first."""
+        self.wait()
+        # Materialize on host synchronously (cheap vs serialization), so
+        # the training step can donate/overwrite device buffers safely.
+        tree = jax.tree.map(jax.device_get, tree)
+        self._thread = threading.Thread(
+            target=self.save, args=(step, tree), daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ---------------------------------------------------------- restore
+
+    def latest_step(self) -> int | None:
+        steps = []
+        for d in os.listdir(self.root):
+            if d.startswith("step_") and ".tmp" not in d and os.path.exists(
+                    os.path.join(self.root, d, "meta.json")):
+                steps.append(int(d.split("_")[1]))
+        return max(steps) if steps else None
+
+    def restore(self, step: int, abstract_tree: Any,
+                shardings: Any | None = None) -> Any:
+        """Rebuild the pytree; reshards to ``shardings`` if given (elastic)."""
+        d = self._step_dir(step)
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        leaves_meta = meta["leaves"]
+        abs_leaves, treedef = jax.tree.flatten(abstract_tree)
+        shard_leaves = (treedef.flatten_up_to(shardings)
+                        if shardings is not None else [None] * len(abs_leaves))
+        if len(abs_leaves) != len(leaves_meta):
+            raise ValueError(
+                f"checkpoint has {len(leaves_meta)} leaves, tree expects "
+                f"{len(abs_leaves)} — structure changed?")
+
+        out = []
+        for entry, aval, shd in zip(leaves_meta, abs_leaves, shard_leaves):
+            full = np.zeros(entry["shape"], dtype=entry["dtype"])
+            for sh in entry["shards"]:
+                idx = tuple(slice(a, b) for a, b in sh["index"])
+                loaded = np.load(os.path.join(d, sh["file"]))
+                if loaded.dtype.kind == "V":  # np round-trips ml_dtypes
+                    loaded = loaded.view(np.dtype(entry["dtype"]))  # as void
+                full[idx] = loaded
+            arr = full.astype(np.dtype(str(aval.dtype)))
+            if shd is not None:
+                out.append(jax.device_put(arr, shd))
+            else:
+                out.append(jax.numpy.asarray(arr))
+        return treedef.unflatten(out)
+
+    # --------------------------------------------------------------- gc
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(d.split("_")[1]) for d in os.listdir(self.root)
+            if d.startswith("step_") and ".tmp" not in d)
+        for s in steps[:-self.max_to_keep] if self.max_to_keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    def clean_tmp(self) -> None:
+        for d in os.listdir(self.root):
+            if ".tmp-" in d:
+                shutil.rmtree(os.path.join(self.root, d), ignore_errors=True)

@@ -1,0 +1,124 @@
+"""Model/config schema shared by all assigned architectures.
+
+A model is a sequence of *segments*; each segment is a run of identical
+layer "kinds" whose params are stacked on a leading axis and executed
+with ``lax.scan`` (keeps HLO small for 26-96-layer stacks so the 80
+dry-run compiles stay fast). Heterogeneous stacks (gemma3's 5 local : 1
+global, zamba2's mamba + shared-attention interleave) become short
+segment lists.
+
+Layer kinds:
+  attn          GQA self-attention sublayer (+RoPE, optional window)
+  mlp           dense FFN sublayer (swiglu / squared_relu / gelu)
+  moe           mixture-of-experts FFN sublayer
+  mamba2        Mamba-2 SSD mixer sublayer
+  rwkv6         RWKV-6 time-mix + channel-mix layer
+  shared_attn   zamba2-style shared transformer block (params shared
+                across all its occurrences; stored once, not stacked)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+__all__ = ["Segment", "ModelConfig", "ShapeSpec", "LM_SHAPES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """``count`` repetitions of the layer-kind tuple ``pattern``.
+
+    E.g. gemma3: Segment(("attn_local", "mlp") * 5 + ("attn", "mlp"), 4)
+    runs 4 periods of [5 local layers + 1 global layer].
+    """
+
+    pattern: tuple[str, ...]
+    count: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    d_model: int
+    num_layers: int                  # total layers (bookkeeping; segments rule)
+    segments: tuple[Segment, ...]
+    vocab_size: int
+    # attention
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0
+    rope_theta: float = 10_000.0
+    window: int | None = None        # sliding window for attn_local kind
+    attn_logit_softcap: float | None = None
+    qkv_bias: bool = False
+    # ffn
+    d_ff: int = 0
+    mlp_kind: str = "swiglu"         # swiglu | squared_relu | gelu
+    mlp_bias: bool = False
+    # moe
+    num_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # ssm (mamba2)
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_head_dim: int = 0
+    ssm_chunk: int = 256
+    conv_width: int = 4
+    # rwkv6
+    rwkv_head_dim: int = 64
+    rwkv_chunk: int = 64        # WKV chunk; §Perf B2: per-chunk overhead
+                                # scales 1/C, the (C,C,K) tensor scales C
+    # enc-dec (whisper)
+    encoder_layers: int = 0
+    encoder_seq: int = 0             # stubbed frontend: frames arrive embedded
+    encoder_segments: tuple[Segment, ...] = ()
+    # vlm (internvl2)
+    num_image_tokens: int = 0
+    # norm / misc
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    activation_dtype: str = "bfloat16"
+    # which shapes this arch supports (long_500k dropped for pure full-attn)
+    supported_shapes: tuple[str, ...] = (
+        "train_4k", "prefill_32k", "decode_32k")
+
+    def __post_init__(self) -> None:
+        # "num_layers" counts mixer sublayers (attn / mamba2 / rwkv6 /
+        # shared_attn); mlp/moe sublayers ride along inside the same layer.
+        mixers = sum(
+            s.count * sum(k in ("attn", "attn_local", "mamba2", "rwkv6",
+                                "shared_attn") for k in s.pattern)
+            for s in self.segments)
+        if mixers != self.num_layers:
+            raise ValueError(
+                f"{self.name}: segments define {mixers} mixer layers, "
+                f"config says num_layers={self.num_layers}")
+
+    @property
+    def qk_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One assigned input-shape cell (seq_len x global_batch + mode)."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # "train" | "prefill" | "decode"
+
+
+LM_SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}

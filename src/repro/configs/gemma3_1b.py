@@ -1,0 +1,43 @@
+"""Gemma-3 1B — 5:1 local:global attention, 262k vocab.
+[hf:google/gemma-3-1b-pt] 26L d_model=1152 4H (GQA kv=1) d_ff=6912
+vocab=262144, sliding window 512.
+
+5:1 local:global => only 5 of 26 layers carry a full-length KV cache;
+local layers use the ring-buffer window cache => long_500k RUNS (the
+sparse-global cache is sequence-sharded at that shape). The 262144-way
+logits matmul is the showcase for the paper's refined policies.
+
+Note: 4 heads do not divide the 16-way model axis; attention stays
+head-replicated at this scale while the FFN (6912 = 16*432) takes TP.
+"""
+
+from repro.configs.base import ModelConfig, Segment
+
+_PERIOD = ("attn_local", "mlp") * 5 + ("attn", "mlp")
+
+CONFIG = ModelConfig(
+    name="gemma3-1b",
+    family="dense",
+    d_model=1152,
+    num_layers=26,
+    segments=(Segment(_PERIOD, 4), Segment(("attn_local", "mlp"), 2)),
+    vocab_size=262144,
+    num_heads=4,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=6912,
+    mlp_kind="swiglu",   # geglu in the release; gated form retained
+    window=512,
+    rope_theta=1_000_000.0,
+    supported_shapes=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-smoke", family="dense", d_model=64, num_layers=8,
+        segments=(Segment(("attn_local", "mlp") * 2 + ("attn", "mlp"), 2),
+                  Segment(("attn_local", "mlp"), 2)),
+        vocab_size=512, num_heads=4, num_kv_heads=1, head_dim=16,
+        d_ff=128, mlp_kind="swiglu", window=16, rope_theta=1_000_000.0,
+        supported_shapes=CONFIG.supported_shapes)

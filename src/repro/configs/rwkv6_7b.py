@@ -1,0 +1,30 @@
+"""RWKV-6 "Finch" 7B — attention-free, data-dependent decay.
+[arXiv:2404.05892; hf] 32L d_model=4096 d_ff=14336 vocab=65536.
+
+Attention-free => O(1)-state decode => runs the long_500k cell.
+The paper's GEMM precision policy applies to every projection; the WKV
+recurrence itself is VPU work (DESIGN.md §Arch-applicability).
+"""
+
+from repro.configs.base import ModelConfig, Segment
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    d_model=4096,
+    num_layers=32,
+    segments=(Segment(("rwkv6",), 32),),
+    vocab_size=65536,
+    d_ff=14336,
+    rwkv_head_dim=64,
+    rope_theta=None,
+    supported_shapes=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-smoke", family="ssm", d_model=64, num_layers=2,
+        segments=(Segment(("rwkv6",), 2),), vocab_size=256, d_ff=128,
+        rwkv_head_dim=16, rope_theta=None,
+        supported_shapes=CONFIG.supported_shapes)

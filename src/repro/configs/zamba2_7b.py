@@ -1,0 +1,41 @@
+"""Zamba2-7B — Mamba2 backbone + SHARED attention blocks.
+[arXiv:2411.15242] 81L d_model=3584 32H (kv=32) d_ff=14336 vocab=32000,
+ssm_state=64.
+
+Pattern: 13 periods of [5 mamba2 + 1 shared_attn] + 3 trailing mamba2 =
+81 mixer layers. The shared_attn block's parameters are stored ONCE and
+re-applied at every occurrence (zamba2's parameter-sharing trick); its
+KV caches stay per-occurrence. SSM state is O(1) in sequence =>
+long_500k RUNS.
+"""
+
+from repro.configs.base import ModelConfig, Segment
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    d_model=3584,
+    num_layers=81,
+    segments=(Segment(("mamba2",) * 5 + ("shared_attn",), 13),
+              Segment(("mamba2",), 3)),
+    vocab_size=32000,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=112,
+    d_ff=14336,
+    mlp_kind="swiglu",
+    ssm_state=64,
+    ssm_head_dim=64,
+    rope_theta=10_000.0,
+    supported_shapes=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-smoke", family="hybrid", d_model=64, num_layers=7,
+        segments=(Segment(("mamba2",) * 2 + ("shared_attn",), 2),
+                  Segment(("mamba2",), 1)),
+        vocab_size=256, num_heads=4, num_kv_heads=4, head_dim=16,
+        d_ff=128, mlp_kind="swiglu", ssm_state=16, ssm_head_dim=16,
+        supported_shapes=CONFIG.supported_shapes)

@@ -1,0 +1,24 @@
+"""Core library: the paper's precision-refinement technique as a
+composable JAX module (splitting, policy routing, error analysis)."""
+
+from repro.core.precision import (
+    POLICIES,
+    PrecisionPolicy,
+    merge2,
+    num_passes,
+    split2,
+    split3,
+)
+from repro.core.refined_matmul import peinsum, pmatmul, refined_matmul
+
+__all__ = [
+    "POLICIES",
+    "PrecisionPolicy",
+    "merge2",
+    "num_passes",
+    "split2",
+    "split3",
+    "peinsum",
+    "pmatmul",
+    "refined_matmul",
+]

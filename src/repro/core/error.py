@@ -1,0 +1,61 @@
+"""Error analysis used by the paper's precision study (Fig. 8 / Fig. 9).
+
+The paper quantifies precision loss as the max norm of the error matrix
+``e = C_narrow - C_single`` over random [-1, 1] (and +-16) inputs, sweeping
+matrix size N. These helpers reproduce that protocol; the f64 oracle is
+also provided so the fp32 baseline's own error is visible (the paper
+treats fp32 as exact).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["max_norm_error", "error_report", "random_operands"]
+
+
+def max_norm_error(c, c_ref) -> float:
+    """``||e||_max = max |c_ij - ref_ij|`` — the paper's figure of merit.
+
+    Computed in host-side float64 (JAX x64 is off by default).
+    """
+    e = np.asarray(c, dtype=np.float64) - np.asarray(c_ref, dtype=np.float64)
+    return float(np.max(np.abs(e)))
+
+
+def relative_fro_error(c, c_ref) -> float:
+    c64 = np.asarray(c, dtype=np.float64)
+    r64 = np.asarray(c_ref, dtype=np.float64)
+    return float(np.linalg.norm(c64 - r64) / max(np.linalg.norm(r64), 1e-30))
+
+
+def random_operands(n: int, *, value_range: float = 1.0, seed: int = 0,
+                    dtype=jnp.float32) -> tuple[jax.Array, jax.Array]:
+    """A, B ~ U[-r, r]^(n x n) in fp32 — the paper's input protocol."""
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(-value_range, value_range, size=(n, n)).astype(np.float32)
+    b = rng.uniform(-value_range, value_range, size=(n, n)).astype(np.float32)
+    return jnp.asarray(a, dtype=dtype), jnp.asarray(b, dtype=dtype)
+
+
+def error_report(a: jax.Array, b: jax.Array, results: dict[str, jax.Array],
+                 ) -> dict[str, dict[str, float]]:
+    """Per-policy max-norm / rel-fro error vs the fp64 oracle and fp32.
+
+    ``results`` maps policy name -> computed C. Returns, per policy, the
+    error against fp64 (true error) and against fp32 (the paper's e).
+    """
+    a64 = np.asarray(a, dtype=np.float64)
+    b64 = np.asarray(b, dtype=np.float64)
+    c64 = a64 @ b64
+    c32 = np.asarray(a, dtype=np.float32) @ np.asarray(b, dtype=np.float32)
+    out: dict[str, dict[str, float]] = {}
+    for name, c in results.items():
+        out[name] = {
+            "max_vs_f64": max_norm_error(c, c64),
+            "max_vs_f32": max_norm_error(c, c32),
+            "rel_fro_vs_f64": relative_fro_error(c, c64),
+        }
+    return out

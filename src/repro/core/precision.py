@@ -1,0 +1,191 @@
+"""Precision splitting & policy — the paper's core technique, TPU-adapted.
+
+The paper (Markidis et al., IPDPSW'18, Eq. 1-3) recovers fp32 accuracy from
+a narrow-precision matrix unit by carrying the *rounding residual* as a
+second narrow-precision operand:
+
+    R_A = A_single - A_half                                   (Eq. 1)
+    A B ~= R_A B_h + A_h B_h                                  (Eq. 2)
+    A B ~= R_A R_B + A_h R_B + R_A B_h + A_h B_h              (Eq. 3)
+
+On TPU the narrow input type of the MXU is bfloat16 (8 exponent / 7
+mantissa bits) rather than fp16, so each split recovers 8 mantissa bits.
+Two nested splits (hi/mid/lo) therefore carry the full 24-bit fp32
+significand; this module implements the whole ladder:
+
+    f32      exact (VPU / fp32 dots)          1x pass, no MXU benefit
+    bf16     plain mixed precision            1 pass   (paper: no refinement)
+    refine_a Eq. 2, split A only              2 passes (paper: ~30% err cut)
+    bf16x3   Eq. 3 minus the O(eps^2) RA.RB   3 passes (beyond-paper)
+    refine_ab Eq. 3 exactly                   4 passes (paper: ~10x err cut)
+    bf16x6   3-way split, 2nd-order terms     6 passes (~fp32; XLA HIGHEST)
+
+All splits are computed in fp32 on the VPU; all products run on the MXU in
+bf16 with fp32 accumulation (``preferred_element_type=float32``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "POLICIES",
+    "PrecisionPolicy",
+    "num_passes",
+    "split2",
+    "split3",
+    "merge2",
+]
+
+# Ordered by increasing accuracy / compute. Names are part of the config
+# surface (configs/<arch>.py reference them as strings).
+POLICIES: tuple[str, ...] = (
+    "bf16",
+    "refine_a",
+    "bf16x3",
+    "refine_ab",
+    "bf16x6",
+    "f32",
+)
+
+# MXU matmul passes each policy costs (f32 counted as 1 full-precision
+# pass; on hardware without fp32 MXU paths XLA itself would decompose it).
+_PASSES = {
+    "bf16": 1,
+    "refine_a": 2,
+    "bf16x3": 3,
+    "refine_ab": 4,
+    "bf16x6": 6,
+    "f32": 1,
+}
+
+
+def num_passes(policy: str) -> int:
+    """Number of narrow-precision MXU passes the policy costs."""
+    if policy not in _PASSES:
+        raise ValueError(f"unknown precision policy {policy!r}; one of {POLICIES}")
+    return _PASSES[policy]
+
+
+def split2(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Split fp32 ``x`` into (hi, lo) bf16 with ``hi + lo ~= x``.
+
+    ``hi`` is the bf16 rounding of x; ``lo`` is the bf16 rounding of the
+    residual (paper Eq. 1). The pair carries >= 15 significand bits.
+    """
+    x = x.astype(jnp.float32)
+    hi = x.astype(jnp.bfloat16)
+    lo = (x - hi.astype(jnp.float32)).astype(jnp.bfloat16)
+    return hi, lo
+
+
+def split3(x: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Split fp32 ``x`` into (hi, mid, lo) bf16 carrying ~the full 24 bits."""
+    x = x.astype(jnp.float32)
+    hi = x.astype(jnp.bfloat16)
+    r1 = x - hi.astype(jnp.float32)
+    mid = r1.astype(jnp.bfloat16)
+    lo = (r1 - mid.astype(jnp.float32)).astype(jnp.bfloat16)
+    return hi, mid, lo
+
+
+def merge2(hi: jax.Array, lo: jax.Array) -> jax.Array:
+    """Reconstruct fp32 from a (hi, lo) split (exact fp32 addition)."""
+    return hi.astype(jnp.float32) + lo.astype(jnp.float32)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Per-layer-family precision policy for every matmul in a model.
+
+    Mirrors the paper's observation that the *developer chooses* the
+    refinement level per operation based on its accuracy sensitivity:
+    logits (vocab-sized N, the paper's large-N error-growth regime)
+    default to a finer policy than the bulk matmuls.
+    """
+
+    default: str = "bf16"
+    attention: str | None = None  # q/k/v/o projections + attn logits
+    mlp: str | None = None        # dense FFN matmuls
+    moe: str | None = None        # expert einsums
+    logits: str | None = None     # final vocab projection
+    embed: str | None = None      # embedding lookups / patch projections
+
+    def __post_init__(self) -> None:
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if v is not None and v not in POLICIES:
+                raise ValueError(
+                    f"PrecisionPolicy.{f.name}={v!r} not in {POLICIES}")
+
+    def for_(self, family: str) -> str:
+        v = getattr(self, family, None)
+        return v if v is not None else self.default
+
+    @classmethod
+    def uniform(cls, policy: str) -> "PrecisionPolicy":
+        return cls(default=policy)
+
+    @classmethod
+    def mixed_hpc(cls) -> "PrecisionPolicy":
+        """The paper's HPC recommendation: refine where error accumulates."""
+        return cls(default="bf16", logits="bf16x3", attention="refine_a")
+
+
+def policy_terms(policy: str) -> Sequence[tuple[int, int]]:
+    """(a_term, b_term) index pairs each policy multiplies.
+
+    Index 0 = hi, 1 = lo (2-way split) or 0=hi,1=mid,2=lo (3-way, bf16x6).
+    Order is smallest-magnitude first so fp32 summation loses the least.
+    """
+    if policy == "bf16":
+        return ((0, 0),)
+    if policy == "refine_a":
+        # Eq. 2: R_A B_h + A_h B_h   (B never split)
+        return ((1, 0), (0, 0))
+    if policy == "bf16x3":
+        # Eq. 3 minus R_A R_B (O(eps^2), beyond-paper drop-term variant)
+        return ((1, 0), (0, 1), (0, 0))
+    if policy == "refine_ab":
+        # Eq. 3 exactly: all four cross terms
+        return ((1, 1), (1, 0), (0, 1), (0, 0))
+    if policy == "bf16x6":
+        # 3-way split; keep terms of combined order <= 2
+        return ((2, 0), (0, 2), (1, 1), (1, 0), (0, 1), (0, 0))
+    raise ValueError(f"policy {policy!r} has no term decomposition")
+
+
+def split_for_policy(x: jax.Array, policy: str) -> tuple[jax.Array, ...]:
+    """Operand splits required by ``policy`` (1-, 2- or 3-way)."""
+    if policy in ("bf16",):
+        return (x.astype(jnp.bfloat16),)
+    if policy in ("refine_a", "bf16x3", "refine_ab"):
+        return split2(x)
+    if policy == "bf16x6":
+        return split3(x)
+    raise ValueError(f"policy {policy!r} has no split")
+
+
+def tree_split2(tree: Any) -> tuple[Any, Any]:
+    """Split every fp32 leaf of a pytree into (hi_tree, lo_tree).
+
+    Used by optim.compression (residual-compensated gradient all-reduce)
+    and optim.dual_half (bf16 (hi,lo) master weights) — the paper's Eq. 1
+    residual applied beyond GEMM.
+    """
+    his, los = [], []
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    for x in leaves:
+        hi, lo = split2(x)
+        his.append(hi)
+        los.append(lo)
+    return treedef.unflatten(his), treedef.unflatten(los)
+
+
+def tree_merge2(hi_tree: Any, lo_tree: Any) -> Any:
+    return jax.tree_util.tree_map(merge2, hi_tree, lo_tree)

@@ -1,0 +1,76 @@
+"""Policy-routed matmuls (paper Eq. 2/3 generalized to any contraction).
+
+``peinsum`` is the single entry point every model matmul in this framework
+goes through. It decomposes one fp32 contraction into 1..6 narrow
+(bfloat16-input, fp32-accumulate) contractions according to the precision
+policy — exactly the structure of the paper's refinement, expressed as
+XLA-native dots so it lowers cleanly under pjit/shard_map and shows up in
+the compiled HLO flop counts (which is how the roofline analysis sees the
+refinement cost).
+
+The *fused* single-pass variant of the same math lives in
+``repro.kernels.gemm_refined`` (Pallas); this module is the reference /
+distribution-friendly path and the paper-faithful "pipelined GEMMs"
+implementation (the paper chained 4 cuBLAS calls; we chain 1-6 XLA dots).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import precision as prec
+
+__all__ = ["peinsum", "pmatmul", "refined_matmul"]
+
+
+def peinsum(spec: str, a: jax.Array, b: jax.Array, policy: str = "bf16") -> jax.Array:
+    """Two-operand einsum computed under a precision policy.
+
+    Returns fp32 (the accumulator type). ``spec`` is any two-operand
+    einsum spec. For ``policy='f32'`` a single full-precision contraction
+    is issued; otherwise operands are split per the policy and each
+    (a_term, b_term) product runs as a bf16-input/fp32-accumulate einsum,
+    summed smallest-first in fp32.
+    """
+    if policy == "f32":
+        return jnp.einsum(
+            spec,
+            a.astype(jnp.float32),
+            b.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+
+    a_terms = prec.split_for_policy(a, policy)
+    b_split = policy not in ("bf16", "refine_a")
+    if policy == "bf16":
+        b_terms: tuple[jax.Array, ...] = (b.astype(jnp.bfloat16),)
+    elif policy == "refine_a":
+        b_terms = (b.astype(jnp.bfloat16),)
+    else:
+        b_terms = prec.split_for_policy(b, policy)
+    del b_split
+
+    out = None
+    for ta, tb in prec.policy_terms(policy):
+        part = jnp.einsum(
+            spec, a_terms[ta], b_terms[tb], preferred_element_type=jnp.float32
+        )
+        out = part if out is None else out + part
+    assert out is not None
+    return out
+
+
+def pmatmul(a: jax.Array, b: jax.Array, policy: str = "bf16") -> jax.Array:
+    """Policy-routed ``a @ b`` (contract last dim of a with first of b)."""
+    if a.ndim < 1 or b.ndim != 2:
+        raise ValueError(f"pmatmul expects (..., k) x (k, n); got {a.shape} x {b.shape}")
+    spec = "...k,kn->...n"
+    return peinsum(spec, a, b, policy)
+
+
+def refined_matmul(a: jax.Array, b: jax.Array, policy: str = "refine_ab") -> jax.Array:
+    """Paper-shaped 2-D GEMM under a policy (benchmarks/tests entry point)."""
+    if a.ndim != 2 or b.ndim != 2:
+        raise ValueError("refined_matmul is the 2-D GEMM entry point")
+    return peinsum("mk,kn->mn", a, b, policy)

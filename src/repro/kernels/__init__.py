@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+GEMM family (the paper's object of study): naive / tiled / fused-refined
+/ batched-packed. Plus the WKV6 linear-attention kernel (the memory fix
+for the rwkv6 cells, §Perf cell B). Each kernel ships with a pure-jnp
+oracle in ref.py and a jit'd dispatch wrapper in ops.py; tests sweep
+shapes/dtypes in interpret mode.
+"""
+
+from repro.kernels.ops import gemm, gemm_batched
+from repro.kernels.wkv6 import wkv6
+
+__all__ = ["gemm", "gemm_batched", "wkv6"]

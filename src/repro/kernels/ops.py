@@ -1,0 +1,127 @@
+"""jit'd dispatch wrappers over the Pallas kernels.
+
+Backends mirror the paper's three programming interfaces:
+
+  backend="xla"          -> jax.lax dots (the cuBLAS analogue: vendor path)
+  backend="pallas"       -> gemm_tiled / gemm_refined (the CUTLASS analogue)
+  backend="pallas_naive" -> gemm_naive (the raw-WMMA analogue)
+
+On this CPU container Pallas TPU kernels execute via ``interpret=True``
+(resolved automatically from the default backend); on TPU they compile
+through Mosaic. Wrappers also handle padding to block multiples so
+arbitrary shapes work everywhere.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.refined_matmul import refined_matmul as _xla_refined_matmul
+from repro.kernels.batched_gemm import batched_gemm, batched_gemm_naive
+from repro.kernels.gemm_naive import gemm_naive
+from repro.kernels.gemm_refined import gemm_refined
+from repro.kernels.gemm_tiled import gemm_tiled
+
+__all__ = ["gemm", "gemm_batched", "default_interpret"]
+
+_PALLAS_REFINED = ("refine_a", "bf16x3", "refine_ab")
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode unless we are actually on TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def _pad2(x: jax.Array, bm: int, bk: int) -> jax.Array:
+    m, k = x.shape
+    pm, pk = (-m) % bm, (-k) % bk
+    if pm or pk:
+        x = jnp.pad(x, ((0, pm), (0, pk)))
+    return x
+
+
+def gemm(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    policy: str = "bf16",
+    backend: str = "pallas",
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Policy-routed C = A @ B through a selectable backend.
+
+    Shapes are padded up to block multiples and the result is sliced
+    back; fp32 out always (the accumulator type).
+    """
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"gemm expects (m,k) x (k,n); got {a.shape} x {b.shape}")
+    m, n = a.shape[0], b.shape[1]
+    interp = default_interpret() if interpret is None else interpret
+
+    if backend == "xla":
+        return _xla_refined_matmul(a, b, policy=policy)
+
+    if backend == "pallas_naive":
+        if policy != "bf16":
+            raise ValueError("pallas_naive implements only the plain bf16 pass")
+        ap, bp = _pad2(a, bm, 128), _pad2(b, 128, bn)
+        out = gemm_naive(ap, bp, bm=min(bm, ap.shape[0]),
+                         bn=min(bn, bp.shape[1]), interpret=interp)
+        return out[:m, :n]
+
+    if backend != "pallas":
+        raise ValueError(f"unknown backend {backend!r}")
+
+    ap, bp = _pad2(a, bm, bk), _pad2(b, bk, bn)
+    if policy == "bf16":
+        out = gemm_tiled(ap, bp, bm=bm, bn=bn, bk=bk, interpret=interp)
+    elif policy in _PALLAS_REFINED:
+        out = gemm_refined(ap, bp, policy=policy, bm=bm, bn=bn, bk=bk,
+                           interpret=interp)
+    elif policy in ("f32", "bf16x6"):
+        # No fused kernel for the >=6-pass points; route to XLA dots.
+        return _xla_refined_matmul(a, b, policy=policy)
+    else:
+        raise ValueError(f"unknown policy {policy!r}")
+    return out[:m, :n]
+
+
+def gemm_batched(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    backend: str = "pallas",
+    tile: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Batched (G, n, n) small GEMMs; pads G to the packing multiple."""
+    if a.ndim != 3 or a.shape != b.shape or a.shape[1] != a.shape[2]:
+        raise ValueError(f"expected matching (G, n, n); got {a.shape}, {b.shape}")
+    g, n, _ = a.shape
+    interp = default_interpret() if interpret is None else interpret
+
+    if backend == "xla":
+        return jax.lax.dot_general(
+            a.astype(jnp.bfloat16), b.astype(jnp.bfloat16),
+            dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+
+    if backend == "pallas_naive":
+        return batched_gemm_naive(a, b, interpret=interp)
+
+    if backend != "pallas":
+        raise ValueError(f"unknown backend {backend!r}")
+
+    pack = tile // n
+    pad = (-g) % pack
+    if pad:
+        a = jnp.concatenate([a, jnp.zeros((pad, n, n), a.dtype)], axis=0)
+        b = jnp.concatenate([b, jnp.zeros((pad, n, n), b.dtype)], axis=0)
+    out = batched_gemm(a, b, tile=tile, interpret=interp)
+    return out[:g]

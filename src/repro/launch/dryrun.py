@@ -1,0 +1,282 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: for each
+cell the step function is jit'd with explicit in_shardings on the
+production mesh and ``.lower().compile()`` must succeed. The compiled
+artifact yields:
+
+  * memory_analysis()  — bytes per device (fits-or-not evidence)
+  * cost_analysis()    — per-device HLO FLOPs / bytes for §Roofline
+  * optimized HLO text — collective ops parsed into per-chip wire bytes
+
+Results are dumped as JSON to experiments/artifacts/<cell>.json; the
+roofline table in EXPERIMENTS.md is generated from these files by
+benchmarks/roofline.py.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hlo_cost import analyze_hlo
+from repro.configs import ARCHS, LM_SHAPES, get_config, input_specs
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.core.precision import PrecisionPolicy
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.optim import adamw
+from repro.runtime import serve_step as serve
+from repro.runtime.sharding import Sharder
+from repro.runtime.train_step import make_train_step
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                         "experiments", "artifacts")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+# Wire-byte multipliers per collective (ring-algorithm estimates of
+# bytes RECEIVED per chip, relative to the op's RESULT shape bytes):
+#   all-gather: result is the gathered tensor; each chip receives
+#     (k-1)/k of it ~ 1x.  all-reduce: reduce-scatter + all-gather on
+#     the (same-shaped) result ~ 2x.  reduce-scatter: receives ~result
+#     bytes. all-to-all / collective-permute: ~result bytes.
+_COLL_FACTOR = {
+    "all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+    "all-to-all": 1.0, "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+(\(?[\w\[\],{}\s]*\)?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-chip wire bytes by collective type, from optimized HLO."""
+    out: dict[str, float] = {}
+    counts: dict[str, int] = {}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_text, op = m.group(1), m.group(2)
+        if op.endswith("-done"):
+            continue
+        b = _shape_bytes(shape_text) * _COLL_FACTOR[op]
+        out[op] = out.get(op, 0.0) + b
+        counts[op] = counts.get(op, 0) + 1
+    return {"bytes_by_type": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+def _pick_microbatches(cfg: ModelConfig, shape: ShapeSpec, dp: int) -> int:
+    """Bound per-microbatch activation footprint: per-chip tokens x
+    d_model <= ~2^27 elements (256 MiB bf16 per live tensor; remat
+    bounds the per-layer set). Fewer microbatches = fewer per-microbatch
+    gradient psums (§Perf iteration A5)."""
+    per_chip = max(shape.global_batch // dp, 1)
+    elems = per_chip * shape.seq_len * cfg.d_model
+    mb = 1
+    while elems / mb > 2 ** 27 and mb < per_chip:
+        mb *= 2
+    return mb
+
+
+def _with_act_constraints(fn, sharder):
+    """Install the activation-sharding constrainer for the TRACE of fn
+    (with_sharding_constraint ops bake into the jaxpr)."""
+    import functools
+
+    from repro.runtime.act_sharding import make_constrainer, use_constrainer
+    c = make_constrainer(sharder)
+
+    @functools.wraps(fn)
+    def wrapped(*args):
+        with use_constrainer(c):
+            return fn(*args)
+
+    return wrapped
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, policy=None):
+    """Returns (fn, args, in_shardings, meta) for one cell."""
+    policy = policy or PrecisionPolicy.uniform("bf16")
+    sh = Sharder(cfg, mesh,
+                 mode="train" if shape.mode == "train" else "serve")
+    specs = input_specs(cfg, shape)
+    batch_shardings = sh.batch_specs(specs)
+    aparams = serve.abstract_params(cfg)
+    if shape.mode != "train":
+        # Serving weights are bf16 (standard practice): halves the
+        # weight-streaming bytes that bound decode and removes the
+        # per-use f32->bf16 cast round-trip (§Perf iteration C3).
+        aparams = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(
+                l.shape, jnp.bfloat16 if l.dtype == jnp.float32 else l.dtype),
+            aparams)
+    pspecs = sh.param_specs(aparams)
+    meta: dict = {}
+
+    if shape.mode == "train":
+        mb = _pick_microbatches(cfg, shape, sh.dp_size)
+        meta["microbatches"] = mb
+        opt_cfg = adamw.AdamWConfig()
+        aopt = jax.eval_shape(adamw.init, aparams)
+        ospecs = adamw.AdamWState(
+            step=sh.ns(jax.sharding.PartitionSpec()),
+            m=sh.param_specs(aopt.m), v=sh.param_specs(aopt.v))
+        fn = _with_act_constraints(
+            make_train_step(cfg, opt_cfg, policy, microbatches=mb,
+                            remat=True), sh)
+        return fn, (aparams, aopt, specs), (pspecs, ospecs, batch_shardings), meta
+
+    if shape.mode == "prefill":
+        fn = _with_act_constraints(
+            serve.make_prefill(cfg, policy, s_ctx=shape.seq_len), sh)
+        return fn, (aparams, specs), (pspecs, batch_shardings), meta
+
+    # decode: one token against a full-capacity cache
+    s_ctx = api.context_len(cfg, shape.seq_len)
+    acache = serve.abstract_cache(cfg, shape.global_batch, s_ctx)
+    cspecs = sh.cache_specs(acache)
+    fn = _with_act_constraints(serve.make_decode(cfg, policy), sh)
+    args = (aparams, acache, specs["tokens"], specs["pos"])
+    shardings = (pspecs, cspecs, batch_shardings["tokens"],
+                 batch_shardings["pos"])
+    return fn, args, shardings, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             policy: PrecisionPolicy | None = None,
+             save: bool = True, tag: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = LM_SHAPES[shape_name]
+    cell = f"{arch}__{shape_name}__{'pod2' if multi_pod else 'pod1'}{tag}"
+    if shape_name not in cfg.supported_shapes:
+        rec = {"cell": cell, "status": "skipped",
+               "reason": "pure full-attention arch: long_500k inapplicable "
+                         "(DESIGN.md §Arch-applicability)"}
+        _save(rec, cell, save)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        fn, args, shardings, meta = build_cell(cfg, shape, mesh, policy)
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=shardings)
+            lowered = jitted.lower(*args)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        # trip-count-aware per-chip costs (cost_analysis counts while
+        # bodies ONCE; analyze_hlo multiplies by known_trip_count)
+        tc = analyze_hlo(hlo)
+        rec = {
+            "cell": cell, "status": "ok", "arch": arch, "shape": shape_name,
+            "mesh": list(mesh.devices.shape), "meta": meta,
+            "compile_s": round(time.time() - t0, 1),
+            "memory": {
+                k: int(getattr(mem, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(mem, k)},
+            "cost": {k: float(v) for k, v in dict(cost).items()
+                     if isinstance(v, (int, float))},
+            "collectives": coll,
+            "tc_cost": tc.as_dict(),
+        }
+    except Exception as e:  # a failing cell is a bug; record it loudly
+        rec = {"cell": cell, "status": "error", "compile_s":
+               round(time.time() - t0, 1),
+               "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-4000:]}
+    _save(rec, cell, save)
+    return rec
+
+
+def _save(rec: dict, cell: str, save: bool) -> None:
+    if not save:
+        return
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    with open(os.path.join(ARTIFACTS, f"{cell}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(LM_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    args = ap.parse_args()
+
+    meshes = [False, True]
+    if args.multi_pod_only:
+        meshes = [True]
+    if args.single_pod_only:
+        meshes = [False]
+
+    cells = []
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(LM_SHAPES)
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                cells.append((arch, shape, mp))
+
+    n_ok = n_err = n_skip = 0
+    for arch, shape, mp in cells:
+        rec = run_cell(arch, shape, mp)
+        status = rec["status"]
+        n_ok += status == "ok"
+        n_err += status == "error"
+        n_skip += status == "skipped"
+        line = f"[{status:7s}] {rec['cell']} ({rec.get('compile_s', 0)}s)"
+        if status == "ok":
+            mem = rec["memory"]
+            per_dev = (mem.get("argument_size_in_bytes", 0)
+                       + mem.get("temp_size_in_bytes", 0)) / 2 ** 30
+            line += (f" flops={rec['tc_cost']['flops']:.3e}"
+                     f" arg+temp={per_dev:.2f}GiB"
+                     f" coll={rec['tc_cost']['collective_bytes']:.3e}B")
+        elif status == "error":
+            line += " " + rec["error"][:160]
+        print(line, flush=True)
+    print(f"\ndry-run: {n_ok} ok, {n_err} errors, {n_skip} skipped")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,181 @@
+"""End-to-end training driver: data -> sharded train step -> checkpoint
+-> restart, with straggler monitoring and elastic mesh selection.
+
+Fault-tolerance contract (the 1000+-node posture, exercised at CPU scale
+by examples/ and tests/):
+
+  * checkpoints are atomic + sharded (checkpoint/manager.py); the driver
+    resumes from the latest COMPLETE step on any restart — node failure
+    and planned restart are the same code path;
+  * the mesh is chosen from the SURVIVING device count
+    (runtime/elastic.py) so a restart on fewer hosts reshards the same
+    checkpoint onto the smaller mesh;
+  * the data pipeline is stateless-resumable: batch i is a pure function
+    of (seed, i), so only the step counter is checkpointed;
+  * per-step wall-time telemetry flags stragglers (runtime/monitor.py);
+  * optional residual-compensated gradient compression halves DP
+    all-reduce wire bytes (optim/compression.py; the paper's Eq. 1).
+
+Recommended XLA flags for real TPU runs (collective/compute overlap —
+XLA's latency-hiding scheduler; recorded here, harmless on CPU):
+  --xla_tpu_enable_data_parallel_all_reduce_opt=true
+  --xla_tpu_data_parallel_opt_different_sized_ops=true
+  --xla_enable_async_collective_permute=true
+
+Usage (CPU-scale example):
+  PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b \
+      --smoke --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/run1
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import ARCHS, get_config, get_smoke
+from repro.core.precision import PrecisionPolicy
+from repro.data.pipeline import DataConfig, SyntheticLMDataset
+from repro.models import api
+from repro.optim import adamw
+from repro.runtime.elastic import resharder_for
+from repro.runtime.monitor import StepMonitor
+from repro.runtime.train_step import make_train_step
+
+__all__ = ["TrainLoop", "main"]
+
+
+class TrainLoop:
+    """Restart-safe training loop over one (config, policy, mesh)."""
+
+    def __init__(self, cfg, *, policy: PrecisionPolicy,
+                 opt_cfg: adamw.AdamWConfig, data_cfg: DataConfig,
+                 ckpt_dir: str | None = None, microbatches: int = 1,
+                 remat: bool = True, ckpt_every: int = 25,
+                 use_mesh: bool = False):
+        self.cfg = cfg
+        self.policy = policy
+        self.opt_cfg = opt_cfg
+        self.data_cfg = data_cfg
+        self.ckpt_every = ckpt_every
+        self.mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+        self.monitor = StepMonitor()
+
+        self.mesh = self.sharder = None
+        step_fn = make_train_step(cfg, opt_cfg, policy,
+                                  microbatches=microbatches, remat=remat)
+        if use_mesh and jax.device_count() > 1:
+            self.mesh, self.sharder = resharder_for(cfg)
+            aparams = jax.eval_shape(
+                lambda: api.init_params(jax.random.PRNGKey(0), cfg))
+            pspecs = self.sharder.param_specs(aparams)
+            ospecs = adamw.AdamWState(
+                step=self.sharder.ns(jax.sharding.PartitionSpec()),
+                m=pspecs, v=pspecs)
+            self.step_fn = jax.jit(step_fn, in_shardings=(
+                pspecs, ospecs, None), donate_argnums=(0, 1))
+        else:
+            self.step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    # ------------------------------------------------------------ state
+
+    def init_or_restore(self, seed: int = 0):
+        params = api.init_params(jax.random.PRNGKey(seed), self.cfg)
+        opt = adamw.init(params)
+        start = 0
+        if self.mgr is not None:
+            self.mgr.clean_tmp()          # crash garbage from a prior run
+            latest = self.mgr.latest_step()
+            if latest is not None:
+                abstract = jax.eval_shape(lambda: (params, opt))
+                params, opt = self.mgr.restore(latest, abstract)
+                start = latest
+        return params, opt, start
+
+    # -------------------------------------------------------------- run
+
+    def run(self, steps: int, *, seed: int = 0, log_every: int = 10,
+            fail_at_step: int | None = None):
+        """Train to `steps`. `fail_at_step` injects a crash (tests)."""
+        params, opt, start = self.init_or_restore(seed)
+        ds = SyntheticLMDataset(self.data_cfg)
+        history = []
+        ctx = self.mesh if self.mesh is not None else _nullcontext()
+        with ctx:
+            for i in range(start, steps):
+                if fail_at_step is not None and i == fail_at_step:
+                    raise RuntimeError(f"injected failure at step {i}")
+                batch = {k: jnp.asarray(v) for k, v in ds.batch(i).items()}
+                self.monitor.start()
+                params, opt, metrics = self.step_fn(params, opt, batch)
+                stats = self.monitor.stop()
+                history.append(float(metrics["loss"]))
+                if stats.straggler:
+                    print(f"[straggler] step {i}: {stats.last_s:.3f}s "
+                          f"vs median {stats.median_s:.3f}s", flush=True)
+                if log_every and (i + 1) % log_every == 0:
+                    print(f"step {i+1:5d} loss={history[-1]:.4f} "
+                          f"gnorm={float(metrics['grad_norm']):.3f} "
+                          f"lr={float(metrics['lr']):.2e} "
+                          f"{stats.last_s*1e3:.0f}ms", flush=True)
+                if self.mgr and (i + 1) % self.ckpt_every == 0:
+                    self.mgr.save_async(i + 1, (params, opt))
+        if self.mgr:
+            self.mgr.wait()
+            self.mgr.save(steps, (params, opt))
+        return params, opt, history
+
+
+class _nullcontext:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, default="gemma3-1b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-scale)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--policy", default="bf16")
+    ap.add_argument("--logits-policy", default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--use-mesh", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    policy = PrecisionPolicy(default=args.policy,
+                             logits=args.logits_policy)
+    data_cfg = DataConfig(
+        global_batch=args.batch, seq_len=args.seq,
+        vocab_size=cfg.vocab_size,
+        frames_dim=cfg.d_model if cfg.family == "audio" else 0,
+        frames_seq=cfg.encoder_seq if cfg.family == "audio" else 0,
+        image_tokens=cfg.num_image_tokens if cfg.family == "vlm" else 0,
+        image_dim=cfg.d_model if cfg.family == "vlm" else 0)
+    loop = TrainLoop(
+        cfg, policy=policy,
+        opt_cfg=adamw.AdamWConfig(lr=args.lr, total_steps=args.steps),
+        data_cfg=data_cfg, ckpt_dir=args.ckpt_dir,
+        microbatches=args.microbatches, ckpt_every=args.ckpt_every,
+        use_mesh=args.use_mesh)
+    t0 = time.time()
+    _, _, hist = loop.run(args.steps)
+    print(f"\ntrained {len(hist)} steps in {time.time()-t0:.1f}s; "
+          f"loss {hist[0]:.3f} -> {hist[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

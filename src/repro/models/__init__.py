@@ -1,0 +1,1 @@
+"""Model substrate: unified transformer stack + per-family mixers."""

@@ -1,0 +1,243 @@
+"""GQA attention with RoPE, sliding windows, KV caches and flash-style
+chunked evaluation (pure JAX; memory-bounded for 32k prefill).
+
+Score and value contractions route through the precision policy
+(``policy`` argument = the per-family policy string), so the paper's
+refinement ladder applies to the attention GEMMs exactly as to the
+projections.
+
+Sliding-window ("local") layers keep a RING-BUFFER cache of `window`
+entries: slot ``t % window`` holds token ``t`` (RoPE applied at write
+time with absolute positions). This is what makes `long_500k` decode
+cheap for gemma3 (5:6 of layers) and mixtral (all layers): the cache
+never exceeds the window.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.refined_matmul import peinsum
+from repro.models import layers as L
+
+__all__ = ["init_attn", "attention", "AttnCache", "rope_table"]
+
+NEG_INF = -1e30
+
+
+class AttnCache(NamedTuple):
+    k: jax.Array  # (B, S_cache, Kv, hd)
+    v: jax.Array  # (B, S_cache, Kv, hd)
+
+
+# ------------------------------------------------------------------ rope
+
+def rope_table(positions: jax.Array, head_dim: int, theta: float,
+               dtype=jnp.float32) -> tuple[jax.Array, jax.Array]:
+    """sin/cos tables for GPT-NeoX-style rotate-half RoPE.
+
+    positions: (...,) int32 -> (..., head_dim/2) each.
+    """
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang).astype(dtype), jnp.cos(ang).astype(dtype)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: (B, S, H, hd); sin/cos: (S, hd/2) or (B, S, hd/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if sin.ndim == 2:  # (S, half) -> broadcast over batch and heads
+        sin_, cos_ = sin[None, :, None, :], cos[None, :, None, :]
+    else:              # (B, S, half)
+        sin_, cos_ = sin[:, :, None, :], cos[:, :, None, :]
+    return jnp.concatenate(
+        [x1 * cos_ - x2 * sin_, x2 * cos_ + x1 * sin_], axis=-1
+    ).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ init
+
+def init_attn(key, d_model: int, num_heads: int, num_kv_heads: int,
+              head_dim: int, *, bias: bool = False,
+              stack: tuple[int, ...] = ()) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": L.init_linear(kq, d_model, num_heads * head_dim, bias=bias, stack=stack),
+        "wk": L.init_linear(kk, d_model, num_kv_heads * head_dim, bias=bias, stack=stack),
+        "wv": L.init_linear(kv, d_model, num_kv_heads * head_dim, bias=bias, stack=stack),
+        "wo": L.init_linear(ko, num_heads * head_dim, d_model, bias=bias,
+                            scale=(num_heads * head_dim) ** -0.5, stack=stack),
+    }
+
+
+# ------------------------------------------------- grouped score helpers
+
+def _scores(q, k, policy, softcap):
+    """q: (B,Q,Kv,G,hd) x k: (B,S,Kv,hd) -> (B,Kv,G,Q,S) fp32."""
+    s = peinsum("bqkgd,bskd->bkgqs", q, k, policy)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    return s
+
+
+def _values(p, v, policy):
+    """p: (B,Kv,G,Q,S) x v: (B,S,Kv,hd) -> (B,Q,Kv,G,hd) fp32."""
+    return peinsum("bkgqs,bskd->bqkgd", p, v, policy)
+
+
+def _flash_over_kv(q, k, v, mask_fn, policy, softcap, kv_chunk: int):
+    """Online-softmax attention, scanning KV chunks (flash-style).
+
+    q: (B,Q,Kv,G,hd); k/v: (B,S,Kv,hd). mask_fn(q_idx, k_idx) -> bool
+    keep-mask broadcastable to (Q, chunk). Returns (B,Q,Kv,G,hd) fp32.
+    """
+    b, qlen, kvh, grp, hd = q.shape
+    s = k.shape[1]
+    if s % kv_chunk:  # pad keys to a chunk multiple; mask the tail
+        pad = kv_chunk - s % kv_chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        inner = mask_fn
+        mask_fn = lambda qi, ki: inner(qi, ki) & (ki < s)
+    n_chunks = k.shape[1] // kv_chunk
+    q_idx = jnp.arange(qlen)
+
+    def step(carry, chunk_i):
+        m, l, acc = carry
+        start = chunk_i * kv_chunk
+        kc = jax.lax.dynamic_slice_in_dim(k, start, kv_chunk, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, start, kv_chunk, axis=1)
+        sc = _scores(q, kc, policy, softcap)            # (B,Kv,G,Q,c)
+        keep = mask_fn(q_idx[:, None], start + jnp.arange(kv_chunk)[None, :])
+        sc = jnp.where(keep[None, None, None], sc, NEG_INF)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        scale = jnp.exp(m - m_new)
+        p = jnp.exp(sc - m_new[..., None])
+        l_new = l * scale + p.sum(axis=-1)
+        acc_new = acc * scale.transpose(0, 3, 1, 2)[..., None] + _values(
+            p.astype(q.dtype), vc, policy)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, grp, qlen), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, grp, qlen), jnp.float32)
+    acc0 = jnp.zeros((b, qlen, kvh, grp, hd), jnp.float32)
+    # Nested remat: without it the backward loads STACKED per-chunk f32
+    # score/prob tensors (B,Kv,G,Q,c) x n_chunks from HBM — the dominant
+    # memory term of every train/prefill cell at baseline. Recomputing
+    # them from (q, k-chunk) costs ~2x the score flops, which are >20x
+    # cheaper than the byte traffic they replace (§Perf iteration A2).
+    step = jax.checkpoint(step)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0), jnp.arange(n_chunks))
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    return out
+
+
+# ------------------------------------------------------------- attention
+
+def attention(
+    p: dict,
+    x: jax.Array,
+    *,
+    mode: str,                       # "train" | "prefill" | "decode"
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    policy: str,
+    rope_theta: float | None = 10_000.0,   # None -> no RoPE (whisper)
+    window: int | None = None,             # sliding window (local layers)
+    softcap: float | None = None,
+    causal: bool = True,                   # False for encoder self-attn
+    cache: AttnCache | None = None,
+    pos: jax.Array | None = None,          # decode: scalar int32 position
+    cross_kv: AttnCache | None = None,     # cross-attention: attend here
+    kv_chunk: int = 2048,  # §Perf A6: fewer online-softmax acc round trips
+) -> tuple[jax.Array, AttnCache | None]:
+    """Returns (output (B,S,D) in x.dtype, new/updated cache or None)."""
+    b, s, d = x.shape
+    grp = num_heads // num_kv_heads
+    dtype = x.dtype
+
+    q = L.linear(p["wq"], x, policy).reshape(b, s, num_kv_heads, grp, head_dim)
+    if cross_kv is None:
+        k = L.linear(p["wk"], x, policy).reshape(b, s, num_kv_heads, head_dim)
+        v = L.linear(p["wv"], x, policy).reshape(b, s, num_kv_heads, head_dim)
+    else:
+        k = v = None  # keys/values come from the encoder cache
+
+    scale = head_dim ** -0.5
+    q = (q * scale).astype(dtype)
+
+    new_cache: AttnCache | None = None
+
+    if cross_kv is not None:
+        # Cross-attention: no RoPE, no causal mask, static cache.
+        kc, vc = cross_kv.k.astype(dtype), cross_kv.v.astype(dtype)
+        out = _flash_over_kv(
+            q, kc, vc, lambda qi, ki: jnp.ones_like(ki, bool) & (qi >= -1),
+            policy, softcap, kv_chunk=min(kv_chunk, kc.shape[1]))
+    elif mode in ("train", "prefill", "encode"):
+        positions = jnp.arange(s)
+        if rope_theta is not None:
+            sin, cos = rope_table(positions, head_dim, rope_theta, dtype)
+            q = apply_rope(
+                q.reshape(b, s, num_heads, head_dim), sin, cos
+            ).reshape(b, s, num_kv_heads, grp, head_dim)
+            k = apply_rope(k.astype(dtype), sin, cos)
+        k, v = k.astype(dtype), v.astype(dtype)
+
+        if causal and window is not None:
+            mask_fn = lambda qi, ki: (ki <= qi) & (ki > qi - window)
+        elif causal:
+            mask_fn = lambda qi, ki: ki <= qi
+        else:
+            mask_fn = lambda qi, ki: (ki >= 0) & (qi >= -1)
+        out = _flash_over_kv(q, k, v, mask_fn, policy, softcap,
+                             kv_chunk=min(kv_chunk, s))
+
+        if mode == "prefill":
+            if window is not None and s > window:
+                # Ring buffer holding the last `window` tokens:
+                # slot j <- token (s-1) - ((s-1-j) mod window)
+                j = jnp.arange(window)
+                tok = (s - 1) - ((s - 1 - j) % window)
+                new_cache = AttnCache(k=k[:, tok], v=v[:, tok])
+            else:
+                new_cache = AttnCache(k=k, v=v)
+    elif mode == "decode":
+        assert cache is not None and pos is not None and s == 1
+        s_cache = cache.k.shape[1]
+        if rope_theta is not None:
+            sin, cos = rope_table(pos[None], head_dim, rope_theta, dtype)
+            q = apply_rope(
+                q.reshape(b, 1, num_heads, head_dim), sin, cos
+            ).reshape(b, 1, num_kv_heads, grp, head_dim)
+            k = apply_rope(k.astype(dtype), sin, cos)
+        k, v = k.astype(dtype), v.astype(dtype)
+
+        slot = pos % s_cache if window is not None else pos
+        ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k, slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v, slot, axis=1)
+        new_cache = AttnCache(k=ck, v=cv)
+
+        jdx = jnp.arange(s_cache)
+        if window is not None:
+            # Absolute position held in slot j after writing token `pos`.
+            abs_pos = pos - ((pos - jdx) % s_cache)
+            keep = abs_pos >= 0
+        else:
+            keep = jdx <= pos
+        sc = _scores(q, ck, policy, softcap)             # (B,Kv,G,1,S)
+        sc = jnp.where(keep[None, None, None, None], sc, NEG_INF)
+        pr = jax.nn.softmax(sc, axis=-1)
+        out = _values(pr.astype(dtype), cv, policy)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+
+    out = out.astype(dtype).reshape(b, s, num_heads * head_dim)
+    return L.linear(p["wo"], out, policy).astype(dtype), new_cache

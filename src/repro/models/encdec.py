@@ -1,0 +1,67 @@
+"""Whisper-style encoder-decoder wrapper over the unified stack.
+
+The conv audio frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings (B, encoder_seq, d_model) — the
+transformer backbone (24 enc + 24 dec layers for whisper-medium) is the
+real workload. Encoder self-attention is bidirectional; the decoder
+carries self-attention KV caches plus per-layer cross-attention K/V
+computed once from the encoder output at prefill.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.precision import PrecisionPolicy
+from repro.models import layers as L
+from repro.models import transformer as T
+
+__all__ = ["init_params", "encode", "forward", "init_cache"]
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    k_dec, k_enc, k_pe = jax.random.split(key, 3)
+    params = T.init_params(k_dec, cfg)
+    for i, seg in enumerate(cfg.encoder_segments):
+        params[f"enc_seg{i}"] = T.init_segment(
+            jax.random.fold_in(k_enc, i), seg, cfg)
+    params["enc_final_norm"] = L.init_rmsnorm(cfg.d_model)
+    params["enc_pos_embed"] = {"table": 0.02 * jax.random.normal(
+        k_pe, (cfg.encoder_seq, cfg.d_model)).astype(jnp.float32)}
+    return params
+
+
+def encode(params: dict, frames: jax.Array, cfg: ModelConfig, *,
+           policy: PrecisionPolicy, remat: bool = False) -> jax.Array:
+    """frames: (B, encoder_seq, D) stubbed embeddings -> hidden states."""
+    enc_x, _, _ = T.forward(
+        params, None, cfg, policy=policy, mode="encode",
+        extra_embeds=frames, segments=cfg.encoder_segments,
+        seg_prefix="enc_seg", pos_embed_key="enc_pos_embed",
+        final_norm_key="enc_final_norm", remat=remat)
+    return enc_x
+
+
+def forward(params: dict, tokens: jax.Array, frames: jax.Array | None,
+            cfg: ModelConfig, *, policy: PrecisionPolicy,
+            mode: str = "train", cache: dict | None = None,
+            pos: jax.Array | None = None, remat: bool = False):
+    """Full enc-dec step.
+
+    train/prefill: frames given, encoder runs. decode: cache carries the
+    cross-attention K/V, frames unused.
+    """
+    enc_x = None
+    if mode in ("train", "prefill"):
+        assert frames is not None
+        enc_x = encode(params, frames, cfg, policy=policy, remat=remat)
+    return T.forward(
+        params, tokens, cfg, policy=policy, mode=mode, cache=cache,
+        pos=pos, enc_x=enc_x, remat=remat)
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_ctx: int,
+               dtype=jnp.bfloat16) -> dict:
+    return T.init_cache(cfg, batch, s_ctx, dtype)

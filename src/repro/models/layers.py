@@ -1,0 +1,122 @@
+"""Common neural building blocks (pure-JAX, dict-param style).
+
+All matmuls route through ``repro.core.refined_matmul.peinsum`` so the
+paper's precision policy applies uniformly across every architecture.
+Params are plain nested dicts of jnp arrays; every ``init_*`` accepts a
+``stack`` prefix so per-layer params can be created pre-stacked for
+``lax.scan`` execution over layer stacks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import PrecisionPolicy
+from repro.core.refined_matmul import peinsum
+
+__all__ = [
+    "init_linear", "linear",
+    "init_rmsnorm", "rmsnorm",
+    "init_embedding", "embed", "unembed",
+    "init_mlp", "mlp",
+]
+
+Params = dict
+
+
+def _normal(key, shape, scale, dtype=jnp.float32):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+# ---------------------------------------------------------------- linear
+
+def init_linear(key, d_in: int, d_out: int, *, bias: bool = False,
+                stack: tuple[int, ...] = (), scale: float | None = None,
+                dtype=jnp.float32) -> Params:
+    scale = (d_in ** -0.5) if scale is None else scale
+    p = {"w": _normal(key, (*stack, d_in, d_out), scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((*stack, d_out), dtype)
+    return p
+
+
+def linear(p: Params, x: jax.Array, policy: str) -> jax.Array:
+    """x: (..., d_in) @ w: (d_in, d_out) under a precision policy."""
+    y = peinsum("...i,io->...o", x, p["w"], policy)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# --------------------------------------------------------------- rmsnorm
+
+def init_rmsnorm(d: int, *, stack: tuple[int, ...] = ()) -> Params:
+    return {"scale": jnp.ones((*stack, d), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """fp32 statistics regardless of activation dtype (stability)."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(dtype)
+
+
+# ------------------------------------------------------------- embedding
+
+def init_embedding(key, vocab: int, d: int) -> Params:
+    # d^-1/2 keeps unembed logits ~N(0,1) at init (post-rmsnorm
+    # activations have unit RMS), so the initial loss sits near ln(V).
+    return {"table": _normal(key, (vocab, d), d ** -0.5)}
+
+
+def embed(p: Params, tokens: jax.Array, dtype) -> jax.Array:
+    return p["table"].astype(dtype)[tokens]
+
+
+def unembed(p: Params, x: jax.Array, policy: str) -> jax.Array:
+    """Logits projection — the paper's large-N error-growth regime
+    (vocab up to 262k here); `policy.logits` applies. The sharding
+    constraint pins the logits (and, via transposition, their
+    cotangent) to (B: dp, S: -, V: tp) — see runtime/act_sharding.py."""
+    from repro.runtime.act_sharding import constrain
+    return constrain(peinsum("...d,vd->...v", x, p["table"], policy),
+                     "logits")
+
+
+# ------------------------------------------------------------------ mlp
+
+def init_mlp(key, d: int, d_ff: int, kind: str, *, bias: bool = False,
+             stack: tuple[int, ...] = ()) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Params = {"kind": None}  # kind is static; stored in config not params
+    del p
+    if kind == "swiglu":
+        return {
+            "wi": init_linear(k1, d, d_ff, bias=bias, stack=stack),
+            "wg": init_linear(k2, d, d_ff, bias=bias, stack=stack),
+            "wo": init_linear(k3, d_ff, d, bias=bias, stack=stack),
+        }
+    if kind in ("squared_relu", "gelu"):
+        return {
+            "wi": init_linear(k1, d, d_ff, bias=bias, stack=stack),
+            "wo": init_linear(k3, d_ff, d, bias=bias, stack=stack),
+        }
+    raise ValueError(f"unknown mlp kind {kind!r}")
+
+
+def mlp(p: Params, x: jax.Array, kind: str, policy: str) -> jax.Array:
+    dtype = x.dtype
+    h = linear(p["wi"], x, policy)
+    if kind == "swiglu":
+        g = linear(p["wg"], x, policy)
+        h = jax.nn.silu(g) * h
+    elif kind == "squared_relu":          # nemotron-4
+        h = jnp.square(jax.nn.relu(h))
+    elif kind == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(f"unknown mlp kind {kind!r}")
+    return linear(p["wo"], h.astype(dtype), policy).astype(dtype)

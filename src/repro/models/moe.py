@@ -1,0 +1,120 @@
+"""Mixture-of-Experts FFN (top-k router, capacity-bounded dispatch).
+
+Expert compute is a batch of medium-size GEMMs — structurally the
+paper's Fig.-7 batched-GEMM workload — and routes through the `moe`
+precision policy. Dispatch is gather/scatter with static shapes (no
+(T, E, C) one-hot blow-up): position-in-expert via a (T*k, E) cumsum,
+tokens over capacity are dropped (standard Switch semantics), and the
+combine is a scatter-add weighted by router probabilities.
+
+Sharding: the expert dim maps to the `model` mesh axis when divisible
+(dbrx: 16 experts on 16-way model axis = true EP); otherwise experts
+stay replicated and the FFN hidden dim takes the TP sharding (mixtral:
+8 experts on a 16-way axis). See runtime/sharding.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.refined_matmul import peinsum
+from repro.models import layers as L
+
+__all__ = ["init_moe", "moe_ffn"]
+
+
+def init_moe(key, d: int, d_ff: int, num_experts: int, mlp_kind: str,
+             *, stack: tuple[int, ...] = ()) -> dict:
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    estack = (*stack, num_experts)
+    p = {
+        "router": L.init_linear(kr, d, num_experts, stack=stack),
+        "wi": L.init_linear(k1, d, d_ff, stack=estack),
+        "wo": L.init_linear(k3, d_ff, d, stack=estack,
+                            scale=d_ff ** -0.5),
+    }
+    if mlp_kind == "swiglu":
+        p["wg"] = L.init_linear(k2, d, d_ff, stack=estack)
+    return p
+
+
+def moe_ffn(p: dict, x: jax.Array, *, num_experts: int, top_k: int,
+            capacity_factor: float, mlp_kind: str, policy: str,
+            router_policy: str = "f32", dropless: bool = False,
+            ) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar).
+
+    Router runs in fp32 regardless of the matmul policy (standard
+    practice: routing decisions are precision-sensitive, cheap, and on
+    the VPU anyway — the paper's 'use CUDA cores for what Tensor Cores
+    are bad at' point).
+
+    ``dropless=True`` sets capacity to the worst case (t * top_k) so no
+    token is ever dropped — used on the DECODE path, where capacity-
+    based dropping would make generation depend on batch composition
+    (and t is small, so the static worst-case dispatch stays cheap).
+    Train/prefill keep capacity-factor dispatch (Switch semantics).
+    """
+    b, s, d = x.shape
+    t = b * s
+    dtype = x.dtype
+    xf = x.reshape(t, d)
+
+    logits = peinsum("td,de->te", xf, p["router"]["w"], router_policy)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)  # (T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)          # (T, k)
+
+    # Load-balancing auxiliary loss (Switch/Mixtral form).
+    density = jnp.mean(
+        jax.nn.one_hot(expert_idx[:, 0], num_experts, dtype=jnp.float32), 0)
+    density_proxy = jnp.mean(probs, axis=0)
+    aux_loss = num_experts * jnp.sum(density * density_proxy)
+
+    if dropless:
+        capacity = t * top_k            # worst case: every slot one expert
+    else:
+        capacity = int(capacity_factor * top_k * t / num_experts)
+        capacity = max(capacity, top_k)
+
+    # Position of each (token, slot) assignment within its expert queue.
+    flat_expert = expert_idx.reshape(-1)                          # (T*k,)
+    onehot = jax.nn.one_hot(flat_expert, num_experts, dtype=jnp.int32)
+    pos_in_expert = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1
+    keep = pos_in_expert < capacity
+
+    # dispatch_idx[e, c] = flat token id filling slot c of expert e
+    # (capacity overflow rows scatter to a dropped dummy row).
+    tok_ids = jnp.arange(t * top_k) // top_k
+    e_safe = jnp.where(keep, flat_expert, num_experts)            # drop row
+    c_safe = jnp.where(keep, pos_in_expert, 0)
+    dispatch = jnp.zeros((num_experts + 1, capacity), jnp.int32)
+    dispatch = dispatch.at[e_safe, c_safe].set(tok_ids.astype(jnp.int32),
+                                               mode="drop")
+    filled = jnp.zeros((num_experts + 1, capacity), bool)
+    filled = filled.at[e_safe, c_safe].set(keep, mode="drop")
+    dispatch, filled = dispatch[:num_experts], filled[:num_experts]
+
+    xe = xf[dispatch] * filled[..., None].astype(dtype)           # (E, C, D)
+
+    # Expert FFN — batched GEMMs under the moe policy.
+    h = peinsum("ecd,edf->ecf", xe, p["wi"]["w"], policy)
+    if mlp_kind == "swiglu":
+        g = peinsum("ecd,edf->ecf", xe, p["wg"]["w"], policy)
+        h = jax.nn.silu(g) * h
+    elif mlp_kind == "squared_relu":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    ye = peinsum("ecf,efd->ecd", h.astype(dtype), p["wo"]["w"], policy)
+
+    # Combine: scatter-add each expert slot back, weighted by its gate.
+    gates_flat = gate_vals.reshape(-1)                            # (T*k,)
+    slot_gate = jnp.zeros((num_experts + 1, capacity), jnp.float32)
+    slot_gate = slot_gate.at[e_safe, c_safe].set(
+        jnp.where(keep, gates_flat, 0.0), mode="drop")
+    slot_gate = slot_gate[:num_experts]
+
+    out = jnp.zeros((t, d), jnp.float32)
+    out = out.at[dispatch].add(ye * slot_gate[..., None], mode="drop")
+    return out.astype(dtype).reshape(b, s, d), aux_loss

@@ -1,0 +1,231 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free LM layer with
+token-shift, data-dependent per-channel decay, and the WKV linear-
+attention recurrence.
+
+Training uses a CHUNKED parallel form (the SSD-style adaptation that
+makes linear attention MXU-friendly): within a chunk the pairwise decay
+products are materialized as an (C, C, K) tensor (C = 32 keeps it in
+VMEM-scale), across chunks a (K, V) state is carried by `lax.scan`. All
+relative decays are exp(la_t - la_s) with s <= t, so every exponent is
+<= 0 — numerically safe without log-space gymnastics.
+
+Decode carries (shift_tm, shift_cm, state) and is O(1) per token —
+this is why rwkv6 runs the `long_500k` cell that full-attention archs
+skip.
+
+The WKV recurrence itself is elementwise/outer-product work (VPU, not
+MXU) — the paper's GEMM precision policy is a no-op there (noted in
+DESIGN.md §Arch-applicability); the r/k/v/g/o projections and channel
+mix DO route through the policy.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+__all__ = ["init_rwkv6", "rwkv6_layer", "RWKVState", "init_rwkv_state"]
+
+_LORA_DIM = 32
+
+
+class RWKVState(NamedTuple):
+    shift_tm: jax.Array   # (B, D) last token seen by time-mix
+    shift_cm: jax.Array   # (B, D) last token seen by channel-mix
+    wkv: jax.Array        # (B, H, K, V) linear-attention state
+
+
+def init_rwkv_state(batch: int, d_model: int, head_dim: int,
+                    dtype=jnp.float32) -> RWKVState:
+    h = d_model // head_dim
+    return RWKVState(
+        shift_tm=jnp.zeros((batch, d_model), dtype),
+        shift_cm=jnp.zeros((batch, d_model), dtype),
+        wkv=jnp.zeros((batch, h, head_dim, head_dim), jnp.float32),
+    )
+
+
+def init_rwkv6(key, d: int, d_ff: int, head_dim: int,
+               *, stack: tuple[int, ...] = ()) -> dict:
+    ks = jax.random.split(key, 12)
+    h = d // head_dim
+    del h
+    lora = lambda k: {
+        "a": L.init_linear(k, d, _LORA_DIM, stack=stack),
+        "b": L.init_linear(k, _LORA_DIM, d, stack=stack, scale=0.01),
+    }
+    return {
+        "norm_tm": L.init_rmsnorm(d, stack=stack),
+        "norm_cm": L.init_rmsnorm(d, stack=stack),
+        # DDLerp token-shift mixes (mu) + low-rank data-dependent parts
+        "mu_x": jnp.zeros((*stack, d), jnp.float32),
+        "mu": jnp.zeros((*stack, 5, d), jnp.float32),   # w,k,v,r,g
+        "lora_w": lora(ks[0]), "lora_k": lora(ks[1]), "lora_v": lora(ks[2]),
+        "lora_r": lora(ks[3]), "lora_g": lora(ks[4]),
+        "w0": jnp.full((*stack, d), -0.7, jnp.float32),  # decay bias
+        "u": (0.1 * jax.random.normal(ks[5], (*stack, d))).astype(jnp.float32),
+        "wr": L.init_linear(ks[6], d, d, stack=stack),
+        "wk": L.init_linear(ks[7], d, d, stack=stack),
+        "wv": L.init_linear(ks[8], d, d, stack=stack),
+        "wg": L.init_linear(ks[9], d, d, stack=stack),
+        "wo": L.init_linear(ks[10], d, d, stack=stack),
+        "ffn_r": L.init_linear(ks[11], d, d, stack=stack),
+        "ffn_k": L.init_linear(jax.random.fold_in(key, 20), d, d_ff, stack=stack),
+        "ffn_v": L.init_linear(jax.random.fold_in(key, 21), d_ff, d, stack=stack),
+    }
+
+
+def _ddlerp(p: dict, x: jax.Array, dx: jax.Array, policy: str):
+    """Data-dependent token-shift interpolation -> (x_w, x_k, x_v, x_r, x_g)."""
+    xxx = x + dx * p["mu_x"].astype(x.dtype)
+    outs = []
+    for i, name in enumerate(("w", "k", "v", "r", "g")):
+        lo = p[f"lora_{name}"]
+        dd = L.linear(lo["b"], jnp.tanh(L.linear(lo["a"], xxx, policy)), policy)
+        mix = p["mu"][..., i, :].astype(x.dtype) + dd.astype(x.dtype)
+        outs.append(x + dx * mix)
+    return outs
+
+
+def _wkv_chunked(r, k, v, logw, u, chunk: int, narrow: bool = True):
+    """Chunked WKV: r/k/v (B,S,H,K), logw (B,S,H,K) (<=0), u (H,K).
+
+    Returns (out (B,S,H,K), final_state (B,H,K,V)). fp32 state/output.
+
+    Memory structure (EXPERIMENTS.md §Perf iteration B1): the only 5-D
+    (B,H,C,C,K) tensor materialized per chunk step is ``r_ed`` — the
+    decay tensor with r pre-folded in (exp+mul fuse into one write).
+    The causal mask is applied to the 2-D-per-(t,s) ``scores`` AFTER the
+    K contraction (it is K-independent), not to the 5-D tensor. With
+    ``narrow=True`` the MXU contraction operands are cast to bf16
+    (fp32 accumulate) — the paper's mixed-precision GEMM applied to the
+    WKV recurrence; the policy's 'f32' point keeps full precision.
+    """
+    b, s0, h, kd = r.shape
+    if s0 % chunk:
+        # Pad with identity steps: decay 1 (logw=0), k=v=0 -> outputs at
+        # padded positions are discarded; the carried state is unchanged.
+        pad = chunk - s0 % chunk
+        zpad = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, logw = zpad(r), zpad(k), zpad(v), zpad(logw)
+    b, s, h, kd = r.shape
+    n = s // chunk
+    rc = r.reshape(b, n, chunk, h, kd).transpose(1, 0, 3, 2, 4)  # (n,B,H,C,K)
+    kc = k.reshape(b, n, chunk, h, kd).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, n, chunk, h, kd).transpose(1, 0, 3, 2, 4)
+    wc = logw.reshape(b, n, chunk, h, kd).transpose(1, 0, 3, 2, 4)
+
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # strict lower
+    cdtype = jnp.bfloat16 if narrow else jnp.float32
+
+    def step(state, inp):
+        rr, kk, vv, lw = inp                     # (B,H,C,K) each
+        la = jnp.cumsum(lw, axis=2)              # inclusive cum log decay
+        lae = la - lw                            # exclusive: decay to t-1
+        # inter-chunk: r_t reads S_{t-1} = S_0 decayed by w_1..w_{t-1}
+        r_dec = rr * jnp.exp(lae)                # exponent <= 0
+        inter = jnp.einsum("bhck,bhkv->bhcv", r_dec.astype(cdtype),
+                           state.astype(cdtype),
+                           preferred_element_type=jnp.float32)
+        # intra-chunk (strict causal): k_s decayed by w_{s+1}..w_{t-1};
+        # r folded into the decay tensor at construction (single 5-D
+        # materialization, exp+mul+cast in one fused write).
+        r_ed = (rr[:, :, :, None, :] * jnp.exp(jnp.clip(
+            lae[:, :, :, None, :] - la[:, :, None, :, :], None, 0.0))
+        ).astype(cdtype)
+        scores = jnp.einsum("bhtsk,bhsk->bhts", r_ed, kk.astype(cdtype),
+                            preferred_element_type=jnp.float32)
+        scores = jnp.where(mask[None, None], scores, 0.0)  # 2-D mask
+        intra = jnp.einsum("bhts,bhsv->bhtv", scores.astype(cdtype),
+                           vv.astype(cdtype),
+                           preferred_element_type=jnp.float32)
+        # current-token bonus u
+        bonus = jnp.einsum("bhck,bhck->bhc", rr * u[None, :, None, :], kk)
+        cur = bonus[..., None] * vv
+        out = inter + intra + cur
+        # state update: decay to chunk end, add decayed outer products
+        dec_end = jnp.exp(la[:, :, -1:, :] - la)  # exponent <= 0
+        state = state * jnp.exp(la[:, :, -1, :])[..., None] + jnp.einsum(
+            "bhck,bhcv->bhkv", (kk * dec_end).astype(cdtype),
+            vv.astype(cdtype), preferred_element_type=jnp.float32)
+        return state, out
+
+    step = jax.checkpoint(step)  # bwd recomputes r_ed instead of loading
+    state0 = jnp.zeros((b, h, kd, kd), jnp.float32)
+    state, outs = jax.lax.scan(step, state0, (rc, kc, vc, wc))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, s, h, kd)
+    return out[:, :s0], state
+
+
+def rwkv6_layer(p: dict, x: jax.Array, *, head_dim: int, policy: str,
+                state: RWKVState | None = None, norm_eps: float = 1e-5,
+                chunk: int = 32, return_state: bool = False,
+                ) -> tuple[jax.Array, RWKVState | None]:
+    """Full RWKV-6 layer (time-mix + channel-mix), pre-norm residual.
+
+    Train: state=None, x (B,S,D). Decode: state given, x (B,1,D).
+    Prefill: state=None + return_state=True -> final state emitted.
+    """
+    b, s, d = x.shape
+    h = d // head_dim
+    dtype = x.dtype
+    decode = state is not None
+
+    # ---------------- time mix ----------------
+    xn = L.rmsnorm(p["norm_tm"], x, norm_eps)
+    if decode:
+        prev = state.shift_tm.astype(dtype)[:, None, :]
+    else:
+        prev = jnp.pad(xn, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    dx = prev - xn
+    x_w, x_k, x_v, x_r, x_g = _ddlerp(p, xn, dx, policy)
+
+    r = L.linear(p["wr"], x_r, policy).reshape(b, s, h, head_dim)
+    k = L.linear(p["wk"], x_k, policy).reshape(b, s, h, head_dim)
+    v = L.linear(p["wv"], x_v, policy).reshape(b, s, h, head_dim)
+    g = jax.nn.silu(L.linear(p["wg"], x_g, policy))
+    lw = p["w0"].astype(jnp.float32) + L.linear(p["lora_w"]["b"], jnp.tanh(
+        L.linear(p["lora_w"]["a"], x_w, policy)), policy)
+    logw = -jnp.exp(lw.reshape(b, s, h, head_dim))   # log decay, < 0
+    u = p["u"].reshape(h, head_dim).astype(jnp.float32)
+
+    r32, k32, v32 = (t.astype(jnp.float32) for t in (r, k, v))
+    if decode:
+        st = state.wkv                                  # (B,H,K,V)
+        rr, kk, vv = r32[:, 0], k32[:, 0], v32[:, 0]    # (B,H,K)
+        bonus = jnp.einsum("bhk,bhk->bh", rr * u[None], kk)
+        out = jnp.einsum("bhk,bhkv->bhv", rr, st) + bonus[..., None] * vv
+        new_wkv = st * jnp.exp(logw[:, 0])[..., None] + (
+            kk[..., None] * vv[:, :, None, :])
+        out = out[:, None]                              # (B,1,H,V)
+    else:
+        ch = min(chunk, s)
+        out, new_wkv = _wkv_chunked(r32, k32, v32, logw, u, ch,
+                                    narrow=(policy != "f32"))
+
+    out = out.reshape(b, s, d).astype(dtype) * g.astype(dtype)
+    x = x + L.linear(p["wo"], out, policy).astype(dtype)
+
+    # ---------------- channel mix ----------------
+    xn2 = L.rmsnorm(p["norm_cm"], x, norm_eps)
+    if decode:
+        prev2 = state.shift_cm.astype(dtype)[:, None, :]
+    else:
+        prev2 = jnp.pad(xn2, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    dx2 = prev2 - xn2
+    x_kc = xn2 + dx2 * 0.5
+    x_rc = xn2 + dx2 * 0.5
+    kk2 = jnp.square(jax.nn.relu(L.linear(p["ffn_k"], x_kc, policy)))
+    rr2 = jax.nn.sigmoid(L.linear(p["ffn_r"], x_rc, policy))
+    x = x + (rr2 * L.linear(p["ffn_v"], kk2.astype(dtype), policy)).astype(dtype)
+
+    new_state = None
+    if decode or return_state:
+        new_state = RWKVState(shift_tm=xn[:, -1].astype(jnp.float32),
+                              shift_cm=xn2[:, -1].astype(jnp.float32),
+                              wkv=new_wkv)
+    return x, new_state

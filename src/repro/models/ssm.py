@@ -1,0 +1,203 @@
+"""Mamba-2 (SSD) mixer — the state-space half of the zamba2 hybrid.
+
+Chunked "state-space duality" evaluation: within a chunk the token-pair
+interactions are an ordinary masked GEMM (MXU work, routed through the
+precision policy); across chunks an (H, P, N) state is carried by scan.
+Per-head decay is SCALAR (Mamba-2's key simplification vs Mamba-1), so
+pairwise decays are rank-1 within the chunk and everything stays
+matmul-shaped. All relative decays exp(ll_t - ll_s) with s <= t have
+non-positive exponents — numerically safe.
+
+Decode carries (conv_state, ssd_state) and is O(1) per token -> zamba2
+runs the `long_500k` cell.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.refined_matmul import peinsum
+from repro.models import layers as L
+
+__all__ = ["init_mamba2", "mamba2_layer", "MambaState", "init_mamba_state"]
+
+_NGROUPS = 1  # B/C projection groups (GQA-for-SSM); 1 per zamba2-7b scale
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array  # (B, conv_width-1, conv_dim) rolling conv inputs
+    ssd: jax.Array   # (B, H, P, N) state
+
+
+def _dims(d_model: int, head_dim: int, state: int):
+    d_inner = 2 * d_model
+    nheads = d_inner // head_dim
+    conv_dim = d_inner + 2 * _NGROUPS * state
+    return d_inner, nheads, conv_dim
+
+
+def init_mamba_state(batch: int, d_model: int, head_dim: int, state: int,
+                     conv_width: int, dtype=jnp.float32) -> MambaState:
+    d_inner, nheads, conv_dim = _dims(d_model, head_dim, state)
+    return MambaState(
+        conv=jnp.zeros((batch, conv_width - 1, conv_dim), dtype),
+        ssd=jnp.zeros((batch, nheads, head_dim, state), jnp.float32),
+    )
+
+
+def init_mamba2(key, d_model: int, head_dim: int, state: int,
+                conv_width: int, *, stack: tuple[int, ...] = ()) -> dict:
+    d_inner, nheads, conv_dim = _dims(d_model, head_dim, state)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "in_proj": L.init_linear(
+            k1, d_model, d_inner + conv_dim + nheads, stack=stack),
+        "conv_w": (0.1 * jax.random.normal(
+            k2, (*stack, conv_width, conv_dim))).astype(jnp.float32),
+        "conv_b": jnp.zeros((*stack, conv_dim), jnp.float32),
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.linspace(1.0, 8.0, nheads), (*stack, nheads)).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((*stack, nheads), jnp.float32),
+        "d_skip": jnp.ones((*stack, nheads), jnp.float32),
+        "norm_in": L.init_rmsnorm(d_model, stack=stack),
+        "norm": L.init_rmsnorm(d_inner, stack=stack),
+        "out_proj": L.init_linear(k3, d_inner, d_model, stack=stack,
+                                  scale=d_inner ** -0.5),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: jax.Array | None) -> jax.Array:
+    """Depthwise causal conv: xbc (B,S,C), w (W,C), b (C) -> (B,S,C)."""
+    width = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+    xp = jnp.concatenate([prev.astype(xbc.dtype), xbc], axis=1)
+    s = xbc.shape[1]
+    out = sum(xp[:, i:i + s] * w[i].astype(xbc.dtype) for i in range(width))
+    return jax.nn.silu(out + b.astype(xbc.dtype))
+
+
+def _ssd_chunked(x, bmat, cmat, rel, dt, chunk: int, policy: str):
+    """Chunked SSD scan.
+
+    x (B,S,H,P) fp32, bmat/cmat (B,S,N) fp32, rel (B,S,H) per-step log
+    decay (<0), dt (B,S,H). Returns (y (B,S,H,P), state (B,H,P,N)).
+    """
+    b, s0, h, p = x.shape
+    if s0 % chunk:
+        # Identity-step padding: rel=0 (decay 1), dt=0, x=B=C=0 -> padded
+        # outputs discarded, carried state unchanged.
+        pad = chunk - s0 % chunk
+        p4 = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        x, bmat, cmat, rel, dt = (p4(t) for t in (x, bmat, cmat, rel, dt))
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    nc = s // chunk
+    rs = lambda t: t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+    xc, bc, cc, relc, dtc = rs(x), rs(bmat), rs(cmat), rs(rel), rs(dt)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))  # inclusive s <= t
+
+    def step(state, inp):
+        xx, bb, ccm, rr, dd = inp          # per-chunk slices
+        ll = jnp.cumsum(rr, axis=1)        # (B,C,H) inclusive log decay
+        # inter-chunk: y_t += C_t . (exp(ll_t) * state_in)
+        y_inter = jnp.einsum("bcn,bhpn,bch->bchp", ccm, state, jnp.exp(ll))
+        # intra-chunk: scores[t,s] = (C_t.B_s) exp(ll_t-ll_s) dt_s, s<=t
+        cb = peinsum("btn,bsn->bts", ccm, bb, policy)
+        dec_ts = jnp.exp(jnp.clip(
+            ll[:, :, None, :] - ll[:, None, :, :], None, 0.0))  # (B,t,s,H)
+        scores = cb[:, :, :, None] * dec_ts * dd[:, None, :, :]
+        scores = jnp.where(mask[None, :, :, None], scores, 0.0)
+        y_intra = jnp.einsum("btsh,bshp->bthp", scores, xx)
+        # state update: decay to chunk end + decayed outer products
+        dec_end = jnp.exp(ll[:, -1:, :] - ll)                   # (B,C,H)
+        state = state * jnp.exp(ll[:, -1])[:, :, None, None]
+        state = state + jnp.einsum("bch,bchp,bcn->bhpn",
+                                   dd * dec_end, xx, bb)
+        return state, y_inter + y_intra
+
+    state0 = jnp.zeros((b, h, p, n), jnp.float32)
+    # Nested remat: recompute dec_ts/scores in backward rather than
+    # loading the stacked (B,C,C,H) decay tensors (§Perf iteration A2).
+    state, ys = jax.lax.scan(jax.checkpoint(step), state0,
+                             (xc, bc, cc, relc, dtc))
+    return ys.swapaxes(0, 1).reshape(b, s, h, p)[:, :s0], state
+
+
+def mamba2_layer(p: dict, x: jax.Array, *, head_dim: int, ssm_state: int,
+                 conv_width: int, policy: str, chunk: int = 128,
+                 state: MambaState | None = None, norm_eps: float = 1e-5,
+                 return_state: bool = False,
+                 ) -> tuple[jax.Array, MambaState | None]:
+    """Pre-norm residual Mamba-2 mixer layer.
+
+    Train: state=None. Decode: state given, x (B,1,D).
+    Prefill: state=None + return_state=True.
+    """
+    b, s, d = x.shape
+    d_inner, nheads, conv_dim = _dims(d, head_dim, ssm_state)
+    n = ssm_state
+    dtype = x.dtype
+    decode = state is not None
+
+    resid = x
+    xn = L.rmsnorm(p["norm_in"], x, norm_eps)
+
+    zxbcdt = L.linear(p["in_proj"], xn, policy)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + conv_dim]
+    dt_raw = zxbcdt[..., d_inner + conv_dim:]
+
+    prev_conv = state.conv if decode else None
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"], prev_conv)
+    new_conv = None
+    if decode or return_state:
+        # last (width-1) conv inputs (pre-activation inputs = xbc before
+        # conv; we track the raw projected stream)
+        raw = zxbcdt[..., d_inner:d_inner + conv_dim]
+        if decode:
+            joined = jnp.concatenate(
+                [state.conv.astype(raw.dtype), raw], axis=1)
+        else:
+            joined = raw
+        pad = conv_width - 1 - joined.shape[1]
+        if pad > 0:
+            joined = jnp.pad(joined, ((0, 0), (pad, 0), (0, 0)))
+        new_conv = joined[:, -(conv_width - 1):].astype(jnp.float32)
+
+    xs = xbc[..., :d_inner].reshape(b, s, nheads, head_dim)
+    bmat = xbc[..., d_inner:d_inner + n]
+    cmat = xbc[..., d_inner + n:]
+
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    rel = -dt * jnp.exp(p["a_log"].astype(jnp.float32))       # (B,S,H) < 0
+
+    x32 = xs.astype(jnp.float32)
+    b32 = bmat.astype(jnp.float32)
+    c32 = cmat.astype(jnp.float32)
+
+    if decode:
+        st = state.ssd                                        # (B,H,P,N)
+        a_t = jnp.exp(rel[:, 0])                              # (B,H)
+        st = st * a_t[:, :, None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dt[:, 0], x32[:, 0], b32[:, 0])
+        y = jnp.einsum("bn,bhpn->bhp", c32[:, 0], st)[:, None]  # (B,1,H,P)
+        new_ssd = st
+    else:
+        ch = min(chunk, s)
+        y, new_ssd = _ssd_chunked(x32, b32, c32, rel, dt, ch, policy)
+
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * x32
+    y = y.reshape(b, s, d_inner).astype(dtype)
+    y = L.rmsnorm(p["norm"], y, norm_eps) * jax.nn.silu(z).astype(dtype)
+    out = resid + L.linear(p["out_proj"], y, policy).astype(dtype)
+
+    new_state = None
+    if decode or return_state:
+        new_state = MambaState(conv=new_conv, ssd=new_ssd)
+    return out, new_state

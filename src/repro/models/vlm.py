@@ -1,0 +1,50 @@
+"""InternVL2-style VLM wrapper: stubbed ViT frontend + LM backbone.
+
+Per the assignment the InternViT tower is a STUB — ``input_specs()``
+provides precomputed patch embeddings (B, num_image_tokens, d_model),
+already projected into the LM embedding space. The wrapper prepends
+them to the token embeddings; the loss masks image positions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.precision import PrecisionPolicy
+from repro.models import transformer as T
+
+__all__ = ["init_params", "forward", "init_cache", "vlm_loss"]
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    return T.init_params(key, cfg)
+
+
+def forward(params: dict, tokens: jax.Array | None,
+            image_embeds: jax.Array | None, cfg: ModelConfig, *,
+            policy: PrecisionPolicy, mode: str = "train",
+            cache: dict | None = None, pos: jax.Array | None = None,
+            remat: bool = False):
+    """train/prefill: tokens (B,S_text) + image_embeds (B,N_img,D)
+    concatenated [img; text]. decode: single token vs cache."""
+    return T.forward(
+        params, tokens, cfg, policy=policy, mode=mode, cache=cache,
+        pos=pos, extra_embeds=image_embeds if mode != "decode" else None,
+        remat=remat)
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_ctx: int,
+               dtype=jnp.bfloat16) -> dict:
+    """s_ctx must already include num_image_tokens."""
+    return T.init_cache(cfg, batch, s_ctx, dtype)
+
+
+def vlm_loss(logits: jax.Array, labels: jax.Array,
+             num_image_tokens: int) -> jax.Array:
+    """Cross-entropy on text positions only (image positions produce
+    logits too, but carry no labels)."""
+    text_logits = logits[:, num_image_tokens:]
+    mask = jnp.ones(labels.shape, jnp.float32)
+    return T.lm_loss(text_logits, labels, mask)

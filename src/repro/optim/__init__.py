@@ -1,0 +1,3 @@
+"""Optimization substrate: AdamW, dynamic loss scaling, and the paper's
+residual technique applied to gradients (compression) and master
+weights (dual_half)."""

@@ -1,0 +1,93 @@
+"""Residual-compensated gradient compression — the paper's Eq. 1
+residual applied to the data-parallel all-reduce.
+
+Communicate ``hi = bf16(g)`` (half the bytes of fp32) and keep the
+residual ``g - hi`` in a local fp32 error-feedback buffer that is added
+into the NEXT step's gradient before compression. Over two steps the
+full fp32 gradient information crosses the wire — exactly the paper's
+"distribute the un-representable portion to another 16-bit number",
+with the second number sent one step later instead of immediately.
+
+Exposed two ways:
+  * ``compressed_pmean(grads, error, axis_name)`` — call inside an
+    existing shard_map/pmap body (explicit collective control; pjit's
+    automatic psum cannot be intercepted).
+  * ``make_compressed_allreduce(mesh)`` — standalone shard_map wrapper
+    operating on a flattened gradient vector (used by examples/tests).
+
+Halves the collective-bytes term of the roofline for DP-reduction-bound
+cells; the residual stream costs no extra wire bytes, only local fp32
+state the size of the gradients.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.precision import split2
+
+__all__ = ["init_error_state", "compressed_pmean",
+           "make_compressed_allreduce", "flatten_tree", "unflatten_tree"]
+
+
+def init_error_state(grads_like: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                        grads_like)
+
+
+def compressed_pmean(grads: Any, error: Any, axis_name: str,
+                     ) -> tuple[Any, Any]:
+    """bf16-wire pmean with fp32 error feedback (use inside shard_map)."""
+    g_leaves, treedef = jax.tree.flatten(grads)
+    e_leaves = treedef.flatten_up_to(error)
+    new_g, new_e = [], []
+    for g, e in zip(g_leaves, e_leaves):
+        g32 = g.astype(jnp.float32) + e           # inject carried residual
+        hi, _ = split2(g32)                       # bf16 wire payload
+        new_e.append(g32 - hi.astype(jnp.float32))  # paper Eq. 1 residual
+        new_g.append(jax.lax.pmean(hi, axis_name).astype(jnp.float32))
+    return treedef.unflatten(new_g), treedef.unflatten(new_e)
+
+
+# -------------------------- flat-vector variant (standalone shard_map)
+
+def flatten_tree(tree: Any) -> tuple[jax.Array, Any, list]:
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = [(l.shape, l.dtype) for l in leaves]
+    flat = jnp.concatenate([l.astype(jnp.float32).reshape(-1)
+                            for l in leaves])
+    return flat, treedef, shapes
+
+
+def unflatten_tree(flat: jax.Array, treedef, shapes) -> Any:
+    out, off = [], 0
+    for shape, dtype in shapes:
+        n = 1
+        for s in shape:
+            n *= s
+        out.append(flat[off:off + n].reshape(shape).astype(dtype))
+        off += n
+    return treedef.unflatten(out)
+
+
+def make_compressed_allreduce(mesh: Mesh, axis_name: str = "data"):
+    """Flat-vector compressed all-reduce: (flat_grads, flat_error) ->
+    (reduced fp32 grads, new error). Inputs sharded over ``axis_name``;
+    output grads replicated. Vector length must divide the axis size
+    (pad upstream)."""
+
+    def body(g, e):
+        g32 = g + e
+        hi, _ = split2(g32)
+        new_e = g32 - hi.astype(jnp.float32)
+        red = jax.lax.pmean(hi, axis_name).astype(jnp.float32)
+        return red, new_e
+
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis_name), P(axis_name)),
+        out_specs=(P(None), P(axis_name)))

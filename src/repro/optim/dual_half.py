@@ -1,0 +1,55 @@
+"""(hi, lo) bf16 master weights — the paper's operand split applied to
+optimizer storage.
+
+A fp32 master weight is carried as two bf16 tensors (paper Eq. 1:
+``lo = bf16(w - bf16(w))``). Reconstruction ``hi + lo`` preserves >= 15
+significand bits — enough for Adam updates at LM learning rates — while
+giving layout freedom (both tensors are narrow, stream at bf16
+bandwidth, and the hi half IS the serving checkpoint: no cast pass).
+
+Off by default; validated against fp32 masters in tests/test_optim.py.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import merge2, split2
+
+__all__ = ["DualHalf", "to_dual", "from_dual", "apply_update"]
+
+
+class DualHalf(NamedTuple):
+    hi: Any   # bf16 pytree — also the serving/checkpoint weights
+    lo: Any   # bf16 pytree — paper Eq. 1 residuals
+
+
+def to_dual(params: Any) -> DualHalf:
+    his, los = [], []
+    leaves, treedef = jax.tree.flatten(params)
+    for p in leaves:
+        hi, lo = split2(p.astype(jnp.float32))
+        his.append(hi)
+        los.append(lo)
+    return DualHalf(hi=treedef.unflatten(his), lo=treedef.unflatten(los))
+
+
+def from_dual(dual: DualHalf) -> Any:
+    return jax.tree.map(merge2, dual.hi, dual.lo)
+
+
+def apply_update(dual: DualHalf, updates: Any) -> DualHalf:
+    """w32 = (hi + lo) + update, re-split. The update happens in fp32;
+    only storage is narrow."""
+    def one(hi, lo, u):
+        w = merge2(hi, lo) + u.astype(jnp.float32)
+        return split2(w)
+    leaves_hi, treedef = jax.tree.flatten(dual.hi)
+    leaves_lo = treedef.flatten_up_to(dual.lo)
+    leaves_u = treedef.flatten_up_to(updates)
+    outs = [one(h, l, u) for h, l, u in zip(leaves_hi, leaves_lo, leaves_u)]
+    return DualHalf(hi=treedef.unflatten([o[0] for o in outs]),
+                    lo=treedef.unflatten([o[1] for o in outs]))

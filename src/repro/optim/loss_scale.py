@@ -1,0 +1,61 @@
+"""Dynamic loss scaling for narrow-precision training.
+
+bf16 has fp32's exponent range so *overflow* is rare (unlike the
+paper's fp16, which saturates at 65504) — but tiny gradients still
+vanish below bf16's 2^-7-relative resolution when activations are kept
+narrow. Dynamic scaling is retained as the standard guard: scale the
+loss up, unscale the grads, halve on non-finite grads, double every
+``growth_interval`` clean steps.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["LossScaleState", "init", "scale_loss", "unscale_and_check",
+           "update"]
+
+
+class LossScaleState(NamedTuple):
+    scale: jax.Array          # fp32 scalar
+    good_steps: jax.Array     # int32 consecutive finite steps
+    growth_interval: int = 200
+
+
+def init(initial: float = 2.0 ** 15, growth_interval: int = 200) -> LossScaleState:
+    return LossScaleState(
+        scale=jnp.float32(initial),
+        good_steps=jnp.zeros((), jnp.int32),
+        growth_interval=growth_interval,
+    )
+
+
+def scale_loss(state: LossScaleState, loss: jax.Array) -> jax.Array:
+    return loss * state.scale
+
+
+def unscale_and_check(state: LossScaleState, grads: Any,
+                      ) -> tuple[Any, jax.Array]:
+    """Returns (unscaled grads, all_finite flag)."""
+    inv = 1.0 / state.scale
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * inv, grads)
+    finite = jnp.array(True)
+    for g in jax.tree.leaves(grads):
+        finite &= jnp.all(jnp.isfinite(g))
+    return grads, finite
+
+
+def update(state: LossScaleState, all_finite: jax.Array) -> LossScaleState:
+    good = jnp.where(all_finite, state.good_steps + 1, 0)
+    grow = good >= state.growth_interval
+    scale = jnp.where(
+        all_finite,
+        jnp.where(grow, state.scale * 2.0, state.scale),
+        jnp.maximum(state.scale * 0.5, 1.0),
+    )
+    good = jnp.where(grow, 0, good)
+    return LossScaleState(scale=scale, good_steps=good,
+                          growth_interval=state.growth_interval)

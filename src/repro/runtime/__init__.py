@@ -1,0 +1,2 @@
+"""Distributed runtime: sharding rules, train/serve step builders,
+telemetry, elasticity."""

@@ -1,0 +1,66 @@
+"""Activation sharding constraints (logical-axis hook).
+
+Model code is mesh-agnostic; launchers install a constrainer built from
+the mesh so that specific activations carry explicit shardings. The one
+that matters most (measured, §Perf iteration A4): LOGITS. Without a
+constraint XLA's SPMD partitioner resolves the unembed BACKWARD
+contraction (dTable = dlogits x hidden over tokens) by ALL-GATHERING the
+(B, S, V/16) fp32 logits cotangent across the data axis — 34 GB/chip
+for the 262k-vocab cells — instead of computing the token-local partial
+and psum-ing the (V/16, D) table gradient. ``with_sharding_constraint``
+transposes to itself, so constraining the forward logits pins the
+cotangent too and the partitioner keeps the contraction local.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Callable
+
+import jax
+
+_CONSTRAINER: contextvars.ContextVar[Callable | None] = \
+    contextvars.ContextVar("act_constrainer", default=None)
+
+
+def constrain(x: jax.Array, kind: str) -> jax.Array:
+    """Apply the installed constraint for ``kind`` (no-op when unset)."""
+    fn = _CONSTRAINER.get()
+    return fn(x, kind) if fn is not None else x
+
+
+@contextlib.contextmanager
+def use_constrainer(fn: Callable):
+    tok = _CONSTRAINER.set(fn)
+    try:
+        yield
+    finally:
+        _CONSTRAINER.reset(tok)
+
+
+def make_constrainer(sharder) -> Callable:
+    """Standard constrainer from a Sharder: logits (B: dp, S: -, V: tp)."""
+    from jax.sharding import PartitionSpec as P
+
+    dp = sharder.dp_axes if len(sharder.dp_axes) > 1 else (
+        sharder.dp_axes[0] if sharder.dp_axes else None)
+
+    def fn(x, kind):
+        if kind == "logits" and x.ndim == 3:
+            v = x.shape[-1]   # global vocab dim of the traced array
+            spec = P(dp, None, "model" if v % sharder.d_model == 0 else None)
+        elif kind == "residual" and x.ndim == 3:
+            # The residual stream is (B: dp, S, D: replicated). Without
+            # this pin, the FSDP dout:'data' sharding of output
+            # projections PROPAGATES into the activations: XLA keeps
+            # D:'data' instead of B:'data', materializes the FULL batch
+            # per chip, and all-reduces logits-sized tensors (§Perf A4).
+            b = x.shape[0]
+            spec = P(dp if b % sharder.dp_size == 0 else None, None, None)
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(sharder.mesh, spec))
+
+    return fn

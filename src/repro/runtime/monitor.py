@@ -1,0 +1,54 @@
+"""Step-time telemetry + straggler detection.
+
+At 1000+ nodes the dominant failure mode short of a crash is a slow
+host (thermal throttle, flaky HBM, background daemon). The monitor
+keeps a rolling window of per-step wall times, computes robust z-scores
+(median/MAD), and flags outliers; launch/train.py logs the flag and a
+real deployment wires it to the scheduler's drain-and-replace hook.
+Also accounts model FLOPs -> achieved FLOP/s for the live MFU readout.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+
+__all__ = ["StepMonitor"]
+
+
+@dataclasses.dataclass
+class StepStats:
+    mean_s: float
+    median_s: float
+    mad_s: float
+    last_s: float
+    straggler: bool
+    achieved_tflops: float
+
+
+class StepMonitor:
+    def __init__(self, window: int = 50, z_threshold: float = 4.0,
+                 model_flops_per_step: float = 0.0):
+        self.times: collections.deque = collections.deque(maxlen=window)
+        self.z = z_threshold
+        self.flops = model_flops_per_step
+        self._t0: float | None = None
+
+    def start(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> StepStats:
+        assert self._t0 is not None, "start() not called"
+        dt = time.perf_counter() - self._t0
+        self._t0 = None
+        self.times.append(dt)
+        ts = sorted(self.times)
+        n = len(ts)
+        med = ts[n // 2]
+        mad = sorted(abs(t - med) for t in ts)[n // 2]
+        straggler = n >= 10 and mad > 0 and (dt - med) / (1.4826 * mad) > self.z
+        return StepStats(
+            mean_s=sum(ts) / n, median_s=med, mad_s=mad, last_s=dt,
+            straggler=straggler,
+            achieved_tflops=self.flops / dt / 1e12 if self.flops else 0.0)

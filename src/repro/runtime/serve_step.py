@@ -1,0 +1,88 @@
+"""Serve-step builders: prefill and single-token decode with padded,
+shardable caches.
+
+``prefill`` ingests the context and emits a cache PADDED to the decode
+capacity (attention caches grow in place afterwards; ring-buffer local
+caches are already window-sized; recurrent states are O(1)). ``decode``
+is the cell lowered for the ``decode_32k`` / ``long_500k`` dry-runs —
+one new token against the full-capacity cache, NOT a train step.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.precision import PrecisionPolicy
+from repro.models import api
+from repro.models.attention import AttnCache
+
+__all__ = ["make_prefill", "make_decode", "pad_cache", "abstract_cache",
+           "abstract_params"]
+
+
+def _attn_capacity(kind: str, cfg: ModelConfig, s_ctx: int) -> int | None:
+    if kind in ("attn", "shared_attn"):
+        return s_ctx
+    if kind == "attn_local":
+        return s_ctx if cfg.window is None else min(s_ctx, cfg.window)
+    return None  # cross_attn (fixed enc length) and stateless/recurrent
+
+
+def pad_cache(cache: dict, cfg: ModelConfig, s_ctx: int) -> dict:
+    """Pad every growable attention cache to its decode capacity."""
+    out: dict[str, Any] = {}
+    for i, seg in enumerate(cfg.segments):
+        seg_c = cache[f"seg{i}"]
+        new_seg: dict[str, Any] = {}
+        for j, kind in enumerate(seg.pattern):
+            c = seg_c[f"pos{j}"]
+            cap = _attn_capacity(kind, cfg, s_ctx)
+            if cap is not None and isinstance(c, AttnCache):
+                cur = c.k.shape[2]  # (count, B, S, Kv, hd)
+                if cur < cap:
+                    pad = [(0, 0)] * c.k.ndim
+                    pad[2] = (0, cap - cur)
+                    c = AttnCache(k=jnp.pad(c.k, pad), v=jnp.pad(c.v, pad))
+            new_seg[f"pos{j}"] = c
+        out[f"seg{i}"] = new_seg
+    return out
+
+
+def make_prefill(cfg: ModelConfig, policy: PrecisionPolicy, *,
+                 s_ctx: int, remat: bool = False):
+    """prefill(params, batch) -> (next-token logits, capacity cache)."""
+
+    def prefill(params, batch):
+        logits, cache = api.prefill(params, batch, cfg, policy=policy,
+                                    remat=remat)
+        return logits, pad_cache(cache, cfg, s_ctx)
+
+    return prefill
+
+
+def make_decode(cfg: ModelConfig, policy: PrecisionPolicy):
+    """decode(params, cache, tokens (B,1), pos ()) -> (logits, cache)."""
+
+    def decode(params, cache, tokens, pos):
+        return api.decode(params, cache, tokens, pos, cfg, policy=policy)
+
+    return decode
+
+
+# ------------------------------------------------------------- abstract
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    """ShapeDtypeStruct pytree of the params (no allocation)."""
+    return jax.eval_shape(
+        lambda: api.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, s_ctx: int,
+                   dtype=jnp.bfloat16) -> Any:
+    """ShapeDtypeStruct pytree of a full-capacity decode cache."""
+    return jax.eval_shape(
+        lambda: api.init_cache(cfg, batch, s_ctx, dtype))

@@ -1,0 +1,206 @@
+"""Logical -> mesh-axis sharding rules (DP / FSDP / TP / EP / SP).
+
+Mesh axes: ``data`` (FSDP + batch), ``model`` (TP / EP), optional
+``pod`` (pure DP across pods — reduction-only traffic, so it tolerates
+the slower inter-pod fabric; parameters are NOT sharded across pods).
+
+Every rule is DIVISIBILITY-GUARDED: an axis is sharded only when its
+size divides evenly into the mesh axis, so the same rule set compiles
+for all 10 architectures (e.g. gemma3's 4 attention heads stay
+replicated on a 16-way model axis while its 6912-wide FFN takes TP;
+mixtral's 8 experts fall back to TP-in-expert while dbrx's 16 experts
+take true EP).
+
+Batch sharding: global batch over (pod, data) when divisible; the
+``long_500k`` B=1 cells switch to SEQUENCE sharding (SP) over ``data``
+— activations and KV caches shard the sequence axis and XLA inserts
+the partial-softmax reductions.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["Sharder"]
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _estimate_param_bytes(cfg: ModelConfig) -> int:
+    """fp32 parameter bytes without allocation (eval_shape)."""
+    import numpy as np
+
+    from repro.models import api
+    tree = jax.eval_shape(
+        lambda: api.init_params(jax.random.PRNGKey(0), cfg))
+    return int(sum(np.prod(l.shape) * 4 for l in jax.tree_util.tree_leaves(tree)))
+
+
+class Sharder:
+    """Builds NamedShardings for params / batch / cache of one cell.
+
+    ``mode``: "train" (default) applies FSDP (ZeRO-3) to weight input
+    dims; "serve" REPLICATES weights over the data axis when the
+    TP-sharded copy fits the per-chip HBM budget — at decode, one token
+    per sequence cannot amortize a per-layer FSDP all-gather, which
+    otherwise makes every decode cell collective-bound (measured:
+    §Perf iteration C2). Archs whose TP shard exceeds the budget
+    (dbrx-132b, nemotron-340b, internvl2-76b, command-r-35b at fp32)
+    keep FSDP at serve time.
+    """
+
+    # fp32 per-chip weight budget before serve-mode keeps FSDP
+    SERVE_REPLICATE_BUDGET = 8 * 2 ** 30
+
+    def __init__(self, cfg: ModelConfig, mesh: Mesh, mode: str = "train",
+                 param_bytes: int | None = None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.mode = mode
+        self.d_model = _axis_size(mesh, "model")
+        self.d_data = _axis_size(mesh, "data")
+        self.d_pod = _axis_size(mesh, "pod")
+        self.dp_axes: tuple[str, ...] = tuple(
+            a for a in ("pod", "data") if a in mesh.axis_names)
+        self.dp_size = self.d_pod * self.d_data
+        self.fsdp = True
+        if mode == "serve":
+            pb = param_bytes if param_bytes is not None \
+                else _estimate_param_bytes(cfg)
+            self.fsdp = pb / self.d_model > self.SERVE_REPLICATE_BUDGET
+
+    # ------------------------------------------------------------ helpers
+
+    def _m(self, dim: int) -> str | None:
+        """'model' if dim divides the model axis, else replicate."""
+        return "model" if dim % self.d_model == 0 else None
+
+    def _f(self, dim: int) -> str | None:
+        """FSDP: 'data' if dim divides the data axis, else replicate."""
+        if not self.fsdp:
+            return None
+        return "data" if dim % self.d_data == 0 else None
+
+    def _dp(self, batch: int):
+        """Batch axes: (pod,data) -> ('pod','data') / 'data' / None."""
+        if batch % self.dp_size == 0:
+            return self.dp_axes if len(self.dp_axes) > 1 else "data"
+        if batch % self.d_data == 0:
+            return "data"
+        return None
+
+    def ns(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    # ------------------------------------------------------------- params
+
+    def _param_spec(self, path: str, shape: tuple[int, ...]) -> P:
+        cfg = self.cfg
+        # Embedding / unembedding tables (V, D): vocab -> model (TP of
+        # the logits matmul). The embed dim is REPLICATED on purpose:
+        # sharding it over 'data' makes the token-gather output carry
+        # D:'data' while the activations carry B:'data' — an impossible
+        # resharding that XLA SPMD resolves by involuntary full
+        # rematerialization (full replication) of the hidden states.
+        # Measured in EXPERIMENTS.md §Perf iteration A1.
+        if path.endswith(("embed/table", "unembed/table")):
+            v, d = shape
+            return P(self._m(v), None)
+        if "pos_embed" in path:
+            return P(None, self._f(shape[-1]))
+
+        # MoE experts: (..., E, D, F)-family. True EP when E divides the
+        # model axis (dbrx); otherwise TP on the ffn dim (mixtral).
+        if cfg.num_experts and len(shape) == 4:  # (count, E, din, dout)
+            _, e, din, dout = shape
+            if e % self.d_model == 0:
+                return P(None, "model", self._f(din), None)
+            return P(None, None, self._f(din), self._m(dout))
+        if cfg.num_experts and len(shape) == 3 and shape[0] == cfg.num_experts:
+            e, din, dout = shape
+            if e % self.d_model == 0:
+                return P("model", self._f(din), None)
+            return P(None, self._f(din), self._m(dout))
+
+        # Stacked / unstacked weight matrices: (…, d_in, d_out).
+        if path.endswith("/w") and len(shape) >= 2:
+            din, dout = shape[-2], shape[-1]
+            lead = (None,) * (len(shape) - 2)
+            # Output-projection style (wo/out_proj/ffn_v/b-of-lora): the
+            # CONTRACTING dim is the sharded 'model' one.
+            if any(t in path for t in ("wo/", "out_proj", "ffn_v", "/b/")):
+                return P(*lead, self._m(din), self._f(dout))
+            return P(*lead, self._f(din), self._m(dout))
+
+        # Everything else (norm scales, biases, decay vectors, conv
+        # kernels, u/w0/mu, dt_bias, ...) is small: replicate.
+        return P(*((None,) * len(shape)))
+
+    def param_specs(self, abstract_params: Any) -> Any:
+        def spec(kp, leaf):
+            path = "/".join(
+                getattr(k, "key", getattr(k, "name", str(k))) for k in kp)
+            return self.ns(self._param_spec(path, leaf.shape))
+        return jax.tree_util.tree_map_with_path(spec, abstract_params)
+
+    # -------------------------------------------------------------- batch
+
+    def batch_specs(self, batch: dict[str, Any]) -> dict[str, Any]:
+        out = {}
+        for name, leaf in batch.items():
+            shape = leaf.shape
+            if name == "pos" or len(shape) == 0:
+                out[name] = self.ns(P())
+                continue
+            b = shape[0]
+            dp = self._dp(b)
+            if dp is None and len(shape) >= 2 and shape[1] % self.d_data == 0:
+                # SP fallback (long_500k B=1): shard sequence over data.
+                out[name] = self.ns(P(None, "data", *(None,) * (len(shape) - 2)))
+            else:
+                out[name] = self.ns(P(dp, *(None,) * (len(shape) - 1)))
+        return out
+
+    # -------------------------------------------------------------- cache
+
+    def _cache_spec(self, path: str, shape: tuple[int, ...]) -> P:
+        # Recurrent states: rwkv wkv (count,B,H,K,V), mamba ssd
+        # (count,B,H,P,N) — shard HEADS on the model axis.
+        if ("wkv" in path or "ssd" in path) and len(shape) == 5:
+            _, b, h, _, _ = shape
+            return P(None, self._dp(b), self._m(h), None, None)
+        # Stacked attn caches: (count, B, S, Kv, hd)
+        if len(shape) == 5:
+            _, b, s, kv, _ = shape
+            dp = self._dp(b)
+            if dp is None:  # B=1 long-context: sequence-shard the cache
+                return P(None, None, "data" if s % self.d_data == 0 else None,
+                         self._m(kv), None)
+            return P(None, dp, None, self._m(kv), None)
+        if len(shape) == 4:  # (count, B, W-1, conv_dim) mamba conv
+            _, b, _, c = shape
+            return P(None, self._dp(b), None, self._m(c))
+        if len(shape) == 3:  # (count, B, D) rwkv shift states
+            _, b, _ = shape
+            return P(None, self._dp(b), None)
+        return P(*((None,) * len(shape)))
+
+    def cache_specs(self, abstract_cache: Any) -> Any:
+        def spec(kp, leaf):
+            path = "/".join(
+                getattr(k, "key", getattr(k, "name", str(k))) for k in kp)
+            return self.ns(self._cache_spec(path, leaf.shape))
+        return jax.tree_util.tree_map_with_path(spec, abstract_cache)
+
+    # ---------------------------------------------------------- optimizer
+
+    def opt_specs(self, param_specs: Any) -> Any:
+        """Adam m/v mirror the param shardings (built by optim.adamw)."""
+        return param_specs

@@ -1,0 +1,77 @@
+"""Train-step builder: loss + grad + microbatch accumulation + AdamW.
+
+The returned function is pure (params, opt_state, batch) ->
+(params, opt_state, metrics) and is what launch/train.py jits and
+launch/dryrun.py lowers. Microbatching is a ``lax.scan`` over gradient
+accumulation (constant HLO size in the number of microbatches) with
+per-layer remat inside the model stack — together these bound
+activation memory for the 340B-class cells (see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.precision import PrecisionPolicy
+from repro.models import api
+from repro.optim import adamw
+
+__all__ = ["make_train_step", "make_loss_fn"]
+
+
+def make_loss_fn(cfg: ModelConfig, policy: PrecisionPolicy, *,
+                 remat: bool = True):
+    def loss_fn(params, batch):
+        return api.loss_fn(params, batch, cfg, policy=policy, remat=remat)
+    return loss_fn
+
+
+def _split_micro(batch: dict[str, jax.Array], n: int) -> dict[str, jax.Array]:
+    """(B, ...) -> (n, B/n, ...) for every batch leaf."""
+    def r(x):
+        b = x.shape[0]
+        assert b % n == 0, f"batch {b} not divisible by microbatches {n}"
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    policy: PrecisionPolicy, *, microbatches: int = 1,
+                    remat: bool = True):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+    loss_fn = make_loss_fn(cfg, policy, remat=remat)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params: Any, opt_state: adamw.AdamWState,
+                   batch: dict[str, jax.Array]):
+        if microbatches == 1:
+            (_, metrics), grads = grad_fn(params, batch)
+        else:
+            micro = _split_micro(batch, microbatches)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc_step(carry, mb):
+                g_acc, loss_acc, aux_acc = carry
+                (_, m), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, loss_acc + m["loss"], aux_acc + m["aux_loss"]), None
+
+            (g_sum, loss_sum, aux_sum), _ = jax.lax.scan(
+                acc_step, (zeros, jnp.zeros((), jnp.float32),
+                           jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / microbatches, g_sum)
+            metrics = {"loss": loss_sum / microbatches,
+                       "aux_loss": aux_sum / microbatches}
+
+        new_params, new_opt, om = adamw.step(opt_cfg, opt_state, params, grads)
+        metrics = dict(metrics, **om)
+        return new_params, new_opt, metrics
+
+    return train_step

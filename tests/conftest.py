@@ -1,0 +1,19 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device forcing here — smoke tests
+and benches must see the real single CPU device; only launch/dryrun.py
+(run as its own process) forces 512 placeholder devices."""
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)

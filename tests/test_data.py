@@ -1,0 +1,65 @@
+"""Data pipeline: determinism, host sharding, prefetch, modality stubs."""
+
+import numpy as np
+
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLMDataset
+
+
+class TestSyntheticData:
+    def test_deterministic_restart_safe(self):
+        """batch(i) is a pure function of (seed, i, proc): a restarted job
+        regenerates identical batches without data-state checkpoints."""
+        cfg = DataConfig(global_batch=8, seq_len=16, vocab_size=100, seed=3)
+        d1, d2 = SyntheticLMDataset(cfg), SyntheticLMDataset(cfg)
+        for i in (0, 5, 117):
+            b1, b2 = d1.batch(i), d2.batch(i)
+            np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+            np.testing.assert_array_equal(b1["labels"], b2["labels"])
+
+    def test_batches_differ_by_index_and_seed(self):
+        cfg = DataConfig(global_batch=4, seq_len=32, vocab_size=1000)
+        ds = SyntheticLMDataset(cfg)
+        assert not np.array_equal(ds.batch(0)["tokens"],
+                                  ds.batch(1)["tokens"])
+        ds2 = SyntheticLMDataset(DataConfig(global_batch=4, seq_len=32,
+                                            vocab_size=1000, seed=9))
+        assert not np.array_equal(ds.batch(0)["tokens"],
+                                  ds2.batch(0)["tokens"])
+
+    def test_labels_are_shifted_tokens(self):
+        cfg = DataConfig(global_batch=2, seq_len=8, vocab_size=50)
+        b = SyntheticLMDataset(cfg).batch(0)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+    def test_host_sharding_partitions_batch(self):
+        cfg = DataConfig(global_batch=8, seq_len=4, vocab_size=10)
+        shards = [SyntheticLMDataset(cfg, proc=p, nproc=4).batch(0)
+                  for p in range(4)]
+        assert all(s["tokens"].shape == (2, 4) for s in shards)
+        # different hosts draw from different streams
+        assert not np.array_equal(shards[0]["tokens"], shards[1]["tokens"])
+
+    def test_vocab_bounds(self):
+        cfg = DataConfig(global_batch=4, seq_len=64, vocab_size=17)
+        b = SyntheticLMDataset(cfg).batch(0)
+        assert b["tokens"].min() >= 0 and b["tokens"].max() < 17
+
+    def test_modality_stubs(self):
+        cfg = DataConfig(global_batch=2, seq_len=4, vocab_size=10,
+                         frames_dim=8, frames_seq=6,
+                         image_tokens=3, image_dim=8)
+        b = SyntheticLMDataset(cfg).batch(0)
+        assert b["frames"].shape == (2, 6, 8)
+        assert b["image_embeds"].shape == (2, 3, 8)
+        assert b["frames"].dtype == np.float32
+
+
+class TestPrefetcher:
+    def test_streams_in_order(self):
+        cfg = DataConfig(global_batch=2, seq_len=4, vocab_size=10)
+        ds = SyntheticLMDataset(cfg)
+        pf = Prefetcher(iter(ds), depth=2)
+        got = [next(pf) for _ in range(3)]
+        pf.close()
+        for i, b in enumerate(got):
+            np.testing.assert_array_equal(b["tokens"], ds.batch(i)["tokens"])

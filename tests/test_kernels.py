@@ -1,0 +1,282 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles in
+repro.kernels.ref (kernels run in interpret=True on this CPU container).
+
+Sweeps cover: shapes (MXU-aligned and ragged via the padded ops wrapper),
+dtypes (f32/bf16 inputs), block shapes, and every refinement policy the
+fused kernel implements."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.batched_gemm import batched_gemm, batched_gemm_naive
+from repro.kernels.gemm_naive import gemm_naive
+from repro.kernels.gemm_refined import gemm_refined
+from repro.kernels.gemm_tiled import gemm_tiled
+
+INTERP = dict(interpret=True)
+
+
+def _rand(shape, seed=0, dtype=np.float32, lo=-1.0, hi=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, shape).astype(np.float32)).astype(dtype)
+
+
+# ------------------------------------------------------------ gemm_tiled
+
+class TestGemmTiled:
+    @pytest.mark.parametrize("m,k,n", [
+        (128, 128, 128), (256, 128, 128), (128, 256, 128),
+        (128, 128, 256), (256, 512, 384), (512, 256, 128),
+    ])
+    def test_shapes_vs_oracle(self, m, k, n):
+        a, b = _rand((m, k), m + k), _rand((k, n), k + n)
+        got = gemm_tiled(a, b, bm=128, bn=128, bk=128, **INTERP)
+        want = ref.gemm_mixed_ref(a, b)
+        assert got.dtype == jnp.float32
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_input_dtypes(self, dtype):
+        a, b = _rand((128, 128), 1, dtype), _rand((128, 128), 2, dtype)
+        got = gemm_tiled(a, b, bm=128, bn=128, bk=128, **INTERP)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ref.gemm_mixed_ref(a, b)),
+            rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("bm,bn,bk", [
+        (128, 128, 128), (256, 256, 256), (128, 256, 128), (256, 128, 256)])
+    def test_block_shapes(self, bm, bn, bk):
+        a, b = _rand((256, 256), 3), _rand((256, 256), 4)
+        got = gemm_tiled(a, b, bm=bm, bn=bn, bk=bk, **INTERP)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ref.gemm_mixed_ref(a, b)),
+            rtol=1e-5, atol=1e-5)
+
+    def test_multi_k_accumulation(self):
+        """K grid walk must accumulate, not overwrite (4 K-steps)."""
+        a, b = _rand((128, 512), 5), _rand((512, 128), 6)
+        got = gemm_tiled(a, b, bm=128, bn=128, bk=128, **INTERP)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ref.gemm_mixed_ref(a, b)),
+            rtol=1e-5, atol=1e-5)
+
+    def test_rejects_ragged(self):
+        # M=100 does not divide bm=64 (min() clamps bm only when bm > M).
+        with pytest.raises(ValueError):
+            gemm_tiled(_rand((100, 128)), _rand((128, 128)),
+                       bm=64, bn=128, bk=128, **INTERP)
+
+
+# ------------------------------------------------------------ gemm_naive
+
+class TestGemmNaive:
+    @pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 512, 128)])
+    def test_vs_oracle(self, m, k, n):
+        a, b = _rand((m, k), 7), _rand((k, n), 8)
+        got = gemm_naive(a, b, bm=128, bn=128, **INTERP)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ref.gemm_mixed_ref(a, b)),
+            rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------- gemm_refined
+
+class TestGemmRefined:
+    @pytest.mark.parametrize("policy", ["refine_a", "bf16x3", "refine_ab"])
+    @pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 384, 128)])
+    def test_vs_unfused_oracle(self, policy, m, k, n):
+        """Fused kernel == unfused multi-pass reference, term for term."""
+        a, b = _rand((m, k), m + n), _rand((k, n), k)
+        got = gemm_refined(a, b, policy=policy, bm=128, bn=128, bk=128,
+                           **INTERP)
+        want = ref.gemm_refined_ref(a, b, policy=policy)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_beats_plain_bf16_error(self):
+        """The kernel actually delivers the paper's accuracy win."""
+        a, b = _rand((256, 256), 1), _rand((256, 256), 2)
+        oracle = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+        e1 = np.max(np.abs(np.asarray(
+            gemm_tiled(a, b, **INTERP), np.float64) - oracle))
+        e4 = np.max(np.abs(np.asarray(
+            gemm_refined(a, b, policy="refine_ab", **INTERP),
+            np.float64) - oracle))
+        assert e4 < e1 / 8
+
+    def test_multi_k_accumulation(self):
+        a, b = _rand((128, 512), 9), _rand((512, 128), 10)
+        got = gemm_refined(a, b, policy="refine_ab", bm=128, bn=128, bk=128,
+                           **INTERP)
+        want = ref.gemm_refined_ref(a, b, policy="refine_ab")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_rejects_unknown_policy(self):
+        with pytest.raises(ValueError):
+            gemm_refined(_rand((128, 128)), _rand((128, 128)),
+                         policy="bf16", **INTERP)
+
+
+# ---------------------------------------------------------- batched gemm
+
+class TestBatchedGemm:
+    @pytest.mark.parametrize("g,n", [(8, 16), (16, 16), (8, 32), (4, 64),
+                                     (16, 8), (128, 16)])
+    def test_packed_vs_oracle(self, g, n):
+        a, b = _rand((g, n, n), g), _rand((g, n, n), n)
+        got = batched_gemm(a, b, tile=128, **INTERP)
+        want = ref.batched_gemm_packed_ref(a, b, pack=128 // n)
+        assert got.shape == (g, n, n)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_naive_vs_oracle(self):
+        a, b = _rand((8, 16, 16), 1), _rand((8, 16, 16), 2)
+        got = batched_gemm_naive(a, b, **INTERP)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ref.batched_gemm_ref(a, b)),
+            rtol=1e-5, atol=1e-5)
+
+    def test_block_diagonal_no_crosstalk(self):
+        """Matrix i's result must not see matrix j's data (packing
+        correctness): zeroing one input zeroes exactly one output."""
+        g, n = 8, 16
+        a, b = _rand((g, n, n), 5), _rand((g, n, n), 6)
+        a = a.at[3].set(0.0)
+        got = batched_gemm(a, b, tile=128, **INTERP)
+        assert np.allclose(np.asarray(got[3]), 0.0)
+        want = ref.batched_gemm_ref(a, b)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_rejects_bad_tile(self):
+        with pytest.raises(ValueError):
+            batched_gemm(_rand((8, 24, 24)), _rand((8, 24, 24)), tile=128,
+                         **INTERP)
+
+
+# ------------------------------------------------------------- wkv6
+
+class TestWKV6Kernel:
+    def _inputs(self, b=2, s=128, h=2, kd=64, seed=0, decay_scale=0.7):
+        rng = np.random.default_rng(seed)
+        r, k, v = (jnp.asarray(
+            rng.normal(size=(b, s, h, kd)).astype(np.float32)) * 0.5
+            for _ in range(3))
+        logw = -jnp.exp(jnp.asarray(
+            rng.normal(size=(b, s, h, kd)).astype(np.float32)) * 0.5
+            - decay_scale)
+        u = jnp.asarray(rng.normal(size=(h, kd)).astype(np.float32)) * 0.1
+        return r, k, v, logw, u
+
+    @pytest.mark.parametrize("s,chunk", [(64, 64), (128, 64), (256, 32),
+                                         (128, 128)])
+    def test_vs_sequential_oracle(self, s, chunk):
+        from repro.kernels.ref import wkv6_ref
+        from repro.kernels.wkv6 import wkv6
+        r, k, v, logw, u = self._inputs(s=s, seed=s + chunk)
+        out_k, st_k = wkv6(r, k, v, logw, u, chunk=chunk, **INTERP)
+        out_r, st_r = wkv6_ref(r, k, v, logw, u)
+        np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_r),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_strong_decay_numerics(self):
+        """Fast-decaying channels (the factorization-unsafe regime the
+        masked form handles exactly): no overflow/NaN, oracle match."""
+        from repro.kernels.ref import wkv6_ref
+        from repro.kernels.wkv6 import wkv6
+        r, k, v, logw, u = self._inputs(seed=9, decay_scale=-1.5)  # strong
+        out_k, _ = wkv6(r, k, v, logw, u, chunk=64, **INTERP)
+        out_r, _ = wkv6_ref(r, k, v, logw, u)
+        assert np.all(np.isfinite(np.asarray(out_k)))
+        np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_matches_model_chunked_form(self):
+        """Kernel == the model's pure-XLA chunked WKV (narrow=False)."""
+        from repro.kernels.wkv6 import wkv6
+        from repro.models.rwkv import _wkv_chunked
+        r, k, v, logw, u = self._inputs(seed=3)
+        out_k, st_k = wkv6(r, k, v, logw, u, chunk=32, **INTERP)
+        out_x, st_x = _wkv_chunked(
+            r.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), logw, np.asarray(u), chunk=32,
+            narrow=False)
+        np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_x),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_x),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_rejects_ragged_seq(self):
+        from repro.kernels.wkv6 import wkv6
+        r, k, v, logw, u = self._inputs(s=100)
+        with pytest.raises(ValueError):
+            wkv6(r, k, v, logw, u, chunk=64, **INTERP)
+
+
+# ------------------------------------------------------- ops.py wrappers
+
+class TestOpsWrappers:
+    @pytest.mark.parametrize("backend", ["xla", "pallas", "pallas_naive"])
+    def test_backends_agree_bf16(self, backend):
+        a, b = _rand((128, 128), 1), _rand((128, 128), 2)
+        got = ops.gemm(a, b, policy="bf16", backend=backend, bm=128, bn=128,
+                       bk=128, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ref.gemm_mixed_ref(a, b)),
+            rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("m,k,n", [(100, 130, 50), (257, 129, 65),
+                                       (128, 128, 127)])
+    @pytest.mark.parametrize("policy", ["bf16", "refine_ab"])
+    def test_ragged_shapes_via_padding(self, m, k, n, policy):
+        """The padded wrapper must handle arbitrary (non-aligned) shapes."""
+        a, b = _rand((m, k), m), _rand((k, n), n)
+        got = ops.gemm(a, b, policy=policy, backend="pallas",
+                       bm=128, bn=128, bk=128, interpret=True)
+        want = (ref.gemm_mixed_ref(a, b) if policy == "bf16"
+                else ref.gemm_refined_ref(a, b, policy=policy))
+        assert got.shape == (m, n)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("policy", ["f32", "bf16x6"])
+    def test_high_precision_policies_route_to_xla(self, policy):
+        a, b = _rand((64, 64), 3), _rand((64, 64), 4)
+        got = ops.gemm(a, b, policy=policy, backend="pallas", interpret=True)
+        want = np.asarray(a) @ np.asarray(b)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-3, atol=1e-4)
+
+    @hypothesis.given(g=st.integers(1, 40), n=st.sampled_from([8, 16, 32]))
+    @hypothesis.settings(deadline=None, max_examples=15)
+    def test_batched_arbitrary_group_counts(self, g, n):
+        """G needs no alignment: wrapper pads to the packing multiple."""
+        a, b = _rand((g, n, n), g + n), _rand((g, n, n), g * n)
+        got = ops.gemm_batched(a, b, backend="pallas", tile=128,
+                               interpret=True)
+        want = ref.batched_gemm_ref(a, b)
+        assert got.shape == (g, n, n)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_batched_backends_agree(self):
+        a, b = _rand((12, 16, 16), 1), _rand((12, 16, 16), 2)
+        outs = [np.asarray(ops.gemm_batched(a, b, backend=bk, interpret=True))
+                for bk in ("xla", "pallas", "pallas_naive")]
+        np.testing.assert_allclose(outs[0], outs[1], rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(outs[0], outs[2], rtol=1e-5, atol=1e-5)
+
+    def test_gemm_rejects_bad_shapes(self):
+        with pytest.raises(ValueError):
+            ops.gemm(_rand((4, 4)), _rand((5, 4)))
+        with pytest.raises(ValueError):
+            ops.gemm_batched(_rand((4, 4, 4)), _rand((4, 4, 5)))

@@ -1,0 +1,170 @@
+"""Optimizer-layer tests: AdamW, dynamic loss scaling, residual-
+compensated gradient compression (the paper's Eq. 1 applied to comms),
+and (hi,lo) bf16 dual master weights."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adamw, compression, dual_half, loss_scale
+
+
+class TestAdamW:
+    def test_converges_on_quadratic(self):
+        cfg = adamw.AdamWConfig(lr=0.1, warmup_steps=0, total_steps=200,
+                                weight_decay=0.0, clip_norm=None)
+        params = {"w": jnp.array([3.0, -2.0, 1.5])}
+        target = jnp.array([1.0, 1.0, 1.0])
+        state = adamw.init(params)
+
+        @jax.jit
+        def step(params, state):
+            grads = jax.grad(
+                lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+            return adamw.step(cfg, state, params, grads)
+
+        for _ in range(150):
+            params, state, m = step(params, state)
+        np.testing.assert_allclose(np.asarray(params["w"]),
+                                   np.asarray(target), atol=0.05)
+
+    def test_clipping_bounds_update(self):
+        cfg = adamw.AdamWConfig(lr=1.0, clip_norm=1.0, warmup_steps=0)
+        params = {"w": jnp.zeros(4)}
+        grads = {"w": jnp.full(4, 1e6)}
+        state = adamw.init(params)
+        _, _, m = adamw.step(cfg, state, params, grads)
+        assert float(m["grad_norm"]) == pytest.approx(2e6)
+
+    def test_schedule_warmup_and_decay(self):
+        cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                                min_lr_ratio=0.1)
+        lr0 = float(adamw.cosine_schedule(cfg, jnp.asarray(0)))
+        lr_peak = float(adamw.cosine_schedule(cfg, jnp.asarray(10)))
+        lr_end = float(adamw.cosine_schedule(cfg, jnp.asarray(100)))
+        assert lr0 == pytest.approx(0.0)
+        assert lr_peak == pytest.approx(1.0)
+        assert lr_end == pytest.approx(0.1, abs=1e-6)
+
+    def test_step_counter_and_state_shapes(self):
+        params = {"a": jnp.ones((3, 3)), "b": {"c": jnp.ones(2)}}
+        st_ = adamw.init(params)
+        assert int(st_.step) == 0
+        _, st2, _ = adamw.step(adamw.AdamWConfig(), st_, params,
+                               jax.tree.map(jnp.ones_like, params))
+        assert int(st2.step) == 1
+        assert jax.tree.structure(st2.m) == jax.tree.structure(params)
+
+
+class TestLossScale:
+    def test_scale_and_unscale_roundtrip(self):
+        st_ = loss_scale.init(initial=1024.0)
+        loss = jnp.asarray(2.0)
+        scaled = loss_scale.scale_loss(st_, loss)
+        assert float(scaled) == pytest.approx(2048.0)
+        grads = {"w": jnp.asarray([1024.0, 2048.0])}
+        un, finite = loss_scale.unscale_and_check(st_, grads)
+        np.testing.assert_allclose(np.asarray(un["w"]), [1.0, 2.0])
+        assert bool(finite)
+
+    def test_overflow_halves_scale(self):
+        st_ = loss_scale.init(initial=1024.0)
+        grads = {"w": jnp.asarray([jnp.inf])}
+        _, finite = loss_scale.unscale_and_check(st_, grads)
+        assert not bool(finite)
+        st2 = loss_scale.update(st_, finite)
+        assert float(st2.scale) == pytest.approx(512.0)
+
+    def test_growth_after_interval(self):
+        st_ = loss_scale.init(initial=256.0, growth_interval=2)
+        fin = jnp.asarray(True)
+        st_ = loss_scale.update(st_, fin)
+        st_ = loss_scale.update(st_, fin)
+        assert float(st_.scale) >= 512.0
+
+
+class TestCompression:
+    def test_error_feedback_identity(self):
+        """bf16(g) + stored residual == g exactly after one round trip
+        (the paper's Eq. 1: R = x - half(x))."""
+        g = {"w": jnp.asarray(np.random.default_rng(0).normal(
+            size=(64,)).astype(np.float32))}
+        err0 = compression.init_error_state(g)
+        # compressed_pmean without a mesh axis reduces to quantize+feedback
+        sent = jax.tree.map(
+            lambda x, e: (x + e).astype(jnp.bfloat16), g, err0)
+        new_err = jax.tree.map(
+            lambda x, e, s: (x + e) - s.astype(jnp.float32), g, err0, sent)
+        rec = jax.tree.map(
+            lambda s, e: s.astype(jnp.float32) + e, sent, new_err)
+        np.testing.assert_allclose(np.asarray(rec["w"]), np.asarray(g["w"]),
+                                   rtol=0, atol=1e-7)
+
+    def test_error_accumulates_unbiased(self):
+        """Over many steps the error-feedback stream is unbiased: the sum
+        of transmitted bf16 values converges to the sum of true grads."""
+        rng = np.random.default_rng(1)
+        true = rng.normal(size=(50, 32)).astype(np.float32) * 1e-3
+        err = jnp.zeros(32)
+        sent_sum = np.zeros(32, np.float64)
+        for t in range(50):
+            g = jnp.asarray(true[t])
+            q = (g + err).astype(jnp.bfloat16).astype(jnp.float32)
+            err = (g + err) - q
+            sent_sum += np.asarray(q, np.float64)
+        want = true.sum(0).astype(np.float64)
+        # residual never exceeds one bf16 ulp of the running value
+        np.testing.assert_allclose(sent_sum, want, atol=2e-5)
+
+    def test_flatten_unflatten_roundtrip(self):
+        tree = {"a": jnp.ones((2, 3)), "b": {"c": jnp.arange(4.0)}}
+        flat, treedef, shapes = compression.flatten_tree(tree)
+        assert flat.ndim == 1
+        rec = compression.unflatten_tree(flat, treedef, shapes)
+        for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(rec)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestDualHalf:
+    def test_roundtrip_precision(self):
+        params = {"w": jnp.asarray(np.random.default_rng(2).uniform(
+            -2, 2, (128,)).astype(np.float32))}
+        dual = dual_half.to_dual(params)
+        rec = dual_half.from_dual(dual)
+        np.testing.assert_allclose(np.asarray(rec["w"]),
+                                   np.asarray(params["w"]),
+                                   rtol=0, atol=2 ** -14)
+
+    def test_apply_update_matches_fp32_master(self):
+        """100 tiny updates through (hi,lo) track an fp32 master far
+        better than plain bf16 weights would."""
+        rng = np.random.default_rng(3)
+        w0 = rng.uniform(-1, 1, (64,)).astype(np.float32)
+        updates = (rng.normal(size=(100, 64)) * 1e-4).astype(np.float32)
+
+        master = w0.copy()
+        dual = dual_half.to_dual({"w": jnp.asarray(w0)})
+        plain_bf16 = jnp.asarray(w0).astype(jnp.bfloat16)
+        for t in range(100):
+            u = updates[t]
+            master += u
+            dual = dual_half.apply_update(dual, {"w": jnp.asarray(u)})
+            plain_bf16 = (plain_bf16.astype(jnp.float32) + u
+                          ).astype(jnp.bfloat16)
+        rec = np.asarray(dual_half.from_dual(dual)["w"])
+        err_dual = np.abs(rec - master).max()
+        err_bf16 = np.abs(np.asarray(plain_bf16, np.float32) - master).max()
+        assert err_dual < err_bf16 / 4
+        assert err_dual < 1e-3
+
+    @hypothesis.given(st.lists(st.floats(-100, 100, width=32), min_size=1,
+                               max_size=16))
+    @hypothesis.settings(deadline=None, max_examples=50)
+    def test_roundtrip_property(self, vals):
+        x = jnp.asarray(np.asarray(vals, np.float32))
+        rec = dual_half.from_dual(dual_half.to_dual({"w": x}))["w"]
+        np.testing.assert_allclose(np.asarray(rec), np.asarray(x),
+                                   rtol=2 ** -14, atol=2 ** -14)

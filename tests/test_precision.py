@@ -1,0 +1,223 @@
+"""Core-technique tests: residual splitting (paper Eq. 1), the policy
+ladder (Eq. 2/3 + beyond-paper points), and the paper's qualitative
+error claims, including hypothesis property tests."""
+
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import error as err
+from repro.core import precision as prec
+from repro.core.refined_matmul import peinsum, pmatmul, refined_matmul
+
+# Error ladder, coarse->fine (f32 exact at the end).
+LADDER = ["bf16", "refine_a", "bf16x3", "refine_ab", "bf16x6", "f32"]
+
+
+def _rand(shape, seed=0, lo=-1.0, hi=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, shape).astype(np.float32))
+
+
+# ----------------------------------------------------------- split/merge
+
+class TestSplit:
+    def test_split2_reconstruction_small(self):
+        x = _rand((64, 64), 1)
+        hi, lo = prec.split2(x)
+        assert hi.dtype == jnp.bfloat16 and lo.dtype == jnp.bfloat16
+        rec = prec.merge2(hi, lo)
+        # two bf16 carry >= 15 significand bits -> rel err ~ 2^-16
+        np.testing.assert_allclose(np.asarray(rec), np.asarray(x),
+                                   rtol=0, atol=2.0 ** -15)
+
+    def test_split3_reconstruction_near_exact(self):
+        x = _rand((64, 64), 2)
+        hi, mid, lo = prec.split3(x)
+        rec = (hi.astype(jnp.float32) + mid.astype(jnp.float32)
+               + lo.astype(jnp.float32))
+        # three bf16 carry ~22-24 bits -> essentially fp32-exact on [-1,1]
+        np.testing.assert_allclose(np.asarray(rec), np.asarray(x),
+                                   rtol=0, atol=2.0 ** -21)
+
+    def test_hi_is_bf16_round(self):
+        x = _rand((128,), 3)
+        hi, _ = prec.split2(x)
+        np.testing.assert_array_equal(
+            np.asarray(hi), np.asarray(x.astype(jnp.bfloat16)))
+
+    @hypothesis.given(
+        hnp.arrays(np.float32, (16,),
+                   elements=st.floats(-1e4, 1e4, width=32,
+                                      allow_nan=False, allow_infinity=False)))
+    @hypothesis.settings(deadline=None, max_examples=200)
+    def test_split2_residual_bound_property(self, x):
+        """|x - (hi+lo)| <= 2^-8 * |x - hi|  (lo recovers >=7 more bits)."""
+        xj = jnp.asarray(x)
+        hi, lo = prec.split2(xj)
+        r1 = np.abs(np.asarray(xj - hi.astype(jnp.float32)))
+        r2 = np.abs(np.asarray(xj) - np.asarray(prec.merge2(hi, lo)))
+        # second residual is the bf16 rounding error OF the first residual
+        assert np.all(r2 <= np.maximum(2.0 ** -8 * r1, 1e-30))
+
+    @hypothesis.given(
+        hnp.arrays(np.float32, (8, 8),
+                   elements=st.floats(-64, 64, width=32,
+                                      allow_nan=False, allow_infinity=False)))
+    @hypothesis.settings(deadline=None, max_examples=100)
+    def test_tree_split_merge_roundtrip(self, x):
+        tree = {"a": jnp.asarray(x), "b": {"c": jnp.asarray(x) * 0.5}}
+        hi, lo = prec.tree_split2(tree)
+        rec = prec.tree_merge2(hi, lo)
+        for k, v in jax.tree.leaves_with_path(rec):
+            orig = x if "a" in str(k[0]) else x * 0.5
+            np.testing.assert_allclose(np.asarray(v), orig,
+                                       rtol=2 ** -14, atol=2 ** -14)
+
+
+# ------------------------------------------------------------- policies
+
+class TestPolicyLadder:
+    def test_num_passes(self):
+        assert [prec.num_passes(p) for p in LADDER] == [1, 2, 3, 4, 6, 1]
+        with pytest.raises(ValueError):
+            prec.num_passes("fp8")
+
+    def test_policy_terms_match_passes(self):
+        for p in LADDER[:-1]:
+            assert len(prec.policy_terms(p)) == prec.num_passes(p)
+
+    def test_error_strictly_improves_along_ladder(self):
+        """The paper's central claim (Fig. 8): each refinement level cuts
+        max-norm error vs the fp32 oracle."""
+        n = 256
+        a, b = _rand((n, n), 10), _rand((n, n), 11)
+        oracle = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+        errs = {}
+        for p in LADDER:
+            c = refined_matmul(a, b, policy=p)
+            errs[p] = float(np.max(np.abs(np.asarray(c, np.float64) - oracle)))
+        assert errs["refine_a"] < errs["bf16"]
+        assert errs["bf16x3"] < errs["refine_a"]
+        # refine_ab ~ bf16x3 (RA.RB is O(eps^2)); both well below refine_a
+        assert errs["refine_ab"] < 0.5 * errs["refine_a"]
+        assert errs["bf16x6"] < errs["refine_ab"]
+        # bf16x6 and f32 both sit at the fp32 roundoff floor; bf16x6 can
+        # even WIN (smallest-first term summation) — just check the floor.
+        assert errs["f32"] < errs["bf16"] / 50
+        # the headline: full refinement cuts error by >= ~10x (paper: 10x)
+        assert errs["refine_ab"] < errs["bf16"] / 8
+
+    def test_drop_term_variant_close_to_full(self):
+        """beyond-paper: bf16x3 (drop RA.RB) ~= refine_ab at 3/4 cost."""
+        a, b = _rand((128, 128), 20), _rand((128, 128), 21)
+        oracle = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+        e3 = np.max(np.abs(np.asarray(refined_matmul(a, b, policy="bf16x3"),
+                                      np.float64) - oracle))
+        e4 = np.max(np.abs(np.asarray(refined_matmul(a, b, policy="refine_ab"),
+                                      np.float64) - oracle))
+        assert e3 <= 2.0 * e4 + 1e-12
+
+    def test_error_grows_with_n(self):
+        """Paper Fig. 8: bf16 error grows with matrix size N."""
+        es = []
+        for n in (64, 256, 1024):
+            a, b = _rand((n, n), n), _rand((n, n), n + 1)
+            oracle = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+            c = refined_matmul(a, b, policy="bf16")
+            es.append(np.max(np.abs(np.asarray(c, np.float64) - oracle)))
+        assert es[0] < es[1] < es[2]
+
+    def test_wide_range_inputs(self):
+        """Paper's +-16 experiment. On bf16 there is no overflow cliff
+        (vs fp16's 65504): refinement still recovers ~8 bits/split."""
+        a, b = _rand((256, 256), 30, -16, 16), _rand((256, 256), 31, -16, 16)
+        oracle = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+        e_bf16 = np.max(np.abs(np.asarray(
+            refined_matmul(a, b, policy="bf16"), np.float64) - oracle))
+        e_ref = np.max(np.abs(np.asarray(
+            refined_matmul(a, b, policy="refine_ab"), np.float64) - oracle))
+        assert np.isfinite(e_bf16)           # no inf: bf16 range is fp32's
+        assert e_ref < e_bf16 / 8            # paper saw 35x on fp16
+
+    def test_f32_policy_is_exactish(self):
+        a, b = _rand((64, 64), 40), _rand((64, 64), 41)
+        c = refined_matmul(a, b, policy="f32")
+        np.testing.assert_allclose(
+            np.asarray(c), np.asarray(a) @ np.asarray(b), rtol=1e-6, atol=1e-6)
+
+    @hypothesis.given(st.integers(1, 4), st.integers(1, 4), st.integers(1, 4))
+    @hypothesis.settings(deadline=None, max_examples=20)
+    def test_peinsum_matches_unfused_reference(self, i, j, k):
+        """peinsum decomposition == explicit sum of per-term einsums."""
+        m, kk, n = 8 * i, 8 * j, 8 * k
+        a, b = _rand((m, kk), m * n), _rand((kk, n), m + n)
+        for policy in ("refine_a", "bf16x3", "refine_ab", "bf16x6"):
+            got = peinsum("mk,kn->mn", a, b, policy)
+            a_t = prec.split_for_policy(a, policy)
+            b_t = ((b.astype(jnp.bfloat16),) if policy == "refine_a"
+                   else prec.split_for_policy(b, policy))
+            want = sum(
+                jnp.einsum("mk,kn->mn", a_t[ta], b_t[tb],
+                           preferred_element_type=jnp.float32)
+                for ta, tb in prec.policy_terms(policy))
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-6, atol=1e-6)
+
+
+class TestPolicyObject:
+    def test_family_routing(self):
+        p = prec.PrecisionPolicy(default="bf16", logits="refine_ab")
+        assert p.for_("logits") == "refine_ab"
+        assert p.for_("mlp") == "bf16"
+        assert p.for_("attention") == "bf16"
+
+    def test_rejects_unknown(self):
+        with pytest.raises(ValueError):
+            prec.PrecisionPolicy(default="fp8")
+
+    def test_uniform_and_mixed(self):
+        assert prec.PrecisionPolicy.uniform("f32").for_("moe") == "f32"
+        hpc = prec.PrecisionPolicy.mixed_hpc()
+        assert hpc.for_("logits") == "bf16x3"
+
+    def test_is_pytree_static(self):
+        """Policy must be jit-static (registered dataclass, all-static)."""
+        p = prec.PrecisionPolicy.uniform("bf16")
+        leaves = jax.tree.leaves(p)
+        assert leaves == [] or all(isinstance(x, str) for x in leaves)
+
+
+class TestErrorMetrics:
+    def test_max_norm(self):
+        a = jnp.array([[1.0, 2.0], [3.0, 4.0]])
+        b = jnp.array([[1.0, 2.5], [3.0, 3.0]])
+        assert err.max_norm_error(a, b) == pytest.approx(1.0)
+
+    def test_random_operands_deterministic(self):
+        a1, b1 = err.random_operands(32, seed=7)
+        a2, b2 = err.random_operands(32, seed=7)
+        np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+        np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+
+    def test_error_report_orders_policies(self):
+        a, b = err.random_operands(128, seed=3)
+        rep = err.error_report(a, b, {
+            p: refined_matmul(a, b, policy=p) for p in ("bf16", "refine_ab")})
+        assert rep["refine_ab"]["max_vs_f64"] < rep["bf16"]["max_vs_f64"]
+        assert rep["refine_ab"]["rel_fro_vs_f64"] < rep["bf16"]["rel_fro_vs_f64"]
+
+
+class TestPmatmulShapes:
+    def test_batched_lhs(self):
+        a, b = _rand((2, 3, 16), 1), _rand((16, 8), 2)
+        out = pmatmul(a, b, "refine_a")
+        assert out.shape == (2, 3, 8) and out.dtype == jnp.float32
+
+    def test_rejects_bad_shapes(self):
+        with pytest.raises(ValueError):
+            pmatmul(_rand((4, 4), 0), _rand((2, 4, 4), 1))

@@ -1,0 +1,121 @@
+"""Prefill+decode vs full-forward consistency: the strongest cache-
+semantics test. For each stateful family we (1) run the full sequence
+through `train`-mode forward, (2) run prefill on the prefix + decode the
+remaining tokens one by one, and assert the per-position logits agree.
+
+Run in f32 policy so precision noise cannot hide indexing bugs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core.precision import PrecisionPolicy
+from repro.models import api
+from repro.runtime import serve_step
+
+POLICY = PrecisionPolicy.uniform("f32")
+B = 2
+
+
+def _f32(cfg):
+    import dataclasses
+    # MoE: capacity_factor >= num_experts makes capacity = t*top_k, i.e.
+    # dropless — required for prefill/forward consistency, since capacity
+    # DROPPING depends on total token count t (train t != prefill t).
+    # Decode is natively dropless (moe_ffn dropless=True on that path).
+    cf = max(cfg.capacity_factor, float(cfg.num_experts or 1))
+    return dataclasses.replace(cfg, activation_dtype="float32",
+                               capacity_factor=cf)
+
+
+def _roundtrip(arch: str, s_total: int = 12, s_prefix: int = 7,
+               atol: float = 2e-2):
+    cfg = _f32(get_smoke(arch))
+    key = jax.random.PRNGKey(11)
+    params = api.init_params(key, cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (B, s_total), 0,
+                                cfg.vocab_size)
+
+    batch_full = {"tokens": tokens}
+    batch_pre = {"tokens": tokens[:, :s_prefix]}
+    n_img = cfg.num_image_tokens if cfg.family == "vlm" else 0
+    if cfg.family == "audio":
+        frames = jax.random.normal(
+            jax.random.PRNGKey(7), (B, cfg.encoder_seq, cfg.d_model))
+        batch_full["frames"] = batch_pre["frames"] = frames
+    if cfg.family == "vlm":
+        img = jax.random.normal(
+            jax.random.PRNGKey(8), (B, n_img, cfg.d_model))
+        batch_full["image_embeds"] = batch_pre["image_embeds"] = img
+
+    # Reference: full forward logits at every position.
+    if cfg.family == "audio":
+        from repro.models import encdec as E
+        ref_logits, _, _ = E.forward(params, tokens, batch_full["frames"],
+                                     cfg, policy=POLICY, mode="train")
+    elif cfg.family == "vlm":
+        from repro.models import vlm as V
+        ref_logits, _, _ = V.forward(params, tokens,
+                                     batch_full["image_embeds"], cfg,
+                                     policy=POLICY, mode="train")
+    else:
+        from repro.models import transformer as T
+        ref_logits, _, _ = T.forward(params, tokens, cfg, policy=POLICY,
+                                     mode="train")
+
+    # Prefill prefix, pad cache to capacity, then decode token by token.
+    s_ctx = api.context_len(cfg, s_total)
+    prefill = serve_step.make_prefill(cfg, POLICY, s_ctx=s_ctx)
+    decode = serve_step.make_decode(cfg, POLICY)
+    logits_p, cache = prefill(params, batch_pre)
+    np.testing.assert_allclose(
+        np.asarray(logits_p[:, -1], np.float32),
+        np.asarray(ref_logits[:, n_img + s_prefix - 1], np.float32),
+        rtol=0, atol=atol, err_msg=f"{arch}: prefill last-logit mismatch")
+
+    for t in range(s_prefix, s_total):
+        tok = tokens[:, t:t + 1]
+        pos = jnp.asarray(n_img + t, jnp.int32)
+        logits_d, cache = decode(params, cache, tok, pos)
+        np.testing.assert_allclose(
+            np.asarray(logits_d[:, 0], np.float32),
+            np.asarray(ref_logits[:, n_img + t], np.float32),
+            rtol=0, atol=atol,
+            err_msg=f"{arch}: decode@{t} logits diverge from forward")
+
+
+# One test per stateful family (covers: global attn GQA, local ring-buffer
+# attn, 5:1 mixed local/global, moe+SWA, mamba2+shared-attn hybrid, rwkv6
+# recurrence, enc-dec cross-attn, vlm image-prefix offsets).
+
+@pytest.mark.parametrize("arch", [
+    "starcoder2-15b",   # pure global GQA
+    "gemma3-1b",        # 5:1 local(window ring buffer):global
+    "mixtral-8x7b",     # MoE + sliding-window attention
+    "dbrx-132b",        # MoE, global attn
+    "zamba2-7b",        # mamba2 + shared_attn hybrid
+    "rwkv6-7b",         # rwkv6 recurrence
+    "whisper-medium",   # enc-dec with cross-attention cache
+    "internvl2-76b",    # vlm image-prefix position offsets
+])
+def test_prefill_decode_matches_forward(arch):
+    _roundtrip(arch)
+
+
+def test_window_ring_buffer_long_decode():
+    """Decode far past the window: ring buffer must keep exactly the last
+    `window` tokens (gemma3-style local layers)."""
+    cfg = _f32(get_smoke("gemma3-1b"))
+    assert cfg.window is not None
+    s_total = cfg.window + 9            # decode well past one window
+    _roundtrip("gemma3-1b", s_total=s_total, s_prefix=5)
+
+
+def test_prefill_longer_than_window():
+    """Prefill itself longer than the window: cache must hold the LAST
+    window tokens in ring order."""
+    cfg = _f32(get_smoke("mixtral-8x7b"))
+    _roundtrip("mixtral-8x7b", s_total=cfg.window + 8,
+               s_prefix=cfg.window + 3)
