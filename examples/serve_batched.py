@@ -41,11 +41,16 @@ def main() -> None:
             for i in range(args.requests)]
     stats = eng.run(reqs)
     print(f"served {stats['requests']} requests | {stats['ticks']} engine "
-          f"ticks | {stats['tok_per_s']:.1f} tok/s (CPU smoke scale)")
+          f"ticks | {stats['tokens']} tokens | "
+          f"{stats['tok_per_s']:.1f} tok/s (CPU smoke scale)")
+    print(f"latency: mean {stats['latency_mean_s'] * 1e3:.0f}ms, "
+          f"max {stats['latency_max_s'] * 1e3:.0f}ms "
+          f"(mean queue wait {stats['queue_mean_s'] * 1e3:.0f}ms)")
     assert all(r.done for r in reqs)
     for r in reqs[:4]:
         print(f"  req {r.rid}: prompt[:4]={r.prompt[:4].tolist()} -> "
-              f"out[:6]={r.out_tokens[:6]}")
+              f"out[:6]={r.out_tokens[:6]} "
+              f"({r.latency_s * 1e3:.0f}ms)")
 
 
 if __name__ == "__main__":

@@ -30,7 +30,19 @@ import json
 import re
 from dataclasses import dataclass, field
 
-__all__ = ["analyze_hlo", "HloCost"]
+__all__ = ["analyze_hlo", "HloCost", "compiled_cost"]
+
+
+def compiled_cost(compiled) -> dict:
+    """Normalized ``compiled.cost_analysis()`` across jax versions.
+
+    Older jax returns a single-element LIST of per-program dicts; newer
+    returns the dict directly. Always returns a plain dict.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,

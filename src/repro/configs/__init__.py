@@ -78,6 +78,8 @@ def input_specs(cfg: ModelConfig, shape: ShapeSpec | str) -> dict:
     if shape.mode == "decode":
         return {
             "tokens": tok(1),
-            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+            # per-slot position vector: continuous batching admits rows
+            # at different ticks, so every row has its own position
+            "pos": jax.ShapeDtypeStruct((b,), jnp.int32),
         }
     raise ValueError(f"unknown mode {shape.mode!r}")

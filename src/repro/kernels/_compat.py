@@ -1,0 +1,12 @@
+"""jax version-compatibility shims for the Pallas TPU kernels.
+
+``pltpu.TPUCompilerParams`` was renamed ``pltpu.CompilerParams`` in
+newer jax; resolve whichever this runtime provides once, here.
+"""
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

@@ -119,6 +119,12 @@ def gemm_batched(
         raise ValueError(f"unknown backend {backend!r}")
 
     pack = tile // n
+    if pack == 0:
+        # n > tile: nothing to pack — the packing kernel is built for
+        # MANY-small problems (paper §V). Large per-problem GEMMs route
+        # to the vendor (XLA) batched path instead of dividing by zero.
+        return gemm_batched(a, b, backend="xla", tile=tile,
+                            interpret=interpret)
     pad = (-g) % pack
     if pad:
         a = jnp.concatenate([a, jnp.zeros((pad, n, n), a.dtype)], axis=0)

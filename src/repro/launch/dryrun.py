@@ -30,7 +30,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
-from repro.analysis.hlo_cost import analyze_hlo
+from repro.analysis.hlo_cost import analyze_hlo, compiled_cost
 from repro.configs import ARCHS, LM_SHAPES, get_config, input_specs
 from repro.configs.base import ModelConfig, ShapeSpec
 from repro.core.precision import PrecisionPolicy
@@ -195,7 +195,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             lowered = jitted.lower(*args)
             compiled = lowered.compile()
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = compiled_cost(compiled)
         hlo = compiled.as_text()
         coll = collective_bytes(hlo)
         # trip-count-aware per-chip costs (cost_analysis counts while

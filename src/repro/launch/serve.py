@@ -2,20 +2,28 @@
 single-token decode with a pre-allocated, shardable KV cache.
 
 Serving model (the decode_32k / long_500k cells' runtime twin):
-  * requests arrive with a prompt; a batch slot is assigned;
-  * prefill ingests the prompt and writes the slot's cache region;
-  * every engine tick decodes ONE token for ALL active slots (the
-    decode cell the dry-run lowers);
-  * finished slots (EOS or max tokens) are freed for new requests.
+  * requests enter an admission queue; a free batch slot is assigned;
+  * prefill ingests the prompt and splices the slot's cache region;
+  * every engine tick decodes ONE token for ALL slots at their OWN
+    per-slot positions (the jit'd cell from serve_step.make_engine_tick)
+    — slots admitted at different ticks attend, rotate and write their
+    KV rows at different absolute positions;
+  * per-slot active/EOS/length lifecycle masking happens in-graph; the
+    host reads back only small (B,) vectors per tick, never the logits;
+  * finished slots are recycled for queued requests.
 
-On real hardware the decode step is jit'd once against the full-capacity
-cache and slots are swapped in place; this CPU-scale driver runs the
-same code paths with smoke configs (examples/serve_batched.py).
+A staggered batch therefore produces token-for-token the same outputs
+as serving each request alone (tests/test_serve_consistency.py).
+
+On real hardware the tick is jit'd once against the full-capacity cache
+and slots are swapped in place; this CPU-scale driver runs the same
+code paths with smoke configs (examples/serve_batched.py).
 """
 
 from __future__ import annotations
 
 import argparse
+import collections
 import dataclasses
 import time
 
@@ -38,10 +46,35 @@ class Request:
     max_new_tokens: int = 16
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # latency accounting (engine-relative wall clock, seconds)
+    t_submit: float | None = None
+    t_admit: float | None = None
+    t_done: float | None = None
+
+    @property
+    def latency_s(self) -> float | None:
+        """Submit-to-completion latency (None until done)."""
+        if self.t_submit is None or self.t_done is None:
+            return None
+        return self.t_done - self.t_submit
+
+    @property
+    def queue_s(self) -> float | None:
+        """Time spent waiting for a free slot (None until admitted)."""
+        if self.t_submit is None or self.t_admit is None:
+            return None
+        return self.t_admit - self.t_submit
 
 
 class ServeEngine:
-    """Fixed-batch continuous-batching engine (slot-based)."""
+    """Slot-based continuous-batching engine with per-slot positions.
+
+    Slot state lives on device as (B,) vectors — last token, position,
+    active mask, remaining-token budget — and the decode tick advances
+    all of it inside one jit'd call. The host only touches per-slot
+    state at admission (prefill + cache splice) and when draining the
+    small per-tick token/finished vectors into Request objects.
+    """
 
     def __init__(self, cfg, *, batch_size: int, max_ctx: int,
                  policy: PrecisionPolicy | None = None, eos_id: int = 1):
@@ -51,17 +84,30 @@ class ServeEngine:
         self.policy = policy or PrecisionPolicy.uniform("bf16")
         self.eos_id = eos_id
         self.params = None
-        self._decode = jax.jit(serve_step.make_decode(cfg, self.policy))
+        self._tick = jax.jit(serve_step.make_engine_tick(
+            cfg, self.policy, eos_id=eos_id, max_ctx=max_ctx))
         self._prefill = jax.jit(
             serve_step.make_prefill(cfg, self.policy, s_ctx=max_ctx))
-        # slot state
+        # slot state (device-resident between ticks)
         self.cache = None
         self.slot_req: list[Request | None] = [None] * batch_size
-        self.slot_pos = np.zeros(batch_size, np.int32)
+        self.last_tok = jnp.zeros(batch_size, jnp.int32)
+        self.pos = jnp.zeros(batch_size, jnp.int32)
+        self.active = jnp.zeros(batch_size, bool)
+        self.remaining = jnp.zeros(batch_size, jnp.int32)
+        # admission queue + engine counters
+        self.queue: collections.deque[Request] = collections.deque()
+        self.ticks = 0
+        self.tokens_generated = 0
 
     def load(self, params) -> None:
         self.params = params
-        self.cache = api.init_cache(self.cfg, self.batch, self.max_ctx)
+        # cache in the activation dtype: decode writes splice activation
+        # rows in, and a dtype mismatch would silently round-trip keys
+        # through a narrower type only on the batched path
+        self.cache = api.init_cache(
+            self.cfg, self.batch, self.max_ctx,
+            jnp.dtype(self.cfg.activation_dtype))
 
     # ------------------------------------------------------------ slots
 
@@ -71,16 +117,44 @@ class ServeEngine:
                 return i
         return None
 
+    def _validate(self, req: Request) -> None:
+        n_img = (self.cfg.num_image_tokens
+                 if self.cfg.family == "vlm" else 0)
+        if n_img + len(req.prompt) >= self.max_ctx:
+            raise ValueError(
+                f"request {req.rid}: prompt length {len(req.prompt)}"
+                f"{f' (+{n_img} image tokens)' if n_img else ''} does not "
+                f"fit the engine context (max_ctx={self.max_ctx})")
+
+    def submit(self, req: Request) -> None:
+        """Queue a request for admission at the next free slot.
+
+        Raises ValueError up front for prompts that cannot fit the
+        engine context, so an oversized request never poisons the queue.
+        """
+        self._validate(req)
+        if req.t_submit is None:
+            req.t_submit = time.time()
+        self.queue.append(req)
+
     def admit(self, req: Request) -> bool:
         """Prefill `req` into a free slot. Returns False if none free.
 
         Single-request prefill: runs the prompt through the prefill path
         and splices the resulting caches into the batch cache at the
-        slot index (tree-wise dynamic update on the batch axis).
+        slot index (tree-wise dynamic update on the batch axis). The
+        prompt's first sampled token counts against max_new_tokens and
+        may itself be EOS — then the request completes without ever
+        occupying a decode slot.
         """
         slot = self._free_slot()
         if slot is None:
             return False
+        self._validate(req)
+        if req.t_submit is None:
+            req.t_submit = time.time()
+        n_img = (self.cfg.num_image_tokens
+                 if self.cfg.family == "vlm" else 0)
         prompt = jnp.asarray(req.prompt)[None]              # (1, S)
         batch = {"tokens": prompt}
         if self.cfg.family == "audio":
@@ -100,11 +174,21 @@ class ServeEngine:
                 full, one[:, 0].astype(full.dtype), slot, axis=1)
 
         self.cache = jax.tree.map(splice, self.cache, cache1)
+        req.t_admit = time.time()
+        first = int(jnp.argmax(logits[0, -1]))
+        req.out_tokens.append(first)
+        self.tokens_generated += 1
+        if first == self.eos_id or req.max_new_tokens <= 1:
+            # EOS (or a 1-token budget) straight out of prefill: the
+            # request is done; the slot stays free for the next one.
+            req.done = True
+            req.t_done = time.time()
+            return True
         self.slot_req[slot] = req
-        n_img = (self.cfg.num_image_tokens
-                 if self.cfg.family == "vlm" else 0)
-        self.slot_pos[slot] = n_img + len(req.prompt)
-        req.out_tokens.append(int(jnp.argmax(logits[0, -1])))
+        self.last_tok = self.last_tok.at[slot].set(first)
+        self.pos = self.pos.at[slot].set(n_img + len(req.prompt))
+        self.active = self.active.at[slot].set(True)
+        self.remaining = self.remaining.at[slot].set(req.max_new_tokens - 1)
         return True
 
     # ------------------------------------------------------------- tick
@@ -112,52 +196,81 @@ class ServeEngine:
     def tick(self) -> int:
         """One engine step: decode one token for every active slot.
 
-        NOTE position handling: the jit'd decode step takes one scalar
-        pos; slots admitted at different times have different positions,
-        so the engine ticks the batch with per-slot last tokens and the
-        max position, masking inactive slots. (Real deployments pass a
-        per-slot position vector; the smoke models here use one scalar —
-        acceptable because examples admit aligned batches.)
+        Every slot decodes at its OWN position (pos is a (B,) vector);
+        lifecycle masking (inactive freeze, EOS, token budget, context
+        bound) happens inside the jit'd tick. Returns the number of
+        tokens decoded this tick (= active slots at entry).
         """
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
-        if not active:
+        active_before = np.asarray(self.active)
+        n_active = int(active_before.sum())
+        if n_active == 0:
             return 0
-        last = np.zeros((self.batch, 1), np.int32)
-        for i in active:
-            last[i, 0] = self.slot_req[i].out_tokens[-1]
-        pos = jnp.asarray(int(self.slot_pos[active].max()), jnp.int32)
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(last), pos)
-        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
-        done = 0
-        for i in active:
+        (self.cache, self.last_tok, self.pos, self.remaining,
+         self.active, finished) = self._tick(
+            self.params, self.cache, self.last_tok, self.pos,
+            self.active, self.remaining)
+        nxt = np.asarray(self.last_tok)
+        fin = np.asarray(finished)
+        now = time.time()
+        for i in np.flatnonzero(active_before):
             r = self.slot_req[i]
             r.out_tokens.append(int(nxt[i]))
-            self.slot_pos[i] += 1
-            if (nxt[i] == self.eos_id
-                    or len(r.out_tokens) >= r.max_new_tokens
-                    or self.slot_pos[i] >= self.max_ctx - 1):
+            if fin[i]:
                 r.done = True
+                r.t_done = now
                 self.slot_req[i] = None
-                done += 1
-        return done
+        self.ticks += 1
+        self.tokens_generated += n_active
+        return n_active
+
+    def step(self) -> int:
+        """Admit as many queued requests as slots allow, then tick."""
+        while self.queue and self.admit(self.queue[0]):
+            self.queue.popleft()
+        return self.tick()
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and all(r is None for r in self.slot_req)
+
+    def stats(self, requests: list[Request], wall_s: float) -> dict:
+        lat = [r.latency_s for r in requests if r.latency_s is not None]
+        qs = [r.queue_s for r in requests if r.queue_s is not None]
+        return {
+            "requests": len(requests),
+            "ticks": self.ticks,
+            "tokens": self.tokens_generated,
+            "wall_s": wall_s,
+            "tok_per_s": self.tokens_generated / max(wall_s, 1e-9),
+            "latency_mean_s": float(np.mean(lat)) if lat else 0.0,
+            "latency_max_s": float(np.max(lat)) if lat else 0.0,
+            "queue_mean_s": float(np.mean(qs)) if qs else 0.0,
+        }
 
     def run(self, requests: list[Request]) -> dict:
-        """Serve all requests to completion; returns throughput stats."""
-        pending = list(requests)
+        """Serve all requests to completion; returns throughput stats.
+
+        Token accounting happens inside tick()/admit() — counted at
+        decode time, BEFORE finished slots are recycled, so the final
+        token of every request (and the prefill-sampled first token) is
+        included.
+        """
         t0 = time.time()
-        ticks = tokens = 0
-        while pending or any(r is not None for r in self.slot_req):
-            while pending and self.admit(pending[0]):
-                pending.pop(0)
-            self.tick()
-            ticks += 1
-            tokens += sum(r is not None for r in self.slot_req)
-            if ticks > 10_000:
+        ticks0, tokens0 = self.ticks, self.tokens_generated
+        for req in requests:
+            self.submit(req)
+        guard = 0
+        while not self.idle:
+            self.step()
+            guard += 1
+            if guard > 10_000:
                 raise RuntimeError("serve loop did not converge")
-        dt = time.time() - t0
-        return {"requests": len(requests), "ticks": ticks,
-                "wall_s": dt, "tok_per_s": tokens / max(dt, 1e-9)}
+        stats = self.stats(requests, time.time() - t0)
+        # per-RUN deltas: the engine counters are lifetime-cumulative
+        stats["ticks"] -= ticks0
+        stats["tokens"] -= tokens0
+        stats["tok_per_s"] = stats["tokens"] / max(stats["wall_s"], 1e-9)
+        return stats
 
 
 def main() -> None:
@@ -182,7 +295,8 @@ def main() -> None:
             for i in range(args.requests)]
     stats = eng.run(reqs)
     print(f"served {stats['requests']} requests in {stats['ticks']} ticks "
-          f"({stats['wall_s']:.2f}s, {stats['tok_per_s']:.1f} tok/s)")
+          f"({stats['wall_s']:.2f}s, {stats['tok_per_s']:.1f} tok/s, "
+          f"mean latency {stats['latency_mean_s'] * 1e3:.0f}ms)")
     for r in reqs[:3]:
         print(f"  req {r.rid}: {len(r.out_tokens)} tokens "
               f"{r.out_tokens[:8]}...")

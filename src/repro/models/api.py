@@ -83,7 +83,13 @@ def prefill(params: dict, batch: dict[str, jax.Array], cfg: ModelConfig, *,
 
 def decode(params: dict, cache: dict, tokens: jax.Array, pos: jax.Array,
            cfg: ModelConfig, *, policy: PrecisionPolicy):
-    """One decode step: tokens (B,1) at absolute position ``pos``."""
+    """One decode step: tokens (B,1), ``pos`` the PER-ROW absolute
+    position vector (B,) int32 — continuous-batching slots admitted at
+    different ticks decode at different positions. A scalar ``pos`` is
+    accepted for convenience and broadcast to every row."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (tokens.shape[0],))
     if cfg.family == "audio":
         logits, new_cache, _ = E.forward(
             params, tokens, None, cfg, policy=policy, mode="decode",

@@ -154,7 +154,7 @@ def attention(
     softcap: float | None = None,
     causal: bool = True,                   # False for encoder self-attn
     cache: AttnCache | None = None,
-    pos: jax.Array | None = None,          # decode: scalar int32 position
+    pos: jax.Array | None = None,          # decode: (B,) int32 positions
     cross_kv: AttnCache | None = None,     # cross-attention: attend here
     kv_chunk: int = 2048,  # §Perf A6: fewer online-softmax acc round trips
 ) -> tuple[jax.Array, AttnCache | None]:
@@ -211,29 +211,35 @@ def attention(
                 new_cache = AttnCache(k=k, v=v)
     elif mode == "decode":
         assert cache is not None and pos is not None and s == 1
+        # pos is a PER-ROW position vector (B,): slots in a continuous-
+        # batching engine are admitted at different ticks, so every row
+        # rotates, writes and masks at its own absolute position.
+        pos = jnp.broadcast_to(pos, (b,))
         s_cache = cache.k.shape[1]
         if rope_theta is not None:
-            sin, cos = rope_table(pos[None], head_dim, rope_theta, dtype)
+            sin, cos = rope_table(pos[:, None], head_dim, rope_theta,
+                                  dtype)                 # (B,1,hd/2)
             q = apply_rope(
                 q.reshape(b, 1, num_heads, head_dim), sin, cos
             ).reshape(b, 1, num_kv_heads, grp, head_dim)
             k = apply_rope(k.astype(dtype), sin, cos)
         k, v = k.astype(dtype), v.astype(dtype)
 
-        slot = pos % s_cache if window is not None else pos
-        ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k, slot, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v, slot, axis=1)
+        slot = pos % s_cache if window is not None else pos       # (B,)
+        row = jnp.arange(b)
+        ck = cache.k.at[row, slot].set(k[:, 0].astype(cache.k.dtype))
+        cv = cache.v.at[row, slot].set(v[:, 0].astype(cache.v.dtype))
         new_cache = AttnCache(k=ck, v=cv)
 
-        jdx = jnp.arange(s_cache)
+        jdx = jnp.arange(s_cache)[None, :]               # (1, S)
         if window is not None:
-            # Absolute position held in slot j after writing token `pos`.
-            abs_pos = pos - ((pos - jdx) % s_cache)
-            keep = abs_pos >= 0
+            # Absolute position held in slot j after row i wrote pos[i].
+            abs_pos = pos[:, None] - ((pos[:, None] - jdx) % s_cache)
+            keep = abs_pos >= 0                          # (B, S)
         else:
-            keep = jdx <= pos
+            keep = jdx <= pos[:, None]                   # (B, S)
         sc = _scores(q, ck, policy, softcap)             # (B,Kv,G,1,S)
-        sc = jnp.where(keep[None, None, None, None], sc, NEG_INF)
+        sc = jnp.where(keep[:, None, None, None], sc, NEG_INF)
         pr = jax.nn.softmax(sc, axis=-1)
         out = _values(pr.astype(dtype), cv, policy)
     else:

@@ -270,6 +270,8 @@ def forward(params: dict, tokens: jax.Array, cfg: ModelConfig, *,
 
     tokens: (B, S) int32. extra_embeds: (B, S_img, D) prepended (VLM).
     mode: train | prefill | decode | encode (encode = non-causal, no loss).
+    decode: ``pos`` is the per-row position vector (B,) — rows admitted
+    at different engine ticks decode at different absolute positions.
     Returns (logits | hidden, new_cache, aux_loss). For mode="encode"
     returns hidden states instead of logits.
     """
@@ -287,11 +289,13 @@ def forward(params: dict, tokens: jax.Array, cfg: ModelConfig, *,
     if pos_embed_key in params and cfg.rope_theta is None:
         s = x.shape[1]
         if mode == "decode":
-            pe = jax.lax.dynamic_slice_in_dim(
-                params[pos_embed_key]["table"], pos, 1, axis=0)
+            # per-row positions (B,): gather one embedding per slot
+            pe = params[pos_embed_key]["table"][
+                jnp.broadcast_to(pos, (x.shape[0],))]       # (B, D)
+            x = x + pe.astype(dtype)[:, None, :]
         else:
             pe = params[pos_embed_key]["table"][:s]
-        x = x + pe.astype(dtype)[None]
+            x = x + pe.astype(dtype)[None]
 
     shared = params.get("shared")
     new_cache: dict[str, Any] = {}

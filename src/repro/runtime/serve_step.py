@@ -20,8 +20,8 @@ from repro.core.precision import PrecisionPolicy
 from repro.models import api
 from repro.models.attention import AttnCache
 
-__all__ = ["make_prefill", "make_decode", "pad_cache", "abstract_cache",
-           "abstract_params"]
+__all__ = ["make_prefill", "make_decode", "make_engine_tick", "pad_cache",
+           "abstract_cache", "abstract_params"]
 
 
 def _attn_capacity(kind: str, cfg: ModelConfig, s_ctx: int) -> int | None:
@@ -65,12 +65,46 @@ def make_prefill(cfg: ModelConfig, policy: PrecisionPolicy, *,
 
 
 def make_decode(cfg: ModelConfig, policy: PrecisionPolicy):
-    """decode(params, cache, tokens (B,1), pos ()) -> (logits, cache)."""
+    """decode(params, cache, tokens (B,1), pos (B,)) -> (logits, cache).
+
+    ``pos`` is the per-row position vector; a scalar broadcasts.
+    """
 
     def decode(params, cache, tokens, pos):
         return api.decode(params, cache, tokens, pos, cfg, policy=policy)
 
     return decode
+
+
+def make_engine_tick(cfg: ModelConfig, policy: PrecisionPolicy, *,
+                     eos_id: int, max_ctx: int):
+    """One continuous-batching engine tick, fully jit-compatible.
+
+    tick(params, cache, last_tok (B,), pos (B,), active (B,) bool,
+         remaining (B,)) -> (cache, next_tok, pos, remaining, active,
+                             finished)
+
+    Decodes one token for EVERY slot at its own position, then applies
+    the per-slot lifecycle masks in-graph: inactive rows keep their
+    state frozen (their decode output is discarded), active rows advance
+    their position, burn one remaining-token credit, and finish on EOS,
+    token-budget exhaustion, or context exhaustion. The host only ever
+    reads back the small (B,) vectors — no per-token cache surgery or
+    logits transfer on the hot path.
+    """
+
+    def tick(params, cache, last_tok, pos, active, remaining):
+        logits, cache = api.decode(
+            params, cache, last_tok[:, None], pos, cfg, policy=policy)
+        sampled = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        nxt = jnp.where(active, sampled, last_tok)
+        new_pos = jnp.where(active, pos + 1, pos)
+        new_rem = jnp.where(active, remaining - 1, remaining)
+        finished = active & ((nxt == eos_id) | (new_rem <= 0)
+                             | (new_pos >= max_ctx - 1))
+        return cache, nxt, new_pos, new_rem, active & ~finished, finished
+
+    return tick
 
 
 # ------------------------------------------------------------- abstract

@@ -156,8 +156,12 @@ class Sharder:
         out = {}
         for name, leaf in batch.items():
             shape = leaf.shape
-            if name == "pos" or len(shape) == 0:
+            if len(shape) == 0:
                 out[name] = self.ns(P())
+                continue
+            if name == "pos":
+                # (B,) per-slot positions: sharded with the batch rows
+                out[name] = self.ns(P(self._dp(shape[0])))
                 continue
             b = shape[0]
             dp = self._dp(b)

@@ -111,7 +111,8 @@ class TestArchSmoke:
         logits, cache = api.prefill(params, batch, cfg, policy=POLICY)
         assert logits.shape[0] == B and logits.shape[-1] == cfg.vocab_size
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        pos = jnp.asarray(
+        pos = jnp.full(
+            (B,),
             S + (cfg.num_image_tokens if cfg.family == "vlm" else 0),
             jnp.int32)
         logits2, cache2 = api.decode(params, cache, nxt, pos, cfg,

@@ -33,7 +33,8 @@ class TestFlops:
         assert _cost(scanned, *xw).flops == 10 * BASE
         # XLA's own cost_analysis undercounts this exact case:
         x, w = xw
-        raw = jax.jit(scanned).lower(x, w).compile().cost_analysis()["flops"]
+        from repro.analysis.hlo_cost import compiled_cost
+        raw = compiled_cost(jax.jit(scanned).lower(x, w).compile())["flops"]
         assert raw < 2 * BASE  # the bug we correct for
 
     def test_nested_scans(self, xw):

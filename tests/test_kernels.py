@@ -5,12 +5,13 @@ Sweeps cover: shapes (MXU-aligned and ragged via the padded ops wrapper),
 dtypes (f32/bf16 inputs), block shapes, and every refinement policy the
 fused kernel implements."""
 
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.kernels import ops, ref
 from repro.kernels.batched_gemm import batched_gemm, batched_gemm_naive

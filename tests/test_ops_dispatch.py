@@ -1,0 +1,41 @@
+"""Dispatch-layer regressions for repro.kernels.ops that must run even
+when hypothesis is unavailable (the property sweeps in test_kernels
+importorskip it; these guard the wrapper logic itself)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def test_gemm_batched_n_larger_than_tile_falls_back():
+    """n > tile used to divide by zero (pack = tile // n == 0); the
+    packing kernel is for many-SMALL problems, so large per-problem
+    GEMMs must route to the XLA batched path instead."""
+    g, n = 3, 160                       # n > tile=128
+    a, b = _rand(0, (g, n, n)), _rand(1, (g, n, n))
+    out = ops.gemm_batched(a, b, tile=128)
+    assert out.shape == (g, n, n) and out.dtype == jnp.float32
+    ref = np.einsum("gij,gjk->gik", np.asarray(a, np.float64),
+                    np.asarray(b, np.float64))
+    # bf16-input / f32-accumulate path: loose elementwise tolerance
+    np.testing.assert_allclose(np.asarray(out, np.float64), ref,
+                               rtol=0.05, atol=0.5)
+
+
+def test_gemm_batched_small_n_packs():
+    """The packing path itself (n <= tile, G not a multiple of the pack
+    factor) still matches the dense reference."""
+    g, n = 5, 8                         # pack = 128 // 8 = 16, pad g->16
+    a, b = _rand(2, (g, n, n)), _rand(3, (g, n, n))
+    out = ops.gemm_batched(a, b, tile=128)
+    assert out.shape == (g, n, n)
+    ref = np.einsum("gij,gjk->gik", np.asarray(a, np.float64),
+                    np.asarray(b, np.float64))
+    np.testing.assert_allclose(np.asarray(out, np.float64), ref,
+                               rtol=0.05, atol=0.5)

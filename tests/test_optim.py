@@ -2,12 +2,13 @@
 compensated gradient compression (the paper's Eq. 1 applied to comms),
 and (hi,lo) bf16 dual master weights."""
 
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.optim import adamw, compression, dual_half, loss_scale
 

@@ -2,13 +2,14 @@
 ladder (Eq. 2/3 + beyond-paper points), and the paper's qualitative
 error claims, including hypothesis property tests."""
 
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+hnp = pytest.importorskip("hypothesis.extra.numpy")
+st = pytest.importorskip("hypothesis.strategies")
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import error as err
 from repro.core import precision as prec

@@ -178,7 +178,8 @@ MESH_PROG = textwrap.dedent("""
                 pspecs, ospecs, sh.batch_specs(specs))).lower(
                     aparams, aopt, specs)
             compiled = lowered.compile()
-        assert compiled.cost_analysis()["flops"] > 0
+        from repro.analysis.hlo_cost import compiled_cost
+        assert compiled_cost(compiled)["flops"] > 0
         print("mesh-compile ok:", arch, flush=True)
     print("ALL_OK")
 """)

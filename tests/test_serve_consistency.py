@@ -77,7 +77,7 @@ def _roundtrip(arch: str, s_total: int = 12, s_prefix: int = 7,
 
     for t in range(s_prefix, s_total):
         tok = tokens[:, t:t + 1]
-        pos = jnp.asarray(n_img + t, jnp.int32)
+        pos = jnp.full((B,), n_img + t, jnp.int32)   # per-row positions
         logits_d, cache = decode(params, cache, tok, pos)
         np.testing.assert_allclose(
             np.asarray(logits_d[:, 0], np.float32),
@@ -119,3 +119,148 @@ def test_prefill_longer_than_window():
     cfg = _f32(get_smoke("mixtral-8x7b"))
     _roundtrip("mixtral-8x7b", s_total=cfg.window + 8,
                s_prefix=cfg.window + 3)
+
+
+# ============================================================ serve engine
+# Continuous-batching engine parity: slots admitted at DIFFERENT ticks
+# (per-slot position vectors) must reproduce the batch-of-one outputs
+# token for token. This is the oracle for the shared-scalar-pos bug.
+
+from repro.launch.serve import Request, ServeEngine  # noqa: E402
+from repro.models.attention import AttnCache  # noqa: E402
+
+MAX_CTX = 32
+
+
+def _engine(cfg, params, batch_size):
+    eng = ServeEngine(cfg, batch_size=batch_size, max_ctx=MAX_CTX,
+                      policy=POLICY)
+    eng.load(params)
+    return eng
+
+
+@pytest.mark.parametrize("arch", [
+    "starcoder2-15b",   # pure global GQA
+    "gemma3-1b",        # 5:1 local(window ring buffer):global
+    "mixtral-8x7b",     # MoE + sliding-window attention
+    "dbrx-132b",        # MoE, global attn
+    "zamba2-7b",        # mamba2 + shared_attn hybrid
+    "rwkv6-7b",         # rwkv6 recurrence
+    "whisper-medium",   # enc-dec with cross-attention cache
+    "internvl2-76b",    # vlm image-prefix position offsets
+])
+def test_staggered_admission_matches_single(arch):
+    """4 requests with different prompt lengths and token budgets on a
+    2-slot engine: admissions land at different ticks, so every slot
+    decodes at its own position. Outputs must equal serving each request
+    alone (greedy, same params)."""
+    cfg = _f32(get_smoke(arch))
+    params = api.init_params(jax.random.PRNGKey(3), cfg)
+    rng = np.random.default_rng(17)
+    prompts = [rng.integers(2, cfg.vocab_size, 4 + (i % 3)).astype(np.int32)
+               for i in range(4)]
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=4 + (i % 3))
+            for i, p in enumerate(prompts)]
+
+    eng = _engine(cfg, params, batch_size=2)
+    stats = eng.run(reqs)
+    assert all(r.done for r in reqs)
+    # accounting: every generated token (prefill-sampled first token and
+    # the final token of every request) is counted exactly once
+    assert stats["tokens"] == sum(len(r.out_tokens) for r in reqs)
+    assert all(r.latency_s is not None and r.latency_s >= 0 for r in reqs)
+
+    for i, p in enumerate(prompts):
+        ref = Request(rid=100 + i, prompt=p,
+                      max_new_tokens=reqs[i].max_new_tokens)
+        _engine(cfg, params, batch_size=1).run([ref])
+        assert reqs[i].out_tokens == ref.out_tokens, (
+            f"{arch}: staggered req {i} diverged from batch-of-one: "
+            f"{reqs[i].out_tokens} vs {ref.out_tokens}")
+
+
+def test_run_stats_are_per_run():
+    """A second run() on the same engine must report only that run's
+    tokens/ticks, not the engine-lifetime counters."""
+    cfg = _f32(get_smoke("starcoder2-15b"))
+    params = api.init_params(jax.random.PRNGKey(3), cfg)
+    rng = np.random.default_rng(31)
+    eng = _engine(cfg, params, batch_size=1)
+    for rid in range(2):
+        req = Request(rid=rid,
+                      prompt=rng.integers(2, cfg.vocab_size, 4).astype(np.int32),
+                      max_new_tokens=3)
+        stats = eng.run([req])
+        assert stats["tokens"] == len(req.out_tokens), (rid, stats)
+
+
+def test_prefill_eos_completes_request():
+    """An EOS sampled directly from prefill must mark the request done
+    without it ever occupying a decode slot."""
+    cfg = _f32(get_smoke("starcoder2-15b"))
+    params = api.init_params(jax.random.PRNGKey(3), cfg)
+    rng = np.random.default_rng(23)
+    prompt = rng.integers(2, cfg.vocab_size, 5).astype(np.int32)
+    # discover what prefill greedily samples, then serve with THAT as eos
+    probe = Request(rid=0, prompt=prompt, max_new_tokens=8)
+    _engine(cfg, params, batch_size=1).run([probe])
+    first = probe.out_tokens[0]
+
+    eng = ServeEngine(cfg, batch_size=1, max_ctx=MAX_CTX, policy=POLICY,
+                      eos_id=first)
+    eng.load(params)
+    req = Request(rid=1, prompt=prompt, max_new_tokens=8)
+    eng.run([req])
+    assert req.done and req.out_tokens == [first]
+    assert all(r is None for r in eng.slot_req)  # slot never consumed
+    assert not bool(np.asarray(eng.active).any())
+
+
+def test_pad_cache_and_slot_splice():
+    """pad_cache grows every growable attention cache to capacity (ring
+    buffers stay window-sized) and admit() splices a single-request
+    prefill into exactly its slot, leaving other rows untouched."""
+    cfg = _f32(get_smoke("gemma3-1b"))
+    params = api.init_params(jax.random.PRNGKey(3), cfg)
+    rng = np.random.default_rng(29)
+    prompt = rng.integers(2, cfg.vocab_size, 6).astype(np.int32)
+
+    # --- pad_cache shape/content contract
+    logits1, raw = api.prefill(params, {"tokens": jnp.asarray(prompt)[None]},
+                               cfg, policy=POLICY)
+    padded = serve_step.pad_cache(raw, cfg, MAX_CTX)
+    for i, seg in enumerate(cfg.segments):
+        for j, kind in enumerate(seg.pattern):
+            c_raw = raw[f"seg{i}"][f"pos{j}"]
+            c_pad = padded[f"seg{i}"][f"pos{j}"]
+            if not isinstance(c_raw, AttnCache):
+                continue
+            if kind == "attn":
+                assert c_pad.k.shape[2] == MAX_CTX
+            elif kind == "attn_local":
+                assert c_pad.k.shape[2] == min(MAX_CTX, cfg.window)
+            s_raw = c_raw.k.shape[2]
+            np.testing.assert_array_equal(
+                np.asarray(c_pad.k[:, :, :s_raw], np.float32),
+                np.asarray(c_raw.k, np.float32))
+            assert not np.asarray(c_pad.k[:, :, s_raw:], np.float32).any()
+
+    # --- per-slot splice: admit into slot 1 of a 3-slot engine
+    eng = _engine(cfg, params, batch_size=3)
+    eng.slot_req[0] = Request(rid=99, prompt=prompt)  # occupy slot 0
+    assert eng.admit(Request(rid=0, prompt=prompt, max_new_tokens=4))
+    assert eng.slot_req[1] is not None and eng.slot_req[1].rid == 0
+
+    def rows(leaf_batch, leaf_one):
+        if not isinstance(leaf_one, AttnCache):
+            return
+        # stacked leaves are (count, B, S, Kv, hd)
+        np.testing.assert_array_equal(
+            np.asarray(leaf_batch.k[:, 1], np.float32),
+            np.asarray(leaf_one.k[:, 0], np.float32))
+        assert not np.asarray(leaf_batch.k[:, 2], np.float32).any()
+
+    for i, seg in enumerate(cfg.segments):
+        for j in range(len(seg.pattern)):
+            rows(eng.cache[f"seg{i}"][f"pos{j}"],
+                 serve_step.pad_cache(raw, cfg, MAX_CTX)[f"seg{i}"][f"pos{j}"])
