@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks import common
+from repro.core import matmul as mm
 from repro.kernels import ops
 
 
@@ -51,12 +52,20 @@ def run(n: int = 16, batches=(256, 1024, 4096, 16384), reps: int = 3) -> dict:
                      f"{tf:.3f}", "-", "measured(CPU)"])
 
         if g <= 1024:  # interpret mode is python-speed; keep it small
-            t = common.time_fn(
-                functools.partial(ops.gemm_batched, a, b, backend="pallas",
-                                  interpret=True), reps=1, warmup=1)
-            results[f"pallas_packed_G{g}"] = {**t, "note": "interpret"}
-            rows.append(["packed_pallas", g, f"{t['mean_s']*1e3:.0f}ms",
-                         "n/a", "-", "interpret(CPU)"])
+            # the non-vendor backends with a batched-packing path
+            # (ops.gemm_batched implements these; custom registry
+            # backends are 2-D-only and would raise there)
+            for backend in ("pallas", "pallas_naive"):
+                if backend not in mm.available_backends():
+                    continue
+                t = common.time_fn(
+                    functools.partial(ops.gemm_batched, a, b,
+                                      backend=backend, interpret=True),
+                    reps=1, warmup=1)
+                results[f"{backend}_packed_G{g}"] = {**t, "note": "interpret"}
+                rows.append([f"packed_{backend}", g,
+                             f"{t['mean_s']*1e3:.0f}ms",
+                             "n/a", "-", "interpret(CPU)"])
 
         # Utilization model on TPU (per-chip):
         #   packed: one MXU pass computes `pack` matrices but only the

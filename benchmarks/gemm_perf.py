@@ -21,9 +21,11 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks import common
-from repro.kernels import ops
+from repro.core import matmul as mm
+from repro.core.precision import num_passes
 
 
 def _xla_f32(a, b):
@@ -60,17 +62,19 @@ def run(ns=(512, 1024, 2048), reps: int = 5) -> dict:
             rows.append([name, n, f"{t['mean_s']*1e3:.1f}ms", f"{tf:.3f}",
                          "-", "measured(CPU)"])
 
-        # Pallas kernels: interpret-mode correctness timing at small N
-        # only + TPU projection for the paper's headline shapes.
+        # Non-XLA registry backends: interpret-mode correctness timing at
+        # small N only + TPU projection for the paper's headline shapes.
+        # Same dispatch path the models run (core.matmul registry).
         if n <= 512:
-            for name, backend in (("naive_wmma_pallas", "pallas_naive"),
-                                  ("tiled_pallas", "pallas")):
+            for backend in mm.available_backends():
+                if backend == "xla":
+                    continue
                 t = common.time_fn(
-                    functools.partial(ops.gemm, a, b, policy="bf16",
+                    functools.partial(mm.gemm, a, b, policy="bf16",
                                       backend=backend, interpret=True),
                     reps=2, warmup=1)
-                results[f"{name}_N{n}"] = {**t, "note": "interpret mode"}
-                rows.append([name, n, f"{t['mean_s']*1e3:.1f}ms", "n/a",
+                results[f"{backend}_N{n}"] = {**t, "note": "interpret mode"}
+                rows.append([backend, n, f"{t['mean_s']*1e3:.1f}ms", "n/a",
                              "-", "interpret(CPU)"])
 
     # TPU-v5e projections for the paper's sweep (naive has no K reuse
@@ -100,5 +104,47 @@ def run(ns=(512, 1024, 2048), reps: int = 5) -> dict:
     return results
 
 
+def bench_matrix(n: int = 256, reps: int = 2,
+                 policies=("bf16", "refine_a", "bf16x3", "refine_ab",
+                           "bf16x6", "f32"),
+                 backends=None, interpret: bool = True) -> dict:
+    """The backend x policy matrix through the ONE dispatch layer.
+
+    Per point: measured CPU tflops (relative ranking; Pallas backends run
+    in interpret mode here) + max-abs-error vs the fp64 oracle — the
+    machine-readable payload behind BENCH_gemm.json (CI smoke runs one
+    small point of this).
+    """
+    backends = list(backends or mm.available_backends())
+    key = jax.random.PRNGKey(n)
+    a = jax.random.uniform(key, (n, n), jnp.float32, -1, 1)
+    b = jax.random.uniform(jax.random.fold_in(key, 1), (n, n),
+                           jnp.float32, -1, 1)
+    oracle = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+    flops = common.gemm_flops(n, n, n)
+    points = {}
+    rows = []
+    for backend in backends:
+        for policy in policies:
+            fn = functools.partial(mm.gemm, a, b, policy=policy,
+                                   backend=backend, interpret=interpret)
+            t = common.time_fn(fn, reps=reps, warmup=1)
+            err = float(np.max(np.abs(
+                np.asarray(fn(), np.float64) - oracle)))
+            tf = common.hmean_tflops(flops, t["mean_s"])
+            points[f"{backend}/{policy}"] = {
+                "backend": backend, "policy": policy, "n": n,
+                "tflops": tf, "max_abs_error": err,
+                "mean_s": t["mean_s"], "passes": num_passes(policy),
+            }
+            rows.append([backend, policy, f"{t['mean_s']*1e3:.1f}ms",
+                         f"{tf:.4f}", f"{err:.3e}"])
+    common.print_table(
+        f"backend x policy matrix (N={n}, Pallas in interpret mode)",
+        ["backend", "policy", "cpu_time", "cpu_TF/s", "max_abs_err"], rows)
+    return {"n": n, "interpret": interpret, "points": points}
+
+
 if __name__ == "__main__":
     run()
+    bench_matrix()

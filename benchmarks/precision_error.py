@@ -23,21 +23,25 @@ POLICIES = ("bf16", "refine_a", "bf16x3", "refine_ab", "bf16x6", "f32")
 
 
 def run(ns=(512, 1024, 2048, 4096), value_range: float = 1.0,
-        seed: int = 0) -> dict:
-    results = {}
+        seed: int = 0, backend: str = "xla") -> dict:
+    """``backend`` routes the whole ladder through any registered matmul
+    backend (core.matmul registry) — the paper's point that the error
+    behaviour belongs to the ALGORITHM, not the programming interface."""
+    results = {"backend": backend}
     rows = []
     for n in ns:
         a, b = random_operands(n, value_range=value_range, seed=seed + n)
         c64 = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
         row = {"N": n}
         for p in POLICIES:
-            c = refined_matmul(a, b, policy=p)
+            c = refined_matmul(a, b, policy=p, backend=backend)
             row[p] = max_norm_error(c, c64)
         results[f"N{n}"] = row
         rows.append([n] + [f"{row[p]:.3e}" for p in POLICIES])
 
     title = (f"Fig.8 analogue: ||e||_max vs N (inputs U[-{value_range},"
-             f"{value_range}], bf16 ladder, vs f64 oracle)")
+             f"{value_range}], bf16 ladder, backend={backend}, "
+             "vs f64 oracle)")
     common.print_table(title, ["N"] + list(POLICIES), rows)
 
     # headline ratios at the largest N (paper: ~30% cut for Eq.2, ~10x

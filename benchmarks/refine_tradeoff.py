@@ -27,8 +27,13 @@ from repro.core.refined_matmul import refined_matmul
 LADDER = ("bf16", "refine_a", "bf16x3", "refine_ab", "bf16x6", "f32")
 
 
-def run(n: int = 2048, seeds=(0, 1, 2), reps: int = 3) -> dict:
-    results = {}
+def run(n: int = 2048, seeds=(0, 1, 2), reps: int = 3,
+        backend: str = "xla") -> dict:
+    """``backend`` selects the registered matmul backend the ladder runs
+    on (XLA by default; Pallas backends execute in interpret mode on CPU,
+    so their wall-clock is not comparable — use the pass counts and TPU
+    projections for those)."""
+    results = {"backend": backend}
     rows = []
     base_ms = None
     for policy in LADDER:
@@ -37,10 +42,11 @@ def run(n: int = 2048, seeds=(0, 1, 2), reps: int = 3) -> dict:
             a, b = random_operands(n, seed=s)
             c64 = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
             t = common.time_fn(
-                lambda a=a, b=b: refined_matmul(a, b, policy=policy),
+                lambda a=a, b=b: refined_matmul(a, b, policy=policy,
+                                                backend=backend),
                 reps=reps, warmup=1)
             errs.append(max_norm_error(
-                refined_matmul(a, b, policy=policy), c64))
+                refined_matmul(a, b, policy=policy, backend=backend), c64))
             times.append(t["mean_s"])
         ms = float(np.mean(times) * 1e3)
         if policy == "bf16":
@@ -71,7 +77,7 @@ def run(n: int = 2048, seeds=(0, 1, 2), reps: int = 3) -> dict:
                      f"{r['tpu_fused_rel']:.2f}x"])
 
     common.print_table(
-        f"Fig.9 analogue: error vs cost (N={n})",
+        f"Fig.9 analogue: error vs cost (N={n}, backend={backend})",
         ["policy", "||e||_max", "cpu_ms", "cpu_rel", "passes",
          "tpu_unfused", "tpu_fused"], rows)
     print("   paper: Eq.3 via 4 chained cuBLAS calls cost >5x one GEMM; "

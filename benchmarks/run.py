@@ -6,41 +6,88 @@
   Fig. 9  error-vs-cost plane                   benchmarks.refine_tradeoff
   (g)     roofline table from dry-run artifacts benchmarks.roofline
 
+Every run also sweeps the backend x policy matrix through the ONE
+dispatch layer (core.matmul registry — the exact code path model
+matmuls take) and writes it to ``BENCH_gemm.json`` at the repo root:
+tflops + max-abs-error per (backend, policy) point, machine-readable
+for CI trend tracking.
+
 Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+CI smoke: PYTHONPATH=src python -m benchmarks.run --point 128
+(one small interpret-mode point of the matrix only; seconds, not
+minutes).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_gemm.json")
+
+
+def write_bench_json(matrix: dict) -> str:
+    payload = {
+        "schema": "bench_gemm/v1",
+        "n": matrix["n"],
+        "interpret": matrix["interpret"],
+        "points": [
+            {"backend": v["backend"], "policy": v["policy"],
+             "tflops": v["tflops"], "max_abs_error": v["max_abs_error"],
+             "mean_s": v["mean_s"], "passes": v["passes"]}
+            for v in matrix["points"].values()
+        ],
+    }
+    path = os.path.abspath(BENCH_JSON)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller sweeps (CI-sized)")
+    ap.add_argument("--point", type=int, default=None, metavar="N",
+                    help="CI smoke: run ONLY the backend x policy matrix "
+                         "at one small N (interpret mode) and write "
+                         "BENCH_gemm.json")
     args = ap.parse_args()
 
-    from benchmarks import (batched_gemm_perf, gemm_perf, precision_error,
-                            refine_tradeoff)
+    from benchmarks import gemm_perf
 
     t0 = time.time()
+    if args.point is not None:
+        matrix = gemm_perf.bench_matrix(n=args.point, reps=1)
+        path = write_bench_json(matrix)
+        print(f"\nwrote {path} ({len(matrix['points'])} points) "
+              f"in {time.time() - t0:.1f}s")
+        return
+
+    from benchmarks import batched_gemm_perf, precision_error, refine_tradeoff
+
     print("#" * 72)
     print("# repro benchmarks — Markidis et al. IPDPSW'18 on TPU terms")
     print("#" * 72)
 
     if args.quick:
         gemm_perf.run(ns=(256, 512), reps=2)
+        matrix = gemm_perf.bench_matrix(n=128, reps=1)
         batched_gemm_perf.run(batches=(256, 1024), reps=2)
         precision_error.run(ns=(512, 1024))
         precision_error.run(ns=(1024,), value_range=16.0)
         refine_tradeoff.run(n=1024, seeds=(0,), reps=2)
     else:
         gemm_perf.run()
+        matrix = gemm_perf.bench_matrix()
         batched_gemm_perf.run()
         precision_error.run()
         precision_error.run(ns=(1024, 4096), value_range=16.0)
         refine_tradeoff.run()
+    print(f"\nwrote {write_bench_json(matrix)}")
 
     # Roofline table (only if dry-run artifacts exist).
     try:

@@ -8,7 +8,6 @@ Run: PYTHONPATH=src python examples/precision_refinement.py
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke

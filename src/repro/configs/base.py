@@ -22,7 +22,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
-__all__ = ["Segment", "ModelConfig", "ShapeSpec", "LM_SHAPES"]
+from repro.core.matmul import MatmulPolicy, TileConfig
+
+__all__ = ["Segment", "ModelConfig", "ShapeSpec", "LM_SHAPES",
+           "matmul_policy_for"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +84,9 @@ class ModelConfig:
     norm_eps: float = 1e-5
     tie_embeddings: bool = False
     activation_dtype: str = "bfloat16"
+    # which matmul backend this arch's matmuls run on by default
+    # (core.matmul registry name; CLI --backend overrides)
+    matmul_backend: str = "xla"
     # which shapes this arch supports (long_500k dropped for pure full-attn)
     supported_shapes: tuple[str, ...] = (
         "train_4k", "prefill_32k", "decode_32k")
@@ -104,6 +110,18 @@ class ModelConfig:
     @property
     def kv_dim(self) -> int:
         return self.num_kv_heads * self.head_dim
+
+
+def matmul_policy_for(cfg: ModelConfig, *, default: str = "bf16",
+                      logits: str | None = None,
+                      backend: str | None = None,
+                      tiles: TileConfig | None = None) -> MatmulPolicy:
+    """The launch-script policy constructor: precision knobs from CLI
+    flags, backend from the CLI override or the arch's default."""
+    return MatmulPolicy(
+        default=default, logits=logits,
+        backend=backend if backend is not None else cfg.matmul_backend,
+        tiles=tiles)
 
 
 @dataclasses.dataclass(frozen=True)

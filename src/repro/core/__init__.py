@@ -1,6 +1,17 @@
 """Core library: the paper's precision-refinement technique as a
-composable JAX module (splitting, policy routing, error analysis)."""
+composable JAX module (splitting, policy routing, error analysis) plus
+the backend-routed matmul dispatch layer (``repro.core.matmul``)."""
 
+from repro.core.matmul import (
+    MatmulPolicy,
+    MatmulRoute,
+    TileConfig,
+    available_backends,
+    autotune_tiles,
+    get_backend,
+    register_backend,
+    tile_for,
+)
 from repro.core.precision import (
     POLICIES,
     PrecisionPolicy,
@@ -14,6 +25,14 @@ from repro.core.refined_matmul import peinsum, pmatmul, refined_matmul
 __all__ = [
     "POLICIES",
     "PrecisionPolicy",
+    "MatmulPolicy",
+    "MatmulRoute",
+    "TileConfig",
+    "available_backends",
+    "autotune_tiles",
+    "get_backend",
+    "register_backend",
+    "tile_for",
     "merge2",
     "num_passes",
     "split2",

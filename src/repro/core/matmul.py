@@ -1,0 +1,608 @@
+"""One matmul surface: backend-routed, policy-carrying dispatch.
+
+The paper's core exercise is running the SAME mixed-precision GEMM
+through three programming interfaces (raw WMMA, CUTLASS, cuBLAS) and
+comparing programmability/performance/precision. This module is that
+comparison made first-class: every contraction in the framework reaches
+a *backend registry* whose entries mirror the paper's taxonomy:
+
+  ``xla``           vendor-library path (the cuBLAS analogue): policy-
+                    decomposed chains of XLA dots.
+  ``pallas``        hand-tiled VMEM-staged kernels (the CUTLASS
+                    analogue): ``gemm_tiled`` / fused ``gemm_refined``.
+  ``pallas_naive``  no-staging kernel (the raw-WMMA analogue):
+                    ``gemm_naive``, one program per output tile.
+
+Three layers live here:
+
+  * ``TileConfig`` + a shape-keyed tile cache (``tile_for`` /
+    ``set_tiles`` / ``autotune_tiles``) so backends pick block shapes
+    without callers hardcoding them;
+  * the backend registry (``register_backend`` / ``get_backend``),
+    extensible by downstream code;
+  * the einsum router (``routed_einsum``): 2-D-reducible two-operand
+    specs (`mk,kn->mn`, `...i,io->...o`, the MoE `ecd,edf->ecf`
+    per-expert contractions, attention score/value contractions) lower
+    to the registered 2-D GEMM backends — batched via ``vmap``, padded
+    to tile multiples, with a custom VJP whose backward contractions
+    route through the SAME backend — and everything else falls back to
+    the XLA path.
+
+``MatmulPolicy`` extends ``PrecisionPolicy`` with a per-layer-family
+backend + tile config; its ``for_(family)`` returns a ``MatmulRoute``
+that ``peinsum`` accepts anywhere a plain policy string is accepted, so
+models switch backends without touching call sites.
+
+Pallas interpret mode is resolved once per process (``default_interpret``)
+unless a route pins it explicitly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import string
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import precision as prec
+from repro.core.precision import PrecisionPolicy
+
+__all__ = [
+    "TileConfig",
+    "MatmulRoute",
+    "MatmulPolicy",
+    "Backend",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+    "tile_for",
+    "set_tiles",
+    "autotune_tiles",
+    "clear_tile_cache",
+    "default_interpret",
+    "routed_einsum",
+    "gemm",
+    "xla_policy_einsum",
+]
+
+
+# ================================================================ interpret
+
+_DEFAULT_INTERPRET: bool | None = None
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode unless we are actually on TPU.
+
+    Resolved once per process: backend detection is stable and every
+    dispatch site shares the answer.
+    """
+    global _DEFAULT_INTERPRET
+    if _DEFAULT_INTERPRET is None:
+        _DEFAULT_INTERPRET = jax.default_backend() != "tpu"
+    return _DEFAULT_INTERPRET
+
+
+# ============================================================== tile config
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    """(bm, bn, bk) block shape for one 2-D GEMM problem."""
+
+    bm: int = 256
+    bn: int = 256
+    bk: int = 256
+
+    def clamp(self, m: int, n: int, k: int) -> "TileConfig":
+        """Shrink blocks to MXU-friendly sizes no larger than the
+        (sublane-/lane-rounded) problem so padding stays small."""
+        return TileConfig(
+            bm=min(self.bm, _round_up(m, 8)),
+            bn=min(self.bn, _round_up(n, 128)),
+            bk=min(self.bk, _round_up(k, 128)),
+        )
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+# Seeded with the block shapes the kernels shipped with (gemm_tiled /
+# gemm_refined default 256^3; gemm_naive's historical 128 pads).
+_TILE_DEFAULTS: dict[str, TileConfig] = {
+    "xla": TileConfig(256, 256, 256),          # unused; XLA picks its own
+    "pallas": TileConfig(256, 256, 256),
+    "pallas_naive": TileConfig(128, 128, 128),
+}
+
+# Shape-keyed overrides/autotune results: (backend, m, n, k) -> TileConfig.
+_TILE_CACHE: dict[tuple[str, int, int, int], TileConfig] = {}
+
+
+def tile_for(backend: str, m: int, n: int, k: int) -> TileConfig:
+    """Block shapes for one (backend, problem-shape) point.
+
+    Exact-shape overrides (``set_tiles`` / ``autotune_tiles``) win;
+    otherwise the backend's seeded default, clamped to the problem.
+    """
+    hit = _TILE_CACHE.get((backend, m, n, k))
+    if hit is not None:
+        return hit
+    base = _TILE_DEFAULTS.get(backend, TileConfig())
+    return base.clamp(m, n, k)
+
+
+def set_tiles(backend: str, m: int, n: int, k: int,
+              tiles: TileConfig) -> None:
+    """Pin the tile config for one exact problem shape."""
+    _TILE_CACHE[(backend, m, n, k)] = tiles
+
+
+def clear_tile_cache() -> None:
+    _TILE_CACHE.clear()
+
+
+def autotune_tiles(backend: str, m: int, n: int, k: int, *,
+                   policy: str = "bf16",
+                   candidates: Sequence[TileConfig] | None = None,
+                   reps: int = 2, interpret: bool | None = None,
+                   ) -> TileConfig:
+    """Time `candidates` on the real backend path and cache the winner.
+
+    Wall-clock autotune (compile excluded via one warmup call); the
+    winning config lands in the shape-keyed cache so subsequent
+    dispatches for this exact shape pick it up automatically.
+    """
+    import time
+
+    if candidates is None:
+        candidates = [
+            TileConfig(bm, bn, bk).clamp(m, n, k)
+            for bm in (128, 256) for bn in (128, 256) for bk in (128, 256)
+        ]
+        # dedupe post-clamp while preserving order
+        candidates = list(dict.fromkeys(candidates))
+    key = jax.random.PRNGKey(0)
+    a = jax.random.uniform(key, (m, k), jnp.float32, -1, 1)
+    b = jax.random.uniform(jax.random.fold_in(key, 1), (k, n),
+                           jnp.float32, -1, 1)
+    best, best_t = None, float("inf")
+    for cand in candidates:
+        def run(cand=cand):
+            return gemm(a, b, policy=policy, backend=backend, tiles=cand,
+                        interpret=interpret)
+        jax.block_until_ready(run())          # warmup/compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(run())
+        t = (time.perf_counter() - t0) / reps
+        if t < best_t:
+            best, best_t = cand, t
+    assert best is not None
+    set_tiles(backend, m, n, k, best)
+    return best
+
+
+# ========================================================= backend registry
+
+# A backend's core contract is ONE bf16-input / fp32-accumulate 2-D GEMM
+# on tile-aligned operands; ``fused_policies`` lists the refinement
+# policies it additionally implements in a single fused call. The router
+# decomposes every other policy into bf16 passes (paper Fig. 5: chained
+# narrow GEMMs) or falls back to the XLA path for f32.
+GemmFn = Callable[..., jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    name: str
+    gemm: GemmFn                       # (a, b, *, policy, tiles, interpret)
+    fused_policies: frozenset[str]     # policies gemm handles natively
+    pads_to_tiles: bool = True         # router pads operands to multiples
+
+
+_BACKENDS: dict[str, Backend] = {}
+
+
+def register_backend(name: str, gemm_fn: GemmFn, *,
+                     fused_policies: Sequence[str] = ("bf16",),
+                     pads_to_tiles: bool = True,
+                     default_tiles: TileConfig | None = None) -> Backend:
+    """Register (or replace) a named 2-D GEMM backend."""
+    backend = Backend(name=name, gemm=gemm_fn,
+                      fused_policies=frozenset(fused_policies),
+                      pads_to_tiles=pads_to_tiles)
+    _BACKENDS[name] = backend
+    if default_tiles is not None:
+        _TILE_DEFAULTS[name] = default_tiles
+    return backend
+
+
+def get_backend(name: str) -> Backend:
+    if name not in _BACKENDS:
+        raise ValueError(
+            f"unknown backend {name!r}; registered: {available_backends()}")
+    return _BACKENDS[name]
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(_BACKENDS)
+
+
+# ----------------------------------------------------------- xla backend
+
+def xla_policy_einsum(spec: str, a: jax.Array, b: jax.Array,
+                      policy: str) -> jax.Array:
+    """The vendor-path einsum: 1..6 chained XLA dots per the policy.
+
+    This is the reference / distribution-friendly implementation (the
+    paper chained 4 cuBLAS calls; we chain 1-6 XLA dots, summed
+    smallest-magnitude-first in fp32).
+    """
+    if policy == "f32":
+        return jnp.einsum(
+            spec,
+            a.astype(jnp.float32),
+            b.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+    a_terms, b_terms = prec.operand_terms(a, b, policy)
+    out = None
+    for ta, tb in prec.policy_terms(policy):
+        part = jnp.einsum(
+            spec, a_terms[ta], b_terms[tb],
+            preferred_element_type=jnp.float32)
+        out = part if out is None else out + part
+    assert out is not None
+    return out
+
+
+def _xla_gemm(a, b, *, policy, tiles, interpret):
+    del tiles, interpret
+    return xla_policy_einsum("mk,kn->mn", a, b, policy)
+
+
+register_backend("xla", _xla_gemm, fused_policies=prec.POLICIES,
+                 pads_to_tiles=False)
+
+
+# -------------------------------------------------------- pallas backends
+# Kernel imports stay inside the functions: core must import without
+# dragging the Pallas toolchain in, and kernels/ops.py imports this
+# module (a top-level import would cycle).
+
+def _pallas_gemm(a, b, *, policy, tiles, interpret):
+    if policy == "bf16":
+        from repro.kernels.gemm_tiled import gemm_tiled
+        return gemm_tiled(a, b, bm=tiles.bm, bn=tiles.bn, bk=tiles.bk,
+                          interpret=interpret)
+    from repro.kernels.gemm_refined import gemm_refined
+    return gemm_refined(a, b, policy=policy, bm=tiles.bm, bn=tiles.bn,
+                        bk=tiles.bk, interpret=interpret)
+
+
+def _pallas_naive_gemm(a, b, *, policy, tiles, interpret):
+    assert policy == "bf16", policy
+    from repro.kernels.gemm_naive import gemm_naive
+    return gemm_naive(a, b, bm=tiles.bm, bn=tiles.bn, interpret=interpret)
+
+
+register_backend("pallas", _pallas_gemm,
+                 fused_policies=("bf16", "refine_a", "bf16x3", "refine_ab"))
+register_backend("pallas_naive", _pallas_naive_gemm,
+                 fused_policies=("bf16",),
+                 default_tiles=TileConfig(128, 128, 128))
+
+
+# ============================================================ route/policy
+
+@dataclasses.dataclass(frozen=True)
+class MatmulRoute:
+    """Everything one contraction needs: precision x backend x tiles.
+
+    ``peinsum``/``pmatmul``/``refined_matmul`` accept a route anywhere a
+    policy string is accepted; a bare string means (policy, backend="xla").
+    """
+
+    precision: str = "bf16"
+    backend: str = "xla"
+    tiles: TileConfig | None = None    # None -> shape-keyed tile cache
+    interpret: bool | None = None      # None -> default_interpret()
+
+
+def as_route(policy: "str | MatmulRoute") -> MatmulRoute:
+    if isinstance(policy, MatmulRoute):
+        return policy
+    return MatmulRoute(precision=policy)
+
+
+_BACKEND_FAMILIES = ("attention", "mlp", "moe", "logits", "embed")
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulPolicy(PrecisionPolicy):
+    """Per-layer-family precision policy + backend + tile config.
+
+    Extends ``PrecisionPolicy`` (precision fields and their semantics are
+    inherited) with where each family's matmuls RUN: a default backend,
+    optional per-family backend overrides, and an optional tile config
+    pin. ``for_(family)`` returns a ``MatmulRoute`` — models thread it
+    straight into ``peinsum`` without knowing which backend fires.
+    """
+
+    backend: str = "xla"
+    attention_backend: str | None = None
+    mlp_backend: str | None = None
+    moe_backend: str | None = None
+    logits_backend: str | None = None
+    embed_backend: str | None = None
+    tiles: TileConfig | None = None
+    interpret: bool | None = None
+
+    def backend_for(self, family: str) -> str:
+        v = getattr(self, f"{family}_backend", None)
+        return v if v is not None else self.backend
+
+    def route(self, family: str) -> MatmulRoute:
+        return MatmulRoute(
+            precision=PrecisionPolicy.for_(self, family),
+            backend=self.backend_for(family),
+            tiles=self.tiles,
+            interpret=self.interpret,
+        )
+
+    # Models call policy.for_(family) and hand the result to peinsum;
+    # returning a route (instead of the parent's string) switches every
+    # call site to the backend-routed path with zero model edits.
+    def for_(self, family: str) -> MatmulRoute:  # type: ignore[override]
+        return self.route(family)
+
+    @classmethod
+    def from_precision(cls, policy: PrecisionPolicy, *,
+                       backend: str = "xla",
+                       tiles: TileConfig | None = None,
+                       **backend_overrides: str | None) -> "MatmulPolicy":
+        """Lift a plain PrecisionPolicy onto a backend."""
+        fields = {f.name: getattr(policy, f.name)
+                  for f in dataclasses.fields(PrecisionPolicy)}
+        return cls(**fields, backend=backend, tiles=tiles,
+                   **backend_overrides)
+
+
+# Fully static pytree: every field (precision strings included) is
+# metadata, so a MatmulPolicy can cross jit/vmap/scan boundaries as an
+# argument, not just as a closure. (PrecisionPolicy keeps its historical
+# string-leaf registration; here leaves == [].)
+jax.tree_util.register_dataclass(
+    MatmulPolicy,
+    data_fields=[],
+    meta_fields=[f.name for f in dataclasses.fields(MatmulPolicy)],
+)
+
+
+# ============================================================ einsum router
+
+@dataclasses.dataclass(frozen=True)
+class _Plan:
+    """Static lowering recipe: einsum spec -> (batched) 2-D GEMM."""
+
+    a_perm: tuple[int, ...]      # a -> (batch..., m..., k...)
+    b_perm: tuple[int, ...]      # b -> (batch..., k..., n...)
+    batch: int                   # product of batch dims (0 = unbatched)
+    m: int
+    n: int
+    k: int
+    out_shape: tuple[int, ...]   # (batch..., m..., n...) before out_perm
+    out_perm: tuple[int, ...]    # -> the spec's requested output order
+
+
+def _expand_ellipsis(spec: str, a_ndim: int, b_ndim: int) -> str | None:
+    """Concretize '...' with fresh labels. Supports '...' on at most one
+    operand (plus the output); returns None when it can't."""
+    if "..." not in spec:
+        return spec
+    lhs, out = spec.split("->")
+    a_spec, b_spec = lhs.split(",")
+    if "..." in a_spec and "..." in b_spec:
+        return None
+    used = set(spec) - {".", ",", "-", ">"}
+    fresh = [c for c in string.ascii_letters if c not in used]
+    if "..." in a_spec:
+        n_extra = a_ndim - (len(a_spec) - 3)
+    else:
+        n_extra = b_ndim - (len(b_spec) - 3)
+    if n_extra < 0 or n_extra > len(fresh):
+        return None
+    ell = "".join(fresh[:n_extra])
+    return (f"{a_spec.replace('...', ell)},{b_spec.replace('...', ell)}"
+            f"->{out.replace('...', ell)}")
+
+
+@functools.lru_cache(maxsize=512)
+def _plan_2d(spec: str, a_shape: tuple[int, ...], b_shape: tuple[int, ...],
+             ) -> _Plan | None:
+    """Classify a concrete two-operand spec as a (batched) 2-D GEMM.
+
+    Returns None whenever the contraction is not expressible as
+    transpose+reshape around one GEMM (repeated labels, broadcast
+    batch dims, no contracted dim, ...) — the caller then falls back to
+    the XLA einsum path.
+    """
+    spec = _expand_ellipsis(spec, len(a_shape), len(b_shape))
+    if spec is None or "->" not in spec:
+        return None
+    lhs, out = spec.split("->")
+    if "," not in lhs:
+        return None
+    a_l, b_l = lhs.split(",")
+    if (len(set(a_l)) != len(a_l) or len(set(b_l)) != len(b_l)
+            or len(set(out)) != len(out)):
+        return None                      # diagonals / repeated outputs
+    if len(a_l) != len(a_shape) or len(b_l) != len(b_shape):
+        return None
+    a_set, b_set, o_set = set(a_l), set(b_l), set(out)
+    if not o_set <= (a_set | b_set):
+        return None
+    dim = {}
+    for labels, shape in ((a_l, a_shape), (b_l, b_shape)):
+        for lab, d in zip(labels, shape):
+            if dim.setdefault(lab, d) != d:
+                return None              # size-mismatched shared label
+    shared = a_set & b_set
+    k_labs = [l for l in a_l if l in shared and l not in o_set]
+    batch_labs = [l for l in out if l in shared]
+    m_labs = [l for l in a_l if l in a_set - b_set]
+    n_labs = [l for l in b_l if l in b_set - a_set]
+    if not k_labs:
+        return None                      # outer products: not a GEMM
+    if any(l not in o_set for l in m_labs + n_labs):
+        return None                      # summed-out non-shared dims
+    a_perm = tuple(a_l.index(l) for l in batch_labs + m_labs + k_labs)
+    b_perm = tuple(b_l.index(l) for l in batch_labs + k_labs + n_labs)
+
+    def prod(labs):
+        out = 1
+        for l in labs:
+            out *= dim[l]
+        return out
+
+    pre_out = batch_labs + m_labs + n_labs
+    out_shape = tuple(dim[l] for l in pre_out)
+    out_perm = tuple(pre_out.index(l) for l in out)
+    return _Plan(
+        a_perm=a_perm, b_perm=b_perm,
+        batch=prod(batch_labs) if batch_labs else 0,
+        m=prod(m_labs), n=prod(n_labs), k=prod(k_labs),
+        out_shape=out_shape, out_perm=out_perm)
+
+
+def _pad2(x: jax.Array, r: int, c: int) -> jax.Array:
+    pr, pc = (-x.shape[-2]) % r, (-x.shape[-1]) % c
+    if pr or pc:
+        pad = [(0, 0)] * (x.ndim - 2) + [(0, pr), (0, pc)]
+        x = jnp.pad(x, pad)
+    return x
+
+
+def _backend_gemm_2d(backend: Backend, a: jax.Array, b: jax.Array,
+                     route: MatmulRoute) -> jax.Array:
+    """One policy-routed 2-D GEMM on an arbitrary-shape problem."""
+    m, k = a.shape
+    n = b.shape[1]
+    precision = route.precision
+    if precision == "f32" and "f32" not in backend.fused_policies:
+        # no narrow-pass decomposition exists for exact f32; vendor path
+        return xla_policy_einsum("mk,kn->mn", a, b, "f32")
+
+    tiles = route.tiles or tile_for(backend.name, m, n, k)
+    tiles = tiles.clamp(m, n, k)
+    interp = (default_interpret() if route.interpret is None
+              else route.interpret)
+    if backend.pads_to_tiles:
+        ap, bp = _pad2(a, tiles.bm, tiles.bk), _pad2(b, tiles.bk, tiles.bn)
+    else:
+        ap, bp = a, b
+
+    if precision in backend.fused_policies:
+        out = backend.gemm(ap, bp, policy=precision, tiles=tiles,
+                           interpret=interp)
+    else:
+        # Paper Fig. 5: refinement as chained narrow GEMMs, here chained
+        # through whichever backend was asked for (smallest-first sum).
+        a_terms, b_terms = prec.operand_terms(ap, bp, precision)
+        out = None
+        for ta, tb in prec.policy_terms(precision):
+            part = backend.gemm(a_terms[ta], b_terms[tb], policy="bf16",
+                                tiles=tiles, interpret=interp)
+            out = part if out is None else out + part
+        assert out is not None
+    return out[:m, :n]
+
+
+def _execute_plan(plan: _Plan, a: jax.Array, b: jax.Array,
+                  route: MatmulRoute) -> jax.Array:
+    backend = get_backend(route.backend)
+    at = jnp.transpose(a, plan.a_perm)
+    bt = jnp.transpose(b, plan.b_perm)
+    if plan.batch:
+        at = at.reshape(plan.batch, plan.m, plan.k)
+        bt = bt.reshape(plan.batch, plan.k, plan.n)
+        out = jax.vmap(
+            lambda x, y: _backend_gemm_2d(backend, x, y, route))(at, bt)
+    else:
+        at = at.reshape(plan.m, plan.k)
+        bt = bt.reshape(plan.k, plan.n)
+        out = _backend_gemm_2d(backend, at, bt, route)
+    out = out.reshape(plan.out_shape)
+    return jnp.transpose(out, plan.out_perm)
+
+
+# Custom VJP: Pallas kernels are not reverse-mode differentiable, and we
+# want the backward contractions to run the SAME backend the forward ran
+# (models train on the path benchmarks measure). For a two-operand
+# einsum with unique labels, dA = einsum(out_spec, b_spec -> a_spec) and
+# dB = einsum(a_spec, out_spec -> b_spec).
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _lowered_einsum(spec: str, route: MatmulRoute, a, b):
+    plan = _plan_2d(spec, a.shape, b.shape)
+    assert plan is not None
+    return _execute_plan(plan, a, b, route)
+
+
+def _lowered_fwd(spec, route, a, b):
+    return _lowered_einsum(spec, route, a, b), (a, b)
+
+
+def _lowered_bwd(spec, route, res, g):
+    a, b = res
+    concrete = _expand_ellipsis(spec, a.ndim, b.ndim)
+    assert concrete is not None
+    lhs, out = concrete.split("->")
+    a_spec, b_spec = lhs.split(",")
+    da = routed_einsum(f"{out},{b_spec}->{a_spec}", g, b, route)
+    db = routed_einsum(f"{a_spec},{out}->{b_spec}", a, g, route)
+    return da.astype(a.dtype), db.astype(b.dtype)
+
+
+_lowered_einsum.defvjp(_lowered_fwd, _lowered_bwd)
+
+
+def routed_einsum(spec: str, a: jax.Array, b: jax.Array,
+                  policy: "str | MatmulRoute" = "bf16") -> jax.Array:
+    """Two-operand einsum under a (precision, backend, tiles) route.
+
+    fp32 out always (the accumulator type). Non-XLA backends require a
+    2-D-reducible spec; anything else falls back to the XLA path so the
+    call NEVER fails on spec structure.
+    """
+    route = as_route(policy)
+    if route.backend == "xla":
+        return xla_policy_einsum(spec, a, b, route.precision)
+    get_backend(route.backend)           # unknown backends fail loudly
+    plan = _plan_2d(spec, a.shape, b.shape)
+    if plan is None:
+        return xla_policy_einsum(spec, a, b, route.precision)
+    return _lowered_einsum(spec, route, a, b)
+
+
+def gemm(a: jax.Array, b: jax.Array, *, policy: "str | MatmulRoute" = "bf16",
+         backend: str | None = None, tiles: TileConfig | None = None,
+         interpret: bool | None = None) -> jax.Array:
+    """Policy-routed C = A @ B through a registry backend (2-D entry).
+
+    Keyword overrides (backend/tiles/interpret) refine whatever `policy`
+    carries; shapes are padded to tile multiples and sliced back.
+    """
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"gemm expects (m,k) x (k,n); got {a.shape} x {b.shape}")
+    route = as_route(policy)
+    route = dataclasses.replace(
+        route,
+        backend=backend if backend is not None else route.backend,
+        tiles=tiles if tiles is not None else route.tiles,
+        interpret=interpret if interpret is not None else route.interpret)
+    return routed_einsum("mk,kn->mn", a, b, route)

@@ -116,12 +116,18 @@ class PrecisionPolicy:
     logits: str | None = None     # final vocab projection
     embed: str | None = None      # embedding lookups / patch projections
 
+    # The per-family precision knobs. Subclasses (core.matmul.MatmulPolicy)
+    # add non-precision fields, so validation iterates this list rather
+    # than dataclasses.fields().
+    _PRECISION_FIELDS = ("default", "attention", "mlp", "moe", "logits",
+                         "embed")
+
     def __post_init__(self) -> None:
-        for f in dataclasses.fields(self):
-            v = getattr(self, f.name)
+        for name in self._PRECISION_FIELDS:
+            v = getattr(self, name)
             if v is not None and v not in POLICIES:
                 raise ValueError(
-                    f"PrecisionPolicy.{f.name}={v!r} not in {POLICIES}")
+                    f"{type(self).__name__}.{name}={v!r} not in {POLICIES}")
 
     def for_(self, family: str) -> str:
         v = getattr(self, family, None)
@@ -169,6 +175,20 @@ def split_for_policy(x: jax.Array, policy: str) -> tuple[jax.Array, ...]:
     if policy == "bf16x6":
         return split3(x)
     raise ValueError(f"policy {policy!r} has no split")
+
+
+def operand_terms(a: jax.Array, b: jax.Array, policy: str,
+                  ) -> tuple[tuple[jax.Array, ...], tuple[jax.Array, ...]]:
+    """Both operands' narrow-precision terms for ``policy``.
+
+    The single place that knows ``bf16``/``refine_a`` never split B
+    (paper Eq. 2 refines A only); index the result with
+    ``policy_terms(policy)`` to enumerate the MXU passes.
+    """
+    a_terms = split_for_policy(a, policy)
+    b_terms = ((b.astype(jnp.bfloat16),) if policy in ("bf16", "refine_a")
+               else split_for_policy(b, policy))
+    return a_terms, b_terms
 
 
 def tree_split2(tree: Any) -> tuple[Any, Any]:

@@ -1,76 +1,64 @@
 """Policy-routed matmuls (paper Eq. 2/3 generalized to any contraction).
 
-``peinsum`` is the single entry point every model matmul in this framework
-goes through. It decomposes one fp32 contraction into 1..6 narrow
-(bfloat16-input, fp32-accumulate) contractions according to the precision
-policy — exactly the structure of the paper's refinement, expressed as
-XLA-native dots so it lowers cleanly under pjit/shard_map and shows up in
-the compiled HLO flop counts (which is how the roofline analysis sees the
-refinement cost).
+``peinsum`` is the single entry point every model matmul in this
+framework goes through, and it is now a thin router over the backend
+registry in ``repro.core.matmul``: the ``policy`` argument is either a
+precision-policy string (dispatches to the XLA vendor path, the paper's
+cuBLAS analogue — 1..6 chained narrow dots) or a ``MatmulRoute`` /
+``MatmulPolicy.for_(family)`` result that additionally selects a
+backend (``pallas`` tiled kernels, ``pallas_naive``, or anything
+registered) plus a tile config. 2-D-reducible specs lower to the chosen
+backend's GEMM kernels; everything else falls back to XLA dots, so the
+API never fails on spec structure.
 
-The *fused* single-pass variant of the same math lives in
-``repro.kernels.gemm_refined`` (Pallas); this module is the reference /
-distribution-friendly path and the paper-faithful "pipelined GEMMs"
-implementation (the paper chained 4 cuBLAS calls; we chain 1-6 XLA dots).
+The *fused* single-pass variant of the refinement math lives in
+``repro.kernels.gemm_refined`` (Pallas) and is what the ``pallas``
+backend runs for refined policies; the XLA path remains the reference /
+distribution-friendly implementation whose HLO flop counts feed the
+roofline analysis.
 """
 
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import precision as prec
+from repro.core import matmul as mm
 
 __all__ = ["peinsum", "pmatmul", "refined_matmul"]
 
 
-def peinsum(spec: str, a: jax.Array, b: jax.Array, policy: str = "bf16") -> jax.Array:
-    """Two-operand einsum computed under a precision policy.
+def peinsum(spec: str, a: jax.Array, b: jax.Array,
+            policy: "str | mm.MatmulRoute" = "bf16") -> jax.Array:
+    """Two-operand einsum computed under a precision policy / route.
 
     Returns fp32 (the accumulator type). ``spec`` is any two-operand
     einsum spec. For ``policy='f32'`` a single full-precision contraction
     is issued; otherwise operands are split per the policy and each
-    (a_term, b_term) product runs as a bf16-input/fp32-accumulate einsum,
-    summed smallest-first in fp32.
+    (a_term, b_term) product runs as a bf16-input/fp32-accumulate
+    contraction, summed smallest-first in fp32 — fused in one kernel
+    when the selected backend supports the policy natively.
     """
-    if policy == "f32":
-        return jnp.einsum(
-            spec,
-            a.astype(jnp.float32),
-            b.astype(jnp.float32),
-            preferred_element_type=jnp.float32,
-        )
-
-    a_terms = prec.split_for_policy(a, policy)
-    b_split = policy not in ("bf16", "refine_a")
-    if policy == "bf16":
-        b_terms: tuple[jax.Array, ...] = (b.astype(jnp.bfloat16),)
-    elif policy == "refine_a":
-        b_terms = (b.astype(jnp.bfloat16),)
-    else:
-        b_terms = prec.split_for_policy(b, policy)
-    del b_split
-
-    out = None
-    for ta, tb in prec.policy_terms(policy):
-        part = jnp.einsum(
-            spec, a_terms[ta], b_terms[tb], preferred_element_type=jnp.float32
-        )
-        out = part if out is None else out + part
-    assert out is not None
-    return out
+    return mm.routed_einsum(spec, a, b, policy)
 
 
-def pmatmul(a: jax.Array, b: jax.Array, policy: str = "bf16") -> jax.Array:
+def pmatmul(a: jax.Array, b: jax.Array,
+            policy: "str | mm.MatmulRoute" = "bf16") -> jax.Array:
     """Policy-routed ``a @ b`` (contract last dim of a with first of b)."""
     if a.ndim < 1 or b.ndim != 2:
         raise ValueError(f"pmatmul expects (..., k) x (k, n); got {a.shape} x {b.shape}")
-    spec = "...k,kn->...n"
-    return peinsum(spec, a, b, policy)
+    return peinsum("...k,kn->...n", a, b, policy)
 
 
-def refined_matmul(a: jax.Array, b: jax.Array, policy: str = "refine_ab") -> jax.Array:
-    """Paper-shaped 2-D GEMM under a policy (benchmarks/tests entry point)."""
+def refined_matmul(a: jax.Array, b: jax.Array,
+                   policy: "str | mm.MatmulRoute" = "refine_ab",
+                   *, backend: str | None = None) -> jax.Array:
+    """Paper-shaped 2-D GEMM under a policy (benchmarks/tests entry point).
+
+    ``backend`` overrides the route's backend (convenience for sweeping
+    the backend x policy matrix from benchmarks).
+    """
     if a.ndim != 2 or b.ndim != 2:
         raise ValueError("refined_matmul is the 2-D GEMM entry point")
+    if backend is not None:
+        return mm.gemm(a, b, policy=policy, backend=backend)
     return peinsum("mk,kn->mn", a, b, policy)

@@ -3,8 +3,11 @@
 GEMM family (the paper's object of study): naive / tiled / fused-refined
 / batched-packed. Plus the WKV6 linear-attention kernel (the memory fix
 for the rwkv6 cells, §Perf cell B). Each kernel ships with a pure-jnp
-oracle in ref.py and a jit'd dispatch wrapper in ops.py; tests sweep
-shapes/dtypes in interpret mode.
+oracle in ref.py; dispatch goes through the backend registry in
+``repro.core.matmul`` (ops.py is a thin shim over it), which is also
+how model matmuls reach these kernels when a ``MatmulPolicy`` selects
+the ``pallas``/``pallas_naive`` backends. Tests sweep shapes/dtypes in
+interpret mode.
 """
 
 from repro.kernels.ops import gemm, gemm_batched

@@ -1,4 +1,5 @@
-"""jit'd dispatch wrappers over the Pallas kernels.
+"""jit'd dispatch wrappers over the Pallas kernels — now thin shims over
+the backend registry in ``repro.core.matmul``.
 
 Backends mirror the paper's three programming interfaces:
 
@@ -6,41 +7,25 @@ Backends mirror the paper's three programming interfaces:
   backend="pallas"       -> gemm_tiled / gemm_refined (the CUTLASS analogue)
   backend="pallas_naive" -> gemm_naive (the raw-WMMA analogue)
 
+The same registry serves the model stack (``peinsum`` routes) and the
+benchmarks, so models and benchmarks measure the identical code path.
 On this CPU container Pallas TPU kernels execute via ``interpret=True``
-(resolved automatically from the default backend); on TPU they compile
-through Mosaic. Wrappers also handle padding to block multiples so
-arbitrary shapes work everywhere.
+(resolved once from the default backend); on TPU they compile through
+Mosaic. Tile shapes come from the shape-keyed cache in core.matmul
+unless the caller pins them; padding to block multiples happens in the
+router so arbitrary shapes work everywhere.
 """
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
-from repro.core.refined_matmul import refined_matmul as _xla_refined_matmul
+from repro.core import matmul as mm
+from repro.core.matmul import default_interpret
 from repro.kernels.batched_gemm import batched_gemm, batched_gemm_naive
-from repro.kernels.gemm_naive import gemm_naive
-from repro.kernels.gemm_refined import gemm_refined
-from repro.kernels.gemm_tiled import gemm_tiled
 
 __all__ = ["gemm", "gemm_batched", "default_interpret"]
-
-_PALLAS_REFINED = ("refine_a", "bf16x3", "refine_ab")
-
-
-def default_interpret() -> bool:
-    """Pallas interpret mode unless we are actually on TPU."""
-    return jax.default_backend() != "tpu"
-
-
-def _pad2(x: jax.Array, bm: int, bk: int) -> jax.Array:
-    m, k = x.shape
-    pm, pk = (-m) % bm, (-k) % bk
-    if pm or pk:
-        x = jnp.pad(x, ((0, pm), (0, pk)))
-    return x
 
 
 def gemm(
@@ -49,47 +34,28 @@ def gemm(
     *,
     policy: str = "bf16",
     backend: str = "pallas",
-    bm: int = 256,
-    bn: int = 256,
-    bk: int = 256,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Policy-routed C = A @ B through a selectable backend.
 
-    Shapes are padded up to block multiples and the result is sliced
-    back; fp32 out always (the accumulator type).
+    Thin wrapper over ``repro.core.matmul.gemm``: tile shapes default to
+    the shape-keyed cache (bm/bn/bk override it — including the
+    ``pallas_naive`` K padding, which historically ignored bk), shapes
+    are padded up to block multiples and the result is sliced back;
+    fp32 out always (the accumulator type).
     """
     if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
         raise ValueError(f"gemm expects (m,k) x (k,n); got {a.shape} x {b.shape}")
-    m, n = a.shape[0], b.shape[1]
-    interp = default_interpret() if interpret is None else interpret
-
-    if backend == "xla":
-        return _xla_refined_matmul(a, b, policy=policy)
-
-    if backend == "pallas_naive":
-        if policy != "bf16":
-            raise ValueError("pallas_naive implements only the plain bf16 pass")
-        ap, bp = _pad2(a, bm, 128), _pad2(b, 128, bn)
-        out = gemm_naive(ap, bp, bm=min(bm, ap.shape[0]),
-                         bn=min(bn, bp.shape[1]), interpret=interp)
-        return out[:m, :n]
-
-    if backend != "pallas":
-        raise ValueError(f"unknown backend {backend!r}")
-
-    ap, bp = _pad2(a, bm, bk), _pad2(b, bk, bn)
-    if policy == "bf16":
-        out = gemm_tiled(ap, bp, bm=bm, bn=bn, bk=bk, interpret=interp)
-    elif policy in _PALLAS_REFINED:
-        out = gemm_refined(ap, bp, policy=policy, bm=bm, bn=bn, bk=bk,
-                           interpret=interp)
-    elif policy in ("f32", "bf16x6"):
-        # No fused kernel for the >=6-pass points; route to XLA dots.
-        return _xla_refined_matmul(a, b, policy=policy)
-    else:
-        raise ValueError(f"unknown policy {policy!r}")
-    return out[:m, :n]
+    tiles = None
+    if bm is not None or bn is not None or bk is not None:
+        base = mm.tile_for(backend, a.shape[0], b.shape[1], a.shape[1])
+        tiles = mm.TileConfig(bm=bm or base.bm, bn=bn or base.bn,
+                              bk=bk or base.bk)
+    return mm.gemm(a, b, policy=policy, backend=backend, tiles=tiles,
+                   interpret=interpret)
 
 
 def gemm_batched(

@@ -32,6 +32,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, get_config, get_smoke
+from repro.configs.base import matmul_policy_for
+from repro.core.matmul import available_backends
 from repro.core.precision import PrecisionPolicy
 from repro.models import api
 from repro.runtime import serve_step
@@ -74,6 +76,10 @@ class ServeEngine:
     all of it inside one jit'd call. The host only touches per-slot
     state at admission (prefill + cache splice) and when draining the
     small per-tick token/finished vectors into Request objects.
+
+    ``policy`` may be a plain ``PrecisionPolicy`` (XLA matmuls) or a
+    ``core.matmul.MatmulPolicy`` that additionally routes every model
+    matmul to a registered backend (pallas / pallas_naive / ...).
     """
 
     def __init__(self, cfg, *, batch_size: int, max_ctx: int,
@@ -282,10 +288,19 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-ctx", type=int, default=64)
+    ap.add_argument("--policy", default="bf16",
+                    help="default precision policy for every matmul")
+    ap.add_argument("--backend", default=None,
+                    choices=available_backends(),
+                    help="matmul backend (default: the arch's "
+                         "matmul_backend, usually xla)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
-    eng = ServeEngine(cfg, batch_size=args.batch, max_ctx=args.max_ctx)
+    policy = matmul_policy_for(cfg, default=args.policy,
+                               backend=args.backend)
+    eng = ServeEngine(cfg, batch_size=args.batch, max_ctx=args.max_ctx,
+                      policy=policy)
     eng.load(api.init_params(jax.random.PRNGKey(0), cfg))
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,

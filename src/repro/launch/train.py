@@ -34,10 +34,11 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import ARCHS, get_config, get_smoke
+from repro.configs.base import matmul_policy_for
+from repro.core.matmul import available_backends
 from repro.core.precision import PrecisionPolicy
 from repro.data.pipeline import DataConfig, SyntheticLMDataset
 from repro.models import api
@@ -149,6 +150,10 @@ def main() -> None:
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--policy", default="bf16")
     ap.add_argument("--logits-policy", default=None)
+    ap.add_argument("--backend", default=None,
+                    choices=available_backends(),
+                    help="matmul backend (default: the arch's "
+                         "matmul_backend, usually xla)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--lr", type=float, default=3e-4)
@@ -156,8 +161,9 @@ def main() -> None:
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
-    policy = PrecisionPolicy(default=args.policy,
-                             logits=args.logits_policy)
+    policy = matmul_policy_for(cfg, default=args.policy,
+                               logits=args.logits_policy,
+                               backend=args.backend)
     data_cfg = DataConfig(
         global_batch=args.batch, seq_len=args.seq,
         vocab_size=cfg.vocab_size,

@@ -2,6 +2,10 @@
 
 runtime/, launch/ and tests/ talk to models exclusively through this
 module, so train_step / serve_step / dryrun are arch-agnostic.
+
+``policy`` is a ``PrecisionPolicy`` (matmuls on XLA dots) or a
+``core.matmul.MatmulPolicy`` (same precision semantics, plus per-family
+backend + tile routing onto the registered Pallas kernels).
 """
 
 from __future__ import annotations
@@ -12,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.matmul import MatmulPolicy
 from repro.core.precision import PrecisionPolicy
 from repro.models import encdec as E
 from repro.models import transformer as T
@@ -19,6 +24,8 @@ from repro.models import vlm as V
 
 __all__ = ["init_params", "init_cache", "loss_fn", "prefill", "decode",
            "context_len"]
+
+Policy = PrecisionPolicy | MatmulPolicy
 
 
 def init_params(key, cfg: ModelConfig) -> dict:
@@ -40,7 +47,7 @@ def init_cache(cfg: ModelConfig, batch: int, s_ctx: int,
 
 
 def loss_fn(params: dict, batch: dict[str, jax.Array], cfg: ModelConfig, *,
-            policy: PrecisionPolicy, remat: bool = False,
+            policy: Policy, remat: bool = False,
             aux_weight: float = 0.01) -> tuple[jax.Array, dict[str, Any]]:
     """Training loss for one (micro)batch. batch: tokens, labels,
     [frames | image_embeds]."""
@@ -64,7 +71,7 @@ def loss_fn(params: dict, batch: dict[str, jax.Array], cfg: ModelConfig, *,
 
 
 def prefill(params: dict, batch: dict[str, jax.Array], cfg: ModelConfig, *,
-            policy: PrecisionPolicy, remat: bool = False):
+            policy: Policy, remat: bool = False):
     """Context ingestion. Returns (last-position logits, cache)."""
     if cfg.family == "audio":
         logits, cache, _ = E.forward(
@@ -82,7 +89,7 @@ def prefill(params: dict, batch: dict[str, jax.Array], cfg: ModelConfig, *,
 
 
 def decode(params: dict, cache: dict, tokens: jax.Array, pos: jax.Array,
-           cfg: ModelConfig, *, policy: PrecisionPolicy):
+           cfg: ModelConfig, *, policy: Policy):
     """One decode step: tokens (B,1), ``pos`` the PER-ROW absolute
     position vector (B,) int32 — continuous-batching slots admitted at
     different ticks decode at different positions. A scalar ``pos`` is

@@ -2,7 +2,8 @@
 chunked evaluation (pure JAX; memory-bounded for 32k prefill).
 
 Score and value contractions route through the precision policy
-(``policy`` argument = the per-family policy string), so the paper's
+(``policy`` argument = the per-family policy string or backend-routed
+``core.matmul.MatmulRoute``), so the paper's
 refinement ladder applies to the attention GEMMs exactly as to the
 projections.
 
@@ -15,12 +16,12 @@ never exceeds the window.
 
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.matmul import MatmulRoute
 from repro.core.refined_matmul import peinsum
 from repro.models import layers as L
 
@@ -148,7 +149,7 @@ def attention(
     num_heads: int,
     num_kv_heads: int,
     head_dim: int,
-    policy: str,
+    policy: "str | MatmulRoute",
     rope_theta: float | None = 10_000.0,   # None -> no RoPE (whisper)
     window: int | None = None,             # sliding window (local layers)
     softcap: float | None = None,

@@ -1,7 +1,11 @@
 """Common neural building blocks (pure-JAX, dict-param style).
 
 All matmuls route through ``repro.core.refined_matmul.peinsum`` so the
-paper's precision policy applies uniformly across every architecture.
+paper's precision policy — and, via ``core.matmul.MatmulPolicy`` routes,
+the matmul *backend* (XLA dots or the Pallas kernels) — applies
+uniformly across every architecture. The ``policy`` argument below is
+whatever ``policy.for_(family)`` returned: a policy string (XLA path)
+or a ``MatmulRoute`` (backend-routed path).
 Params are plain nested dicts of jnp arrays; every ``init_*`` accepts a
 ``stack`` prefix so per-layer params can be created pre-stacked for
 ``lax.scan`` execution over layer stacks.
@@ -12,8 +16,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.precision import PrecisionPolicy
+from repro.core.matmul import MatmulRoute
 from repro.core.refined_matmul import peinsum
+
+Policy = str | MatmulRoute
 
 __all__ = [
     "init_linear", "linear",
@@ -41,7 +47,7 @@ def init_linear(key, d_in: int, d_out: int, *, bias: bool = False,
     return p
 
 
-def linear(p: Params, x: jax.Array, policy: str) -> jax.Array:
+def linear(p: Params, x: jax.Array, policy: Policy) -> jax.Array:
     """x: (..., d_in) @ w: (d_in, d_out) under a precision policy."""
     y = peinsum("...i,io->...o", x, p["w"], policy)
     if "b" in p:
@@ -76,7 +82,7 @@ def embed(p: Params, tokens: jax.Array, dtype) -> jax.Array:
     return p["table"].astype(dtype)[tokens]
 
 
-def unembed(p: Params, x: jax.Array, policy: str) -> jax.Array:
+def unembed(p: Params, x: jax.Array, policy: Policy) -> jax.Array:
     """Logits projection — the paper's large-N error-growth regime
     (vocab up to 262k here); `policy.logits` applies. The sharding
     constraint pins the logits (and, via transposition, their
@@ -107,7 +113,7 @@ def init_mlp(key, d: int, d_ff: int, kind: str, *, bias: bool = False,
     raise ValueError(f"unknown mlp kind {kind!r}")
 
 
-def mlp(p: Params, x: jax.Array, kind: str, policy: str) -> jax.Array:
+def mlp(p: Params, x: jax.Array, kind: str, policy: Policy) -> jax.Array:
     dtype = x.dtype
     h = linear(p["wi"], x, policy)
     if kind == "swiglu":

@@ -18,6 +18,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.matmul import MatmulRoute
 from repro.core.refined_matmul import peinsum
 from repro.models import layers as L
 
@@ -40,7 +41,7 @@ def init_moe(key, d: int, d_ff: int, num_experts: int, mlp_kind: str,
 
 
 def moe_ffn(p: dict, x: jax.Array, *, num_experts: int, top_k: int,
-            capacity_factor: float, mlp_kind: str, policy: str,
+            capacity_factor: float, mlp_kind: str, policy: "str | MatmulRoute",
             router_policy: str = "f32", dropless: bool = False,
             ) -> tuple[jax.Array, jax.Array]:
     """x: (B, S, D) -> (out (B, S, D), aux_loss scalar).

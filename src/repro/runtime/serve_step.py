@@ -16,12 +16,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.matmul import MatmulPolicy
 from repro.core.precision import PrecisionPolicy
 from repro.models import api
 from repro.models.attention import AttnCache
 
 __all__ = ["make_prefill", "make_decode", "make_engine_tick", "pad_cache",
            "abstract_cache", "abstract_params"]
+
+# Either policy flavour routes every model matmul below (MatmulPolicy
+# additionally selects the backend each family's contractions run on).
+Policy = PrecisionPolicy | MatmulPolicy
 
 
 def _attn_capacity(kind: str, cfg: ModelConfig, s_ctx: int) -> int | None:
@@ -52,7 +57,7 @@ def pad_cache(cache: dict, cfg: ModelConfig, s_ctx: int) -> dict:
     return out
 
 
-def make_prefill(cfg: ModelConfig, policy: PrecisionPolicy, *,
+def make_prefill(cfg: ModelConfig, policy: Policy, *,
                  s_ctx: int, remat: bool = False):
     """prefill(params, batch) -> (next-token logits, capacity cache)."""
 
@@ -64,7 +69,7 @@ def make_prefill(cfg: ModelConfig, policy: PrecisionPolicy, *,
     return prefill
 
 
-def make_decode(cfg: ModelConfig, policy: PrecisionPolicy):
+def make_decode(cfg: ModelConfig, policy: Policy):
     """decode(params, cache, tokens (B,1), pos (B,)) -> (logits, cache).
 
     ``pos`` is the per-row position vector; a scalar broadcasts.
@@ -76,7 +81,7 @@ def make_decode(cfg: ModelConfig, policy: PrecisionPolicy):
     return decode
 
 
-def make_engine_tick(cfg: ModelConfig, policy: PrecisionPolicy, *,
+def make_engine_tick(cfg: ModelConfig, policy: Policy, *,
                      eos_id: int, max_ctx: int):
     """One continuous-batching engine tick, fully jit-compatible.
 

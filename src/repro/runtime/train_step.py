@@ -6,25 +6,35 @@ launch/dryrun.py lowers. Microbatching is a ``lax.scan`` over gradient
 accumulation (constant HLO size in the number of microbatches) with
 per-layer remat inside the model stack — together these bound
 activation memory for the 340B-class cells (see EXPERIMENTS.md §Perf).
+
+``policy`` is a ``PrecisionPolicy`` (all matmuls on XLA dots) or a
+``core.matmul.MatmulPolicy`` (per-family backend routing: the same
+train step runs on the Pallas kernels, gradients included — the routed
+einsum's custom VJP keeps the backward contractions on the selected
+backend).
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.matmul import MatmulPolicy
 from repro.core.precision import PrecisionPolicy
 from repro.models import api
 from repro.optim import adamw
 
 __all__ = ["make_train_step", "make_loss_fn"]
 
+# Either policy flavour is accepted everywhere below (MatmulPolicy is a
+# PrecisionPolicy that additionally carries backend + tile routing).
+Policy = PrecisionPolicy | MatmulPolicy
 
-def make_loss_fn(cfg: ModelConfig, policy: PrecisionPolicy, *,
+
+def make_loss_fn(cfg: ModelConfig, policy: Policy, *,
                  remat: bool = True):
     def loss_fn(params, batch):
         return api.loss_fn(params, batch, cfg, policy=policy, remat=remat)
@@ -41,7 +51,7 @@ def _split_micro(batch: dict[str, jax.Array], n: int) -> dict[str, jax.Array]:
 
 
 def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
-                    policy: PrecisionPolicy, *, microbatches: int = 1,
+                    policy: Policy, *, microbatches: int = 1,
                     remat: bool = True):
     """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
     loss_fn = make_loss_fn(cfg, policy, remat=remat)

@@ -4,7 +4,6 @@ cost_analysis undercounts) and known collective payloads."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.analysis.hlo_cost import analyze_hlo

@@ -9,7 +9,6 @@ import pytest
 
 hypothesis = pytest.importorskip("hypothesis")
 st = pytest.importorskip("hypothesis.strategies")
-import jax
 import jax.numpy as jnp
 import numpy as np
 

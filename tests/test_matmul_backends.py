@@ -1,0 +1,290 @@
+"""Backend x policy parity matrix for the unified matmul dispatch layer
+(core.matmul): every registered backend must agree with the fp64
+reference on 2-D `gemm` and on model-shaped `peinsum` specs within each
+policy's error bound, in interpret mode on CPU. Plus the acceptance
+path: a transformer forward pass runs end-to-end on backend="pallas"
+selected via MatmulPolicy and matches the XLA backend."""
+
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, Segment, matmul_policy_for
+from repro.core import matmul as mm
+from repro.core.precision import POLICIES, PrecisionPolicy
+from repro.core.refined_matmul import peinsum
+from repro.models import api
+
+# Max-abs-error bounds vs the fp64 oracle for U[-1,1] operands with
+# K ~ 130 (the ladder of the paper's Fig. 8, with slack for backend
+# summation-order differences).
+ERROR_BOUNDS = {
+    "bf16": 2e-1,
+    "refine_a": 1e-1,
+    "bf16x3": 1e-3,
+    "refine_ab": 1e-3,
+    "bf16x6": 1e-4,
+    "f32": 1e-4,
+}
+
+BACKENDS = mm.available_backends()
+
+
+def _rand(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(-1.0, 1.0, shape).astype(np.float32))
+
+
+# =================================================== backend x policy matrix
+
+class TestParityMatrix:
+    @pytest.mark.parametrize("backend", BACKENDS)
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_gemm_vs_f64_reference(self, backend, policy):
+        """Every (backend, policy) point lands inside the policy's error
+        bound on a ragged (non-tile-aligned) 2-D GEMM."""
+        a, b = _rand((100, 130), 1), _rand((130, 50), 2)
+        ref = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+        out = mm.gemm(a, b, policy=policy, backend=backend, interpret=True)
+        assert out.shape == (100, 50) and out.dtype == jnp.float32
+        err = np.max(np.abs(np.asarray(out, np.float64) - ref))
+        assert err < ERROR_BOUNDS[policy], (backend, policy, err)
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    @pytest.mark.parametrize("policy", ["bf16", "refine_ab"])
+    def test_model_linear_spec(self, backend, policy):
+        """The layer-stack spec `...i,io->...o` (models.layers.linear)."""
+        x, w = _rand((2, 5, 130), 3), _rand((130, 40), 4)
+        route = mm.MatmulRoute(precision=policy, backend=backend,
+                               interpret=True)
+        out = peinsum("...i,io->...o", x, w, route)
+        ref = np.einsum("bsi,io->bso", np.asarray(x, np.float64),
+                        np.asarray(w, np.float64))
+        assert out.shape == (2, 5, 40)
+        err = np.max(np.abs(np.asarray(out, np.float64) - ref))
+        assert err < ERROR_BOUNDS[policy], (backend, policy, err)
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_moe_expert_spec(self, backend):
+        """The per-expert contraction `ecd,edf->ecf` (models.moe)."""
+        xe, we = _rand((4, 10, 24), 5), _rand((4, 24, 16), 6)
+        route = mm.MatmulRoute(precision="bf16", backend=backend,
+                               interpret=True)
+        out = peinsum("ecd,edf->ecf", xe, we, route)
+        want = peinsum("ecd,edf->ecf", xe, we, "bf16")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_unembed_transposed_spec(self, backend):
+        """The logits spec `...d,vd->...v` contracts b's SECOND dim."""
+        x, t = _rand((2, 3, 48), 7), _rand((64, 48), 8)
+        route = mm.MatmulRoute(precision="bf16", backend=backend,
+                               interpret=True)
+        out = peinsum("...d,vd->...v", x, t, route)
+        want = peinsum("...d,vd->...v", x, t, "bf16")
+        assert out.shape == (2, 3, 64)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_non_reducible_spec_falls_back_to_xla(self):
+        """Specs the 2-D lowerer can't express must still compute (XLA
+        fallback), not fail."""
+        a, b = _rand((8, 8), 9), _rand((8, 8), 10)
+        route = mm.MatmulRoute(precision="bf16", backend="pallas",
+                               interpret=True)
+        out = peinsum("ij,ij->ij", a, b, route)  # elementwise: no GEMM
+        want = peinsum("ij,ij->ij", a, b, "bf16")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_gradients_flow_through_pallas_route(self):
+        """The routed einsum's custom VJP: grads exist, are finite, and
+        track the XLA-path grads at bf16 accuracy."""
+        x, w = _rand((4, 64), 11), _rand((64, 32), 12)
+        route = mm.MatmulRoute(precision="bf16", backend="pallas",
+                               interpret=True)
+
+        def f(policy):
+            return lambda x: peinsum("mk,kn->mn", x, w, policy).sum()
+
+        gp = jax.grad(f(route))(x)
+        gx = jax.grad(f("bf16"))(x)
+        assert np.all(np.isfinite(np.asarray(gp)))
+        np.testing.assert_allclose(np.asarray(gp), np.asarray(gx),
+                                   rtol=0.05, atol=0.05)
+
+
+# ========================================================== registry + tiles
+
+class TestRegistry:
+    def test_unknown_backend_raises(self):
+        with pytest.raises(ValueError, match="unknown backend"):
+            mm.gemm(_rand((8, 8)), _rand((8, 8)), backend="cutlass")
+
+    def test_register_custom_backend_routes(self):
+        def doubling_gemm(a, b, *, policy, tiles, interpret):
+            del policy, tiles, interpret
+            return 2.0 * jnp.dot(a.astype(jnp.float32),
+                                 b.astype(jnp.float32),
+                                 preferred_element_type=jnp.float32)
+
+        mm.register_backend("test_double", doubling_gemm,
+                            fused_policies=("bf16", "f32"),
+                            pads_to_tiles=False)
+        try:
+            a, b = _rand((8, 8), 13), _rand((8, 8), 14)
+            out = mm.gemm(a, b, policy="f32", backend="test_double")
+            np.testing.assert_allclose(
+                np.asarray(out), 2 * (np.asarray(a) @ np.asarray(b)),
+                rtol=1e-5, atol=1e-5)
+            assert "test_double" in mm.available_backends()
+        finally:
+            mm._BACKENDS.pop("test_double", None)
+
+    def test_tile_override_cache(self):
+        mm.clear_tile_cache()
+        default = mm.tile_for("pallas", 512, 512, 512)
+        assert (default.bm, default.bn, default.bk) == (256, 256, 256)
+        mm.set_tiles("pallas", 512, 512, 512, mm.TileConfig(128, 128, 128))
+        try:
+            hit = mm.tile_for("pallas", 512, 512, 512)
+            assert (hit.bm, hit.bn, hit.bk) == (128, 128, 128)
+            # other shapes unaffected
+            other = mm.tile_for("pallas", 256, 256, 256)
+            assert other.bm == 256
+        finally:
+            mm.clear_tile_cache()
+
+    def test_tiles_clamp_to_problem(self):
+        t = mm.tile_for("pallas", 24, 40, 130)
+        # sublane-rounded M, lane-rounded N/K, never above the default
+        assert t.bm == 24 and t.bn == 128 and t.bk == 256
+
+    def test_autotune_seeds_cache(self):
+        mm.clear_tile_cache()
+        try:
+            cands = [mm.TileConfig(64, 64, 64), mm.TileConfig(64, 128, 64)]
+            best = mm.autotune_tiles("pallas", 64, 64, 64,
+                                     candidates=cands, reps=1,
+                                     interpret=True)
+            assert best in cands
+            assert mm.tile_for("pallas", 64, 64, 64) == best
+        finally:
+            mm.clear_tile_cache()
+
+    def test_naive_backend_k_pad_respects_bk(self):
+        """Satellite regression: the pallas_naive path used to hardcode
+        the K padding to 128; it now comes from the tile config."""
+        from repro.kernels import ops
+        a, b = _rand((64, 130), 15), _rand((130, 64), 16)
+        ref = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+        for bk in (128, 256, 512):
+            out = ops.gemm(a, b, policy="bf16", backend="pallas_naive",
+                           bk=bk, interpret=True)
+            err = np.max(np.abs(np.asarray(out, np.float64) - ref))
+            assert err < ERROR_BOUNDS["bf16"], (bk, err)
+
+
+# ============================================================= MatmulPolicy
+
+class TestMatmulPolicy:
+    def test_is_precision_policy(self):
+        p = mm.MatmulPolicy(default="bf16", backend="pallas")
+        assert isinstance(p, PrecisionPolicy)
+
+    def test_for_returns_route(self):
+        p = mm.MatmulPolicy(default="bf16", logits="refine_ab",
+                            backend="pallas", mlp_backend="xla")
+        r = p.for_("logits")
+        assert isinstance(r, mm.MatmulRoute)
+        assert r.precision == "refine_ab" and r.backend == "pallas"
+        assert p.for_("mlp").backend == "xla"
+        assert p.for_("attention").backend == "pallas"
+
+    def test_rejects_unknown_precision(self):
+        with pytest.raises(ValueError):
+            mm.MatmulPolicy(default="fp8")
+
+    def test_from_precision_lift(self):
+        base = PrecisionPolicy.mixed_hpc()
+        lifted = mm.MatmulPolicy.from_precision(base, backend="pallas")
+        assert lifted.for_("logits").precision == base.for_("logits")
+        assert lifted.for_("logits").backend == "pallas"
+
+    def test_config_helper_uses_arch_default(self):
+        cfg = _tiny_config()
+        assert matmul_policy_for(cfg).backend == cfg.matmul_backend
+        assert matmul_policy_for(cfg, backend="pallas").backend == "pallas"
+
+
+# ========================================================== acceptance test
+
+def _tiny_config(**kw) -> ModelConfig:
+    return ModelConfig(
+        name="tiny", family="dense", d_model=32, num_layers=2,
+        segments=(Segment(("attn", "mlp"), 2),), vocab_size=128,
+        num_heads=2, num_kv_heads=1, head_dim=16, d_ff=64,
+        mlp_kind="swiglu", **kw)
+
+
+class TestModelOnPallasBackend:
+    def test_transformer_forward_matches_xla(self):
+        """Acceptance: one transformer config runs end-to-end with
+        backend="pallas" selected via MatmulPolicy (interpret mode) and
+        its logits match the XLA backend within the policy's tolerance."""
+        cfg = _tiny_config()
+        params = api.init_params(jax.random.PRNGKey(0), cfg)
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                    cfg.vocab_size)
+        batch = {"tokens": tokens, "labels": tokens}
+
+        lx, _ = api.prefill(
+            params, batch, cfg,
+            policy=mm.MatmulPolicy(default="bf16", backend="xla"))
+        lp, cache = api.prefill(
+            params, batch, cfg,
+            policy=mm.MatmulPolicy(default="bf16", backend="pallas",
+                                   interpret=True))
+        assert np.all(np.isfinite(np.asarray(lp, np.float32)))
+        # Same bf16 products, fp32 accumulation; only summation order may
+        # differ between the tiled kernel and the XLA dot.
+        np.testing.assert_allclose(np.asarray(lp), np.asarray(lx),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_decode_step_on_pallas_backend(self):
+        cfg = _tiny_config()
+        pol = mm.MatmulPolicy(default="bf16", backend="pallas",
+                              interpret=True)
+        params = api.init_params(jax.random.PRNGKey(0), cfg)
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                    cfg.vocab_size)
+        logits, cache = api.prefill(params, {"tokens": tokens}, cfg,
+                                    policy=pol)
+        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        logits2, _ = api.decode(params, cache, nxt,
+                                jnp.full((2,), 8, jnp.int32), cfg,
+                                policy=pol)
+        assert logits2.shape == (2, 1, cfg.vocab_size)
+        assert np.all(np.isfinite(np.asarray(logits2, np.float32)))
+
+    def test_train_step_grads_on_pallas_backend(self):
+        """Training also runs on the routed backend (custom VJP keeps the
+        backward contractions on pallas)."""
+        from repro.optim import adamw
+        from repro.runtime.train_step import make_train_step
+        cfg = _tiny_config()
+        pol = mm.MatmulPolicy(default="bf16", backend="pallas",
+                              interpret=True)
+        params = api.init_params(jax.random.PRNGKey(0), cfg)
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                    cfg.vocab_size)
+        batch = {"tokens": tokens, "labels": tokens}
+        step = jax.jit(make_train_step(cfg, adamw.AdamWConfig(), pol,
+                                       microbatches=1, remat=False))
+        _, opt2, metrics = step(params, adamw.init(params), batch)
+        assert np.isfinite(float(metrics["loss"]))
+        assert float(metrics["grad_norm"]) > 0.0
+        assert int(opt2.step) == 1

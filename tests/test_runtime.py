@@ -8,7 +8,6 @@ import sys
 import textwrap
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -123,7 +122,6 @@ class TestElastic:
 class TestMonitor:
     def test_straggler_flagging(self):
         mon = StepMonitor(window=50, z_threshold=4.0)
-        import time as _t
         for _ in range(20):
             mon.start()
             mon._t0 -= 0.010  # simulate exactly 10ms
