@@ -1,0 +1,153 @@
+"""Fused-attention benchmark: backend x policy x mask-mode matrix.
+
+The attention analogue of ``gemm_perf.bench_matrix``: every point runs
+through the ONE dispatch layer models use (the attention kernel family
+of the ``core.matmul`` registry) and reports
+
+  * measured CPU tflops (relative ranking; ``pallas_fused`` executes in
+    interpret mode here, so its wall time ranks structure, not silicon),
+  * max-abs-error vs a dense fp64 softmax-attention oracle — the
+    precision payload: the fused kernel must land on the same ladder
+    rung as the chunked two-GEMM reference for every policy.
+
+Mask modes cover the shapes the models actually run: ``causal``
+(train/prefill), ``sliding`` (local layers, window = s/4), ``full``
+(encoder/cross), and ``decode`` (single token against a stale-slot
+linear cache at PER-ROW positions — the continuous-batching cell).
+
+The machine-readable result lands in ``BENCH_attention.json`` (see
+``benchmarks.run``); ``benchmarks.check_regress`` gates CI on it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import matmul as mm
+from repro.core.precision import num_passes
+
+MASKS = ("causal", "sliding", "full", "decode")
+
+
+def _rand(key, shape):
+    return jax.random.uniform(key, shape, jnp.float32, -1, 1)
+
+
+def _problem(s: int, *, batch: int = 1, kv_heads: int = 2, group: int = 2,
+             head_dim: int = 64):
+    """One deterministic attention problem (q pre-scaled, GQA layout)."""
+    key = jax.random.PRNGKey(s)
+    ks = jax.random.split(key, 4)
+    q = _rand(ks[0], (batch, s, kv_heads, group, head_dim)) * head_dim**-0.5
+    k = _rand(ks[1], (batch, s, kv_heads, head_dim))
+    v = _rand(ks[2], (batch, s, kv_heads, head_dim))
+    # decode: rows at staggered positions; slots past pos hold stale junk
+    pos = jnp.asarray([(s - 1) - (i * s) // (2 * batch)
+                       for i in range(batch)], jnp.int32)
+    qd = _rand(ks[3], (batch, 1, kv_heads, group, head_dim)) * head_dim**-0.5
+    return q, k, v, qd, pos
+
+
+def _oracle(q, k, v, mask: str, *, window: int | None,
+            pos=None) -> np.ndarray:
+    """Dense fp64 softmax attention under the mask mode."""
+    qn = np.asarray(q, np.float64)
+    kn = np.asarray(k, np.float64)
+    vn = np.asarray(v, np.float64)
+    s_q, s_k = qn.shape[1], kn.shape[1]
+    qi = np.arange(s_q)[:, None]
+    ki = np.arange(s_k)[None, :]
+    if mask == "causal":
+        keep = ki <= qi
+    elif mask == "sliding":
+        keep = (ki <= qi) & (ki > qi - window)
+    elif mask == "full":
+        keep = np.ones((s_q, s_k), bool)
+    elif mask == "decode":
+        keep = (ki <= np.asarray(pos)[:, None])[:, None, :]  # (B,1,S)
+    else:
+        raise ValueError(mask)
+    sc = np.einsum("bqkgd,bskd->bkgqs", qn, kn)
+    if mask == "decode":
+        sc = np.where(keep[:, None, None], sc, -1e30)
+    else:
+        sc = np.where(keep[None, None, None], sc, -1e30)
+    p = np.exp(sc - sc.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    return np.einsum("bkgqs,bskd->bqkgd", p, vn)
+
+
+def _dispatch(backend: str, policy: str, mask: str, q, k, v, qd, pos,
+              window: int | None, interpret: bool):
+    route = mm.MatmulRoute(precision=policy, attn=backend,
+                           interpret=interpret)
+    if mask == "decode":
+        return mm.attention_decode(qd, k, v, pos, window=None,
+                                   softcap=None, policy=route)
+    return mm.attention_forward(
+        q, k, v, causal=mask in ("causal", "sliding"),
+        window=window if mask == "sliding" else None, softcap=None,
+        policy=route)
+
+
+def attn_flops(s_q: int, s_k: int, batch: int, heads: int,
+               head_dim: int) -> float:
+    """Naive op count of the two attention GEMMs (scores + values)."""
+    return 2.0 * 2.0 * batch * heads * s_q * s_k * head_dim
+
+
+def bench_matrix(s: int = 128, reps: int = 2,
+                 policies=("bf16", "refine_a", "refine_ab", "f32"),
+                 backends=None, masks=MASKS, *, batch: int = 2,
+                 kv_heads: int = 2, group: int = 2, head_dim: int = 64,
+                 interpret: bool = True) -> dict:
+    """The backend x policy x mask matrix through the dispatch layer."""
+    backends = list(backends or mm.available_attention_backends())
+    window = max(s // 4, 1)
+    q, k, v, qd, pos = _problem(s, batch=batch, kv_heads=kv_heads,
+                                group=group, head_dim=head_dim)
+    heads = kv_heads * group
+    oracles = {m: _oracle(qd if m == "decode" else q, k, v, m,
+                          window=window, pos=pos) for m in masks}
+    points = {}
+    rows = []
+    for backend in backends:
+        for policy in policies:
+            for mask in masks:
+                fn = functools.partial(_dispatch, backend, policy, mask,
+                                       q, k, v, qd, pos, window, interpret)
+                t = common.time_fn(fn, reps=reps, warmup=1)
+                err = float(np.max(np.abs(
+                    np.asarray(fn(), np.float64) - oracles[mask])))
+                s_q = 1 if mask == "decode" else s
+                tf = common.hmean_tflops(
+                    attn_flops(s_q, s, batch, heads, head_dim), t["mean_s"])
+                points[f"{backend}/{policy}/{mask}"] = {
+                    "backend": backend, "policy": policy, "mask": mask,
+                    "s": s, "tflops": tf, "max_abs_error": err,
+                    "mean_s": t["mean_s"], "passes": num_passes(policy),
+                }
+                rows.append([backend, policy, mask,
+                             f"{t['mean_s']*1e3:.1f}ms", f"{tf:.4f}",
+                             f"{err:.3e}"])
+    common.print_table(
+        f"attention backend x policy x mask (S={s}, Pallas in interpret "
+        f"mode)",
+        ["backend", "policy", "mask", "cpu_time", "cpu_TF/s",
+         "max_abs_err"], rows)
+    return {"s": s, "interpret": interpret, "points": points}
+
+
+def run(s: int = 128, reps: int = 3) -> dict:
+    matrix = bench_matrix(s=s, reps=reps)
+    common.write_json("attention_perf", matrix)
+    return matrix
+
+
+if __name__ == "__main__":
+    run()

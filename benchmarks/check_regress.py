@@ -1,0 +1,161 @@
+"""Bench-regression gate: fail CI when precision or parity drifts.
+
+Compares the freshly produced ``BENCH_gemm.json`` / ``BENCH_attention.json``
+(from ``benchmarks.run --point N``) against the COMMITTED baselines in
+``benchmarks/baselines/``.  Sun et al. (2022)'s lesson — per-instruction
+numeric behavior must be regression-TESTED, not assumed — applied to our
+dispatch layer: a kernel or registry change that silently costs accuracy,
+or makes one backend drift away from the reference, turns CI red instead
+of landing as a mystery three PRs later.
+
+Gates (timing fields are machine-dependent and deliberately NOT gated):
+
+  coverage   every baseline point must still be produced — a backend or
+             policy silently dropping out of the matrix is a failure;
+  error      per point, ``max_abs_error`` must not exceed the baseline
+             by more than --tol (default 10%) plus an absolute floor
+             that keeps ~1e-7 fp32 noise from flapping;
+  parity     per (policy[, mask]) row, each non-reference backend's
+             error ratio vs the ``xla`` reference must not grow more
+             than --tol over its baseline ratio — backends are allowed
+             to be differently accurate, but not to DRIFT apart.
+
+Usage (CI bench-smoke, after ``python -m benchmarks.run --point 128``):
+
+    PYTHONPATH=src python -m benchmarks.check_regress
+
+Refreshing baselines after an INTENTIONAL numeric change:
+
+    PYTHONPATH=src python -m benchmarks.run --point 128
+    PYTHONPATH=src python -m benchmarks.check_regress --update
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+BASELINE_DIR = os.path.join(_ROOT, "benchmarks", "baselines")
+
+# Absolute slack under which error changes are considered noise. The
+# finest committed points (f32 / refine_ab vs the fp64 oracle) sit at
+# ~4e-8..1e-6 — pure fp32 reduction-order jitter, which CAN shift by
+# O(1e-7) across jax/XLA versions (CI installs unpinned jax[cpu]). The
+# floor absorbs that scale while a real ladder-rung regression (1e-6 ->
+# 1e-4, a refined pass silently dropped) still trips the gate.
+ABS_FLOOR = 2e-7
+
+FILES = ("BENCH_gemm.json", "BENCH_attention.json")
+
+
+def _point_key(p: dict) -> str:
+    key = f"{p['backend']}/{p['policy']}"
+    return key + (f"/{p['mask']}" if "mask" in p else "")
+
+
+def _row_key(p: dict) -> str:
+    """Grouping for the parity gate: same policy (and mask), any backend."""
+    return p["policy"] + (f"/{p['mask']}" if "mask" in p else "")
+
+
+def _load(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        payload = json.load(f)
+    return {_point_key(p): p for p in payload["points"]}
+
+
+def _parity_ratio(points: dict[str, dict], p: dict) -> float | None:
+    """err(backend) / err(xla) for the point's (policy, mask) row."""
+    ref_key = _point_key({**p, "backend": "xla"})
+    ref = points.get(ref_key)
+    if ref is None or p["backend"] == "xla":
+        return None
+    return ((p["max_abs_error"] + ABS_FLOOR)
+            / (ref["max_abs_error"] + ABS_FLOOR))
+
+
+def check_file(name: str, *, tol: float, baseline_dir: str,
+               result_dir: str) -> list[str]:
+    base_path = os.path.join(baseline_dir, name)
+    new_path = os.path.join(result_dir, name)
+    if not os.path.exists(base_path):
+        return [f"{name}: no committed baseline at {base_path}"]
+    if not os.path.exists(new_path):
+        return [f"{name}: missing result {new_path} — did "
+                f"`python -m benchmarks.run --point N` run?"]
+    base = _load(base_path)
+    new = _load(new_path)
+    failures = []
+    for key, bp in base.items():
+        np_ = new.get(key)
+        if np_ is None:
+            failures.append(f"{name}: point {key} dropped from the matrix")
+            continue
+        # error gate
+        bound = bp["max_abs_error"] * (1.0 + tol) + ABS_FLOOR
+        if np_["max_abs_error"] > bound:
+            failures.append(
+                f"{name}: {key} max_abs_error {np_['max_abs_error']:.3e} "
+                f"worsened past baseline {bp['max_abs_error']:.3e} "
+                f"(+{tol:.0%} gate: {bound:.3e})")
+        # parity gate vs the xla reference
+        b_ratio = _parity_ratio(base, bp)
+        n_ratio = _parity_ratio(new, np_)
+        if b_ratio is not None and n_ratio is not None:
+            if n_ratio > b_ratio * (1.0 + tol) + tol:
+                failures.append(
+                    f"{name}: {key} drifted from the xla reference — "
+                    f"err ratio {n_ratio:.3f} vs baseline {b_ratio:.3f}")
+    return failures
+
+
+def update_baselines(*, baseline_dir: str, result_dir: str) -> None:
+    os.makedirs(baseline_dir, exist_ok=True)
+    for name in FILES:
+        src = os.path.join(result_dir, name)
+        if not os.path.exists(src):
+            raise SystemExit(f"cannot update: {src} not found")
+        shutil.copy(src, os.path.join(baseline_dir, name))
+        print(f"baseline refreshed: {os.path.join(baseline_dir, name)}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tol", type=float, default=0.10,
+                    help="allowed relative error/parity growth (0.10 = 10%%)")
+    ap.add_argument("--baseline-dir", default=BASELINE_DIR)
+    ap.add_argument("--result-dir", default=_ROOT,
+                    help="where benchmarks.run wrote the BENCH_*.json")
+    ap.add_argument("--update", action="store_true",
+                    help="refresh the committed baselines from the "
+                         "current results instead of gating")
+    args = ap.parse_args(argv)
+
+    if args.update:
+        update_baselines(baseline_dir=args.baseline_dir,
+                         result_dir=args.result_dir)
+        return 0
+
+    failures = []
+    for name in FILES:
+        failures += check_file(name, tol=args.tol,
+                               baseline_dir=args.baseline_dir,
+                               result_dir=args.result_dir)
+    if failures:
+        print(f"bench regression gate: {len(failures)} failure(s)")
+        for f in failures:
+            print(f"  FAIL {f}")
+        return 1
+    n_pts = sum(len(_load(os.path.join(args.baseline_dir, n)))
+                for n in FILES)
+    print(f"bench regression gate: OK ({n_pts} baseline points held "
+          f"within {args.tol:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,17 +4,21 @@
   Fig. 7  batched 16x16 GEMM vs batch size      benchmarks.batched_gemm_perf
   Fig. 8  ||e||_max vs N (+ the +-16 text expt) benchmarks.precision_error
   Fig. 9  error-vs-cost plane                   benchmarks.refine_tradeoff
+  (a)     fused attention backend matrix        benchmarks.attention_perf
   (g)     roofline table from dry-run artifacts benchmarks.roofline
 
-Every run also sweeps the backend x policy matrix through the ONE
-dispatch layer (core.matmul registry — the exact code path model
-matmuls take) and writes it to ``BENCH_gemm.json`` at the repo root:
-tflops + max-abs-error per (backend, policy) point, machine-readable
-for CI trend tracking.
+Every run also sweeps the backend x policy matrices through the ONE
+dispatch layer (core.matmul registries — the exact code paths model
+matmuls and attention sublayers take) and writes them to
+``BENCH_gemm.json`` + ``BENCH_attention.json`` at the repo root:
+tflops + max-abs-error per point, machine-readable for CI trend
+tracking.  ``benchmarks.check_regress`` compares them against the
+committed ``benchmarks/baselines/`` and FAILS CI on error regressions
+or backend-parity drift.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick]
 CI smoke: PYTHONPATH=src python -m benchmarks.run --point 128
-(one small interpret-mode point of the matrix only; seconds, not
+(one small interpret-mode point of each matrix only; seconds, not
 minutes).
 """
 
@@ -25,8 +29,9 @@ import json
 import os
 import time
 
-BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
-                          "BENCH_gemm.json")
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+BENCH_JSON = os.path.join(_ROOT, "BENCH_gemm.json")
+BENCH_ATTN_JSON = os.path.join(_ROOT, "BENCH_attention.json")
 
 
 def write_bench_json(matrix: dict) -> str:
@@ -47,24 +52,46 @@ def write_bench_json(matrix: dict) -> str:
     return path
 
 
+def write_attention_json(matrix: dict) -> str:
+    payload = {
+        "schema": "bench_attention/v1",
+        "s": matrix["s"],
+        "interpret": matrix["interpret"],
+        "points": [
+            {"backend": v["backend"], "policy": v["policy"],
+             "mask": v["mask"], "tflops": v["tflops"],
+             "max_abs_error": v["max_abs_error"],
+             "mean_s": v["mean_s"], "passes": v["passes"]}
+            for v in matrix["points"].values()
+        ],
+    }
+    path = os.path.abspath(BENCH_ATTN_JSON)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller sweeps (CI-sized)")
     ap.add_argument("--point", type=int, default=None, metavar="N",
-                    help="CI smoke: run ONLY the backend x policy matrix "
-                         "at one small N (interpret mode) and write "
-                         "BENCH_gemm.json")
+                    help="CI smoke: run ONLY the backend x policy "
+                         "matrices at one small N (interpret mode) and "
+                         "write BENCH_gemm.json + BENCH_attention.json")
     args = ap.parse_args()
 
-    from benchmarks import gemm_perf
+    from benchmarks import attention_perf, gemm_perf
 
     t0 = time.time()
     if args.point is not None:
         matrix = gemm_perf.bench_matrix(n=args.point, reps=1)
         path = write_bench_json(matrix)
-        print(f"\nwrote {path} ({len(matrix['points'])} points) "
-              f"in {time.time() - t0:.1f}s")
+        print(f"\nwrote {path} ({len(matrix['points'])} points)")
+        amatrix = attention_perf.bench_matrix(s=args.point, reps=1)
+        apath = write_attention_json(amatrix)
+        print(f"wrote {apath} ({len(amatrix['points'])} points) "
+              f"— all in {time.time() - t0:.1f}s")
         return
 
     from benchmarks import batched_gemm_perf, precision_error, refine_tradeoff
@@ -76,6 +103,7 @@ def main() -> None:
     if args.quick:
         gemm_perf.run(ns=(256, 512), reps=2)
         matrix = gemm_perf.bench_matrix(n=128, reps=1)
+        amatrix = attention_perf.bench_matrix(s=128, reps=1)
         batched_gemm_perf.run(batches=(256, 1024), reps=2)
         precision_error.run(ns=(512, 1024))
         precision_error.run(ns=(1024,), value_range=16.0)
@@ -83,11 +111,13 @@ def main() -> None:
     else:
         gemm_perf.run()
         matrix = gemm_perf.bench_matrix()
+        amatrix = attention_perf.run(s=256)
         batched_gemm_perf.run()
         precision_error.run()
         precision_error.run(ns=(1024, 4096), value_range=16.0)
         refine_tradeoff.run()
     print(f"\nwrote {write_bench_json(matrix)}")
+    print(f"wrote {write_attention_json(amatrix)}")
 
     # Roofline table (only if dry-run artifacts exist).
     try:

@@ -20,7 +20,6 @@ Layer kinds:
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 from repro.core.matmul import MatmulPolicy, TileConfig
 
@@ -87,6 +86,11 @@ class ModelConfig:
     # which matmul backend this arch's matmuls run on by default
     # (core.matmul registry name; CLI --backend overrides)
     matmul_backend: str = "xla"
+    # which FUSED attention kernel the attention sublayers run
+    # (core.matmul attention-family registry name: "xla" reference
+    # chunked two-GEMM path or "pallas_fused" flash-attention kernels;
+    # CLI --attn-backend overrides)
+    attn_backend: str = "xla"
     # which shapes this arch supports (long_500k dropped for pure full-attn)
     supported_shapes: tuple[str, ...] = (
         "train_4k", "prefill_32k", "decode_32k")
@@ -115,12 +119,16 @@ class ModelConfig:
 def matmul_policy_for(cfg: ModelConfig, *, default: str = "bf16",
                       logits: str | None = None,
                       backend: str | None = None,
+                      attn_backend: str | None = None,
                       tiles: TileConfig | None = None) -> MatmulPolicy:
     """The launch-script policy constructor: precision knobs from CLI
-    flags, backend from the CLI override or the arch's default."""
+    flags, backend + attention kernel from the CLI overrides or the
+    arch's defaults."""
     return MatmulPolicy(
         default=default, logits=logits,
         backend=backend if backend is not None else cfg.matmul_backend,
+        attn_backend=(attn_backend if attn_backend is not None
+                      else cfg.attn_backend),
         tiles=tiles)
 
 

@@ -58,6 +58,12 @@ __all__ = [
     "register_backend",
     "get_backend",
     "available_backends",
+    "AttentionBackend",
+    "register_attention_backend",
+    "get_attention_backend",
+    "available_attention_backends",
+    "attention_forward",
+    "attention_decode",
     "tile_for",
     "set_tiles",
     "autotune_tiles",
@@ -305,12 +311,19 @@ class MatmulRoute:
 
     ``peinsum``/``pmatmul``/``refined_matmul`` accept a route anywhere a
     policy string is accepted; a bare string means (policy, backend="xla").
+
+    ``attn`` names the FUSED-OP backend for the attention kernel family
+    (``register_attention_backend``): unlike ``backend`` — which routes
+    the 2-D-reducible einsums a spec decomposes into — it selects a
+    whole named fused op (online-softmax flash attention).  Only
+    ``attention_forward``/``attention_decode`` read it.
     """
 
     precision: str = "bf16"
     backend: str = "xla"
     tiles: TileConfig | None = None    # None -> shape-keyed tile cache
     interpret: bool | None = None      # None -> default_interpret()
+    attn: str = "xla"                  # attention kernel-family backend
 
 
 def as_route(policy: "str | MatmulRoute") -> MatmulRoute:
@@ -341,6 +354,12 @@ class MatmulPolicy(PrecisionPolicy):
     embed_backend: str | None = None
     tiles: TileConfig | None = None
     interpret: bool | None = None
+    # Which FUSED attention kernel the attention sublayers run
+    # (register_attention_backend name: "xla" = chunked two-GEMM
+    # reference, "pallas_fused" = flash-attention Pallas kernels).
+    # Orthogonal to attention_backend, which routes the GEMMs the
+    # reference path decomposes into.
+    attn_backend: str = "xla"
 
     def backend_for(self, family: str) -> str:
         v = getattr(self, f"{family}_backend", None)
@@ -352,6 +371,7 @@ class MatmulPolicy(PrecisionPolicy):
             backend=self.backend_for(family),
             tiles=self.tiles,
             interpret=self.interpret,
+            attn=self.attn_backend,
         )
 
     # Models call policy.for_(family) and hand the result to peinsum;
@@ -587,6 +607,138 @@ def routed_einsum(spec: str, a: jax.Array, b: jax.Array,
     if plan is None:
         return xla_policy_einsum(spec, a, b, route.precision)
     return _lowered_einsum(spec, route, a, b)
+
+
+# ============================================== attention kernel family
+#
+# The first NON-GEMM family in the registry: a named fused op rather
+# than a 2-D-reducible einsum.  A backend supplies the whole
+# online-softmax attention pipeline (the paper's fused WMMA/CUTLASS
+# pipeline analogue) instead of one GEMM the router chains:
+#
+#   ``xla``           the chunked two-GEMM reference path (score and
+#                     value contractions through ``routed_einsum``,
+#                     online softmax in jnp between them) — the
+#                     vendor-library analogue, and the parity oracle.
+#   ``pallas_fused``  flash-attention Pallas kernels
+#                     (``kernels.attention_fused``): score tile never
+#                     leaves VMEM, policy ladder fused in-kernel,
+#                     custom-VJP backward on the same kernels.
+#
+# Both entries are lazily imported so core stays import-light and
+# acyclic (models/ and kernels/ import this module).
+
+# forward(q, k, v, *, causal, window, softcap, route, kv_chunk) and
+# decode(q, k_cache, v_cache, pos, *, window, softcap, route);
+# q (B,Sq,Kv,G,hd) pre-scaled, k/v (B,Skv,Kv,hd), fp32 out.
+AttnFn = Callable[..., jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionBackend:
+    name: str
+    forward: AttnFn
+    decode: AttnFn
+
+
+_ATTN_BACKENDS: dict[str, AttentionBackend] = {}
+
+
+def register_attention_backend(name: str, *, forward: AttnFn,
+                               decode: AttnFn) -> AttentionBackend:
+    """Register (or replace) a named fused-attention backend."""
+    backend = AttentionBackend(name=name, forward=forward, decode=decode)
+    _ATTN_BACKENDS[name] = backend
+    return backend
+
+
+def get_attention_backend(name: str) -> AttentionBackend:
+    if name not in _ATTN_BACKENDS:
+        raise ValueError(
+            f"unknown attention backend {name!r}; registered: "
+            f"{available_attention_backends()}")
+    return _ATTN_BACKENDS[name]
+
+
+def available_attention_backends() -> tuple[str, ...]:
+    return tuple(_ATTN_BACKENDS)
+
+
+def _route_interpret(route: MatmulRoute) -> bool:
+    return default_interpret() if route.interpret is None else route.interpret
+
+
+def _xla_attn_forward(q, k, v, *, causal, window, softcap, route,
+                      kv_chunk=2048):
+    from repro.models.attention import reference_forward
+    return reference_forward(q, k, v, causal=causal, window=window,
+                             softcap=softcap, policy=route,
+                             kv_chunk=kv_chunk)
+
+
+def _xla_attn_decode(q, k_cache, v_cache, pos, *, window, softcap, route):
+    from repro.models.attention import reference_decode
+    return reference_decode(q, k_cache, v_cache, pos, window=window,
+                            softcap=softcap, policy=route)
+
+
+def _fused_attn_forward(q, k, v, *, causal, window, softcap, route,
+                        kv_chunk=2048):
+    # route.tiles deliberately NOT threaded here: TileConfig's (bm,bn,bk)
+    # describe GEMM problems; flash block_q/block_kv live in a different
+    # tiling domain (128-lane score tiles) and keep the kernel defaults.
+    del kv_chunk
+    from repro.kernels.attention_fused import flash_attention
+    return flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        precision=route.precision, interpret=_route_interpret(route))
+
+
+def _fused_attn_decode(q, k_cache, v_cache, pos, *, window, softcap, route):
+    from repro.kernels.attention_fused import flash_decode
+    return flash_decode(
+        q, k_cache, v_cache, pos, window=window, softcap=softcap,
+        precision=route.precision, interpret=_route_interpret(route))
+
+
+register_attention_backend("xla", forward=_xla_attn_forward,
+                           decode=_xla_attn_decode)
+register_attention_backend("pallas_fused", forward=_fused_attn_forward,
+                           decode=_fused_attn_decode)
+
+
+def attention_forward(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int | None = None,
+                      softcap: float | None = None,
+                      policy: "str | MatmulRoute" = "bf16",
+                      kv_chunk: int = 2048) -> jax.Array:
+    """Fused-attention dispatch (train/prefill/encode/cross shapes).
+
+    q: (B, Sq, Kv, G, hd) PRE-SCALED; k/v: (B, Skv, Kv, hd); returns
+    (B, Sq, Kv, G, hd) fp32.  ``policy`` is a precision string (runs
+    the ``xla`` reference) or a route whose ``attn`` field names a
+    registered attention backend.  Differentiable on every backend.
+    """
+    route = as_route(policy)
+    backend = get_attention_backend(route.attn)
+    return backend.forward(q, k, v, causal=causal, window=window,
+                           softcap=softcap, route=route, kv_chunk=kv_chunk)
+
+
+def attention_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, *, window: int | None = None,
+                     softcap: float | None = None,
+                     policy: "str | MatmulRoute" = "bf16") -> jax.Array:
+    """Single-token fused-attention decode against a KV cache.
+
+    ``pos`` is the PER-ROW (B,) position vector of the continuous-
+    batching engine; ``window`` selects ring-buffer vs linear masking.
+    The caches are post-write (the current token's row included).
+    """
+    route = as_route(policy)
+    backend = get_attention_backend(route.attn)
+    return backend.decode(q, k_cache, v_cache, pos, window=window,
+                          softcap=softcap, route=route)
 
 
 def gemm(a: jax.Array, b: jax.Array, *, policy: "str | MatmulRoute" = "bf16",

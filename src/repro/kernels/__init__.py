@@ -1,16 +1,22 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
 GEMM family (the paper's object of study): naive / tiled / fused-refined
-/ batched-packed. Plus the WKV6 linear-attention kernel (the memory fix
-for the rwkv6 cells, §Perf cell B). Each kernel ships with a pure-jnp
-oracle in ref.py; dispatch goes through the backend registry in
-``repro.core.matmul`` (ops.py is a thin shim over it), which is also
-how model matmuls reach these kernels when a ``MatmulPolicy`` selects
-the ``pallas``/``pallas_naive`` backends. Tests sweep shapes/dtypes in
-interpret mode.
+/ batched-packed. Attention family: fused flash-attention forward /
+decode / backward (``attention_fused`` — online softmax, causal +
+sliding-window masks, GQA, per-row-position cache decode, the policy
+ladder fused in-kernel). Plus the WKV6 linear-attention kernel (the
+memory fix for the rwkv6 cells, §Perf cell B). Each kernel ships with a
+pure-jnp oracle (ref.py / models.attention.reference_*); dispatch goes
+through the backend registries in ``repro.core.matmul`` (ops.py is a
+thin shim over the GEMM one), which is also how model matmuls reach
+these kernels when a ``MatmulPolicy`` selects the
+``pallas``/``pallas_naive`` GEMM backends or the ``pallas_fused``
+attention backend. Tests sweep shapes/dtypes in interpret mode.
 """
 
+from repro.kernels.attention_fused import flash_attention, flash_decode
 from repro.kernels.ops import gemm, gemm_batched
 from repro.kernels.wkv6 import wkv6
 
-__all__ = ["gemm", "gemm_batched", "wkv6"]
+__all__ = ["flash_attention", "flash_decode", "gemm", "gemm_batched",
+           "wkv6"]

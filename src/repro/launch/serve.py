@@ -33,7 +33,7 @@ import numpy as np
 
 from repro.configs import ARCHS, get_config, get_smoke
 from repro.configs.base import matmul_policy_for
-from repro.core.matmul import available_backends
+from repro.core.matmul import available_attention_backends, available_backends
 from repro.core.precision import PrecisionPolicy
 from repro.models import api
 from repro.runtime import serve_step
@@ -294,11 +294,17 @@ def main() -> None:
                     choices=available_backends(),
                     help="matmul backend (default: the arch's "
                          "matmul_backend, usually xla)")
+    ap.add_argument("--attn-backend", default=None,
+                    choices=available_attention_backends(),
+                    help="fused attention kernel family for prefill + "
+                         "per-slot decode (default: the arch's "
+                         "attn_backend, usually xla)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     policy = matmul_policy_for(cfg, default=args.policy,
-                               backend=args.backend)
+                               backend=args.backend,
+                               attn_backend=args.attn_backend)
     eng = ServeEngine(cfg, batch_size=args.batch, max_ctx=args.max_ctx,
                       policy=policy)
     eng.load(api.init_params(jax.random.PRNGKey(0), cfg))

@@ -38,7 +38,7 @@ import jax.numpy as jnp
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import ARCHS, get_config, get_smoke
 from repro.configs.base import matmul_policy_for
-from repro.core.matmul import available_backends
+from repro.core.matmul import available_attention_backends, available_backends
 from repro.core.precision import PrecisionPolicy
 from repro.data.pipeline import DataConfig, SyntheticLMDataset
 from repro.models import api
@@ -154,6 +154,11 @@ def main() -> None:
                     choices=available_backends(),
                     help="matmul backend (default: the arch's "
                          "matmul_backend, usually xla)")
+    ap.add_argument("--attn-backend", default=None,
+                    choices=available_attention_backends(),
+                    help="fused attention kernel family (default: the "
+                         "arch's attn_backend, usually xla = chunked "
+                         "two-GEMM reference)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--lr", type=float, default=3e-4)
@@ -163,7 +168,8 @@ def main() -> None:
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     policy = matmul_policy_for(cfg, default=args.policy,
                                logits=args.logits_policy,
-                               backend=args.backend)
+                               backend=args.backend,
+                               attn_backend=args.attn_backend)
     data_cfg = DataConfig(
         global_batch=args.batch, seq_len=args.seq,
         vocab_size=cfg.vocab_size,

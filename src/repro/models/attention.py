@@ -1,11 +1,17 @@
-"""GQA attention with RoPE, sliding windows, KV caches and flash-style
-chunked evaluation (pure JAX; memory-bounded for 32k prefill).
+"""GQA attention with RoPE, sliding windows, KV caches and
+backend-routed fused evaluation.
 
-Score and value contractions route through the precision policy
-(``policy`` argument = the per-family policy string or backend-routed
-``core.matmul.MatmulRoute``), so the paper's
-refinement ladder applies to the attention GEMMs exactly as to the
-projections.
+The score/softmax/value pipeline dispatches through the ATTENTION
+kernel family of the ``core.matmul`` registry
+(``register_attention_backend``): the ``xla`` reference backend is the
+chunked two-GEMM path implemented here (``reference_forward`` /
+``reference_decode`` — score and value contractions via ``peinsum``,
+online softmax in jnp between them), while ``pallas_fused`` runs the
+flash-attention Pallas kernels (``kernels.attention_fused``) whose
+score tile never leaves VMEM.  Either way the contractions honor the
+precision-policy ladder (``policy`` argument = policy string or
+``core.matmul.MatmulRoute``), so the paper's refinement ladder applies
+to the attention GEMMs exactly as to the projections.
 
 Sliding-window ("local") layers keep a RING-BUFFER cache of `window`
 entries: slot ``t % window`` holds token ``t`` (RoPE applied at write
@@ -21,11 +27,13 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import matmul as mm
 from repro.core.matmul import MatmulRoute
 from repro.core.refined_matmul import peinsum
 from repro.models import layers as L
 
-__all__ = ["init_attn", "attention", "AttnCache", "rope_table"]
+__all__ = ["init_attn", "attention", "AttnCache", "rope_table",
+           "reference_forward", "reference_decode"]
 
 NEG_INF = -1e30
 
@@ -139,6 +147,45 @@ def _flash_over_kv(q, k, v, mask_fn, policy, softcap, kv_chunk: int):
     return out
 
 
+# ------------------------------------------- reference (xla) backend
+
+def reference_forward(q, k, v, *, causal: bool, window: int | None,
+                      softcap: float | None, policy, kv_chunk: int = 2048):
+    """The chunked two-GEMM attention path — the registry's ``xla``
+    attention backend and the fused kernels' parity oracle.
+
+    q: (B,Sq,Kv,G,hd) pre-scaled; k/v: (B,Skv,Kv,hd). fp32 out.
+    """
+    if not causal:
+        window = None
+    if causal and window is not None:
+        mask_fn = lambda qi, ki: (ki <= qi) & (ki > qi - window)
+    elif causal:
+        mask_fn = lambda qi, ki: ki <= qi
+    else:
+        mask_fn = lambda qi, ki: (ki >= 0) & (qi >= -1)
+    return _flash_over_kv(q, k, v, mask_fn, policy, softcap,
+                          kv_chunk=min(kv_chunk, k.shape[1]))
+
+
+def reference_decode(q, k_cache, v_cache, pos, *, window: int | None,
+                     softcap: float | None, policy):
+    """Single-token decode against the post-write cache at per-row
+    positions (ring-buffer mask when ``window`` is set)."""
+    s_cache = k_cache.shape[1]
+    jdx = jnp.arange(s_cache)[None, :]               # (1, S)
+    if window is not None:
+        # Absolute position held in slot j after row i wrote pos[i].
+        abs_pos = pos[:, None] - ((pos[:, None] - jdx) % s_cache)
+        keep = abs_pos >= 0                          # (B, S)
+    else:
+        keep = jdx <= pos[:, None]                   # (B, S)
+    sc = _scores(q, k_cache, policy, softcap)        # (B,Kv,G,1,S)
+    sc = jnp.where(keep[:, None, None, None], sc, NEG_INF)
+    pr = jax.nn.softmax(sc, axis=-1)
+    return _values(pr.astype(q.dtype), v_cache, policy)
+
+
 # ------------------------------------------------------------- attention
 
 def attention(
@@ -179,9 +226,9 @@ def attention(
     if cross_kv is not None:
         # Cross-attention: no RoPE, no causal mask, static cache.
         kc, vc = cross_kv.k.astype(dtype), cross_kv.v.astype(dtype)
-        out = _flash_over_kv(
-            q, kc, vc, lambda qi, ki: jnp.ones_like(ki, bool) & (qi >= -1),
-            policy, softcap, kv_chunk=min(kv_chunk, kc.shape[1]))
+        out = mm.attention_forward(
+            q, kc, vc, causal=False, window=None, softcap=softcap,
+            policy=policy, kv_chunk=kv_chunk)
     elif mode in ("train", "prefill", "encode"):
         positions = jnp.arange(s)
         if rope_theta is not None:
@@ -192,14 +239,9 @@ def attention(
             k = apply_rope(k.astype(dtype), sin, cos)
         k, v = k.astype(dtype), v.astype(dtype)
 
-        if causal and window is not None:
-            mask_fn = lambda qi, ki: (ki <= qi) & (ki > qi - window)
-        elif causal:
-            mask_fn = lambda qi, ki: ki <= qi
-        else:
-            mask_fn = lambda qi, ki: (ki >= 0) & (qi >= -1)
-        out = _flash_over_kv(q, k, v, mask_fn, policy, softcap,
-                             kv_chunk=min(kv_chunk, s))
+        out = mm.attention_forward(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            policy=policy, kv_chunk=kv_chunk)
 
         if mode == "prefill":
             if window is not None and s > window:
@@ -232,17 +274,9 @@ def attention(
         cv = cache.v.at[row, slot].set(v[:, 0].astype(cache.v.dtype))
         new_cache = AttnCache(k=ck, v=cv)
 
-        jdx = jnp.arange(s_cache)[None, :]               # (1, S)
-        if window is not None:
-            # Absolute position held in slot j after row i wrote pos[i].
-            abs_pos = pos[:, None] - ((pos[:, None] - jdx) % s_cache)
-            keep = abs_pos >= 0                          # (B, S)
-        else:
-            keep = jdx <= pos[:, None]                   # (B, S)
-        sc = _scores(q, ck, policy, softcap)             # (B,Kv,G,1,S)
-        sc = jnp.where(keep[:, None, None, None], sc, NEG_INF)
-        pr = jax.nn.softmax(sc, axis=-1)
-        out = _values(pr.astype(dtype), cv, policy)
+        out = mm.attention_decode(
+            q, ck.astype(dtype), cv.astype(dtype), pos, window=window,
+            softcap=softcap, policy=policy)
     else:
         raise ValueError(f"unknown mode {mode!r}")
 

@@ -25,7 +25,10 @@ __all__ = ["make_prefill", "make_decode", "make_engine_tick", "pad_cache",
            "abstract_cache", "abstract_params"]
 
 # Either policy flavour routes every model matmul below (MatmulPolicy
-# additionally selects the backend each family's contractions run on).
+# additionally selects the backend each family's contractions run on,
+# and its attn_backend field the fused attention kernel the prefill
+# and per-slot decode paths use — "pallas_fused" reads the ring/linear
+# KV cache at the engine's per-row position vector in-kernel).
 Policy = PrecisionPolicy | MatmulPolicy
 
 

@@ -11,7 +11,9 @@ activation memory for the 340B-class cells (see EXPERIMENTS.md §Perf).
 ``core.matmul.MatmulPolicy`` (per-family backend routing: the same
 train step runs on the Pallas kernels, gradients included — the routed
 einsum's custom VJP keeps the backward contractions on the selected
-backend).
+backend, and ``attn_backend="pallas_fused"`` additionally runs every
+attention sublayer forward AND backward on the fused flash-attention
+kernels of ``kernels.attention_fused``).
 """
 
 from __future__ import annotations

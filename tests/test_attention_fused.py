@@ -1,0 +1,324 @@
+"""Fused-attention parity suite: the ``pallas_fused`` registry backend
+must agree with the ``xla`` chunked two-GEMM reference (and with a
+dense fp64 oracle) across mask modes (causal, sliding-window, full),
+GQA grouping, the precision-policy ladder, and decode against
+ring-buffer/linear caches with stale slots — all in interpret mode on
+CPU.  Plus the training acceptance path: gradients flow through the
+fused backward kernels inside a real train step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, Segment, matmul_policy_for
+from repro.core import matmul as mm
+from repro.kernels.attention_fused import flash_attention, flash_decode
+from repro.models.attention import reference_decode, reference_forward
+
+# Fused-vs-oracle bounds per policy (U[-1,1] operands, prescaled q,
+# S<=64: softmax weights are O(1/S), outputs O(1)).
+ORACLE_BOUNDS = {"bf16": 2e-2, "refine_a": 2e-2, "refine_ab": 1e-4,
+                 "f32": 1e-5}
+# Fused-vs-reference slack: same ladder rung, but the reference rounds
+# the probability tensor to the activation dtype before the value
+# contraction while the fused kernel splits it per the policy.
+REF_ATOL = 2e-2
+
+B, S, KV, G, HD = 2, 48, 2, 2, 16
+WINDOW = 8
+
+
+def _problem(seed=0, *, s=S, kv=KV, grp=G, hd=HD, batch=B):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.uniform(-1, 1, (batch, s, kv, grp, hd))
+                    .astype(np.float32)) * hd**-0.5
+    k = jnp.asarray(rng.uniform(-1, 1, (batch, s, kv, hd))
+                    .astype(np.float32))
+    v = jnp.asarray(rng.uniform(-1, 1, (batch, s, kv, hd))
+                    .astype(np.float32))
+    return q, k, v
+
+
+def _dense_oracle(q, k, v, *, causal=True, window=None, softcap=None,
+                  keep_bs=None):
+    """fp64 full-softmax attention; keep_bs overrides with a (B,S) mask."""
+    qn, kn, vn = (np.asarray(x, np.float64) for x in (q, k, v))
+    sc = np.einsum("bqkgd,bskd->bkgqs", qn, kn)
+    if softcap is not None:
+        sc = softcap * np.tanh(sc / softcap)
+    s_q, s_k = qn.shape[1], kn.shape[1]
+    if keep_bs is not None:
+        keep = keep_bs[:, None, None, None, :]
+    else:
+        qi, ki = np.arange(s_q)[:, None], np.arange(s_k)[None, :]
+        keep = np.ones((s_q, s_k), bool)
+        if causal:
+            keep &= ki <= qi
+        if window is not None:
+            keep &= ki > qi - window
+        keep = keep[None, None, None]
+    sc = np.where(keep, sc, -1e30)
+    p = np.exp(sc - sc.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    return np.einsum("bkgqs,bskd->bqkgd", p, vn)
+
+
+# ================================================================ parity
+
+MASKS = [("causal", dict(causal=True, window=None)),
+         ("sliding", dict(causal=True, window=WINDOW)),
+         ("full", dict(causal=False, window=None))]
+
+
+class TestForwardParity:
+    @pytest.mark.parametrize("mask,kw", MASKS, ids=[m for m, _ in MASKS])
+    @pytest.mark.parametrize("policy", list(ORACLE_BOUNDS))
+    def test_fused_vs_oracle_and_reference(self, mask, kw, policy):
+        q, k, v = _problem()
+        fused = flash_attention(q, k, v, precision=policy, interpret=True,
+                                **kw)
+        oracle = _dense_oracle(q, k, v, **kw)
+        err = np.max(np.abs(np.asarray(fused, np.float64) - oracle))
+        assert err < ORACLE_BOUNDS[policy], (mask, policy, err)
+        ref = reference_forward(q, k, v, softcap=None, policy=policy, **kw)
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(ref),
+                                   atol=REF_ATOL, rtol=0)
+
+    def test_softcap(self):
+        q, k, v = _problem(1)
+        fused = flash_attention(q, k, v, softcap=5.0, precision="f32",
+                                interpret=True)
+        oracle = _dense_oracle(q, k, v, softcap=5.0)
+        assert np.max(np.abs(np.asarray(fused, np.float64) - oracle)) < 1e-5
+
+    def test_gqa_one_kv_head(self):
+        """All 4 query heads share one KV head (G=4, Kv=1)."""
+        q, k, v = _problem(2, kv=1, grp=4)
+        fused = flash_attention(q, k, v, precision="f32", interpret=True)
+        oracle = _dense_oracle(q, k, v)
+        assert np.max(np.abs(np.asarray(fused, np.float64) - oracle)) < 1e-5
+
+    def test_multi_block_kv_walk(self):
+        """S > block_kv: the online-softmax correction across KV tiles."""
+        q, k, v = _problem(3, s=300)
+        fused = flash_attention(q, k, v, precision="f32", block_q=128,
+                                block_kv=128, interpret=True)
+        oracle = _dense_oracle(q, k, v)
+        assert np.max(np.abs(np.asarray(fused, np.float64) - oracle)) < 1e-5
+
+    def test_registry_dispatch_matches_direct_call(self):
+        q, k, v = _problem(4)
+        route = mm.MatmulRoute(precision="bf16", attn="pallas_fused",
+                               interpret=True)
+        via_registry = mm.attention_forward(q, k, v, causal=True,
+                                            policy=route)
+        direct = flash_attention(q, k, v, precision="bf16", interpret=True)
+        np.testing.assert_array_equal(np.asarray(via_registry),
+                                      np.asarray(direct))
+
+
+# ================================================================ decode
+
+class TestDecodeParity:
+    def _decode_problem(self, seed, s_cache):
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.uniform(-1, 1, (B, 1, KV, G, HD))
+                        .astype(np.float32)) * HD**-0.5
+        ck = jnp.asarray(rng.uniform(-1, 1, (B, s_cache, KV, HD))
+                         .astype(np.float32))
+        cv = jnp.asarray(rng.uniform(-1, 1, (B, s_cache, KV, HD))
+                         .astype(np.float32))
+        return q, ck, cv
+
+    @pytest.mark.parametrize("policy", ["bf16", "refine_ab", "f32"])
+    def test_linear_cache_stale_slots(self, policy):
+        """Slots past each row's pos hold junk and must not leak in;
+        rows decode at DIFFERENT positions (continuous batching)."""
+        q, ck, cv = self._decode_problem(5, 32)
+        pos = jnp.asarray([7, 29], jnp.int32)
+        fused = flash_decode(q, ck, cv, pos, window=None, precision=policy,
+                             interpret=True)
+        ref = reference_decode(q, ck, cv, pos, window=None, softcap=None,
+                               policy=policy)
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(ref),
+                                   atol=REF_ATOL, rtol=0)
+        keep = (np.arange(32)[None, :] <= np.asarray(pos)[:, None])
+        oracle = _dense_oracle(q, ck, cv, keep_bs=keep)
+        bound = ORACLE_BOUNDS[policy]
+        assert np.max(np.abs(np.asarray(fused, np.float64) - oracle)) < bound
+
+    def test_ring_cache_wrapped_and_unwrapped_rows(self):
+        """Ring-buffer mask: one row pre-wrap (stale tail slots masked),
+        one row post-wrap (every slot valid, rotated)."""
+        q, ck, cv = self._decode_problem(6, WINDOW)
+        pos = jnp.asarray([3, 19], jnp.int32)
+        fused = flash_decode(q, ck, cv, pos, window=WINDOW, precision="f32",
+                             interpret=True)
+        ref = reference_decode(q, ck, cv, pos, window=WINDOW, softcap=None,
+                               policy="f32")
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(ref),
+                                   atol=1e-5, rtol=0)
+        jdx = np.arange(WINDOW)[None, :]
+        posn = np.asarray(pos)[:, None]
+        keep = (posn - ((posn - jdx) % WINDOW)) >= 0
+        oracle = _dense_oracle(q, ck, cv, keep_bs=keep)
+        assert np.max(np.abs(np.asarray(fused, np.float64) - oracle)) < 1e-5
+
+    def test_multi_block_cache(self):
+        q, ck, cv = self._decode_problem(7, 300)
+        pos = jnp.asarray([150, 299], jnp.int32)
+        fused = flash_decode(q, ck, cv, pos, window=None, precision="f32",
+                             block_kv=128, interpret=True)
+        ref = reference_decode(q, ck, cv, pos, window=None, softcap=None,
+                               policy="f32")
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(ref),
+                                   atol=1e-5, rtol=0)
+
+
+# ============================================================= gradients
+
+class TestFusedBackward:
+    def test_grads_match_reference_path(self):
+        q, k, v = _problem(8, s=40)
+
+        def fused_loss(q, k, v):
+            return flash_attention(q, k, v, precision="f32",
+                                   interpret=True).sum()
+
+        def ref_loss(q, k, v):
+            return reference_forward(q, k, v, causal=True, window=None,
+                                     softcap=None, policy="f32").sum()
+
+        gf = jax.grad(fused_loss, argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(ref_loss, argnums=(0, 1, 2))(q, k, v)
+        for name, a, b in zip("qkv", gf, gr):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-4, rtol=1e-3,
+                                       err_msg=f"d{name}")
+
+    def test_grads_sliding_window_and_softcap(self):
+        q, k, v = _problem(9, s=40)
+
+        def fused_loss(q):
+            return flash_attention(q, k, v, window=WINDOW, softcap=4.0,
+                                   precision="f32", interpret=True).sum()
+
+        def ref_loss(q):
+            return reference_forward(q, k, v, causal=True, window=WINDOW,
+                                     softcap=4.0, policy="f32").sum()
+
+        np.testing.assert_allclose(
+            np.asarray(jax.grad(fused_loss)(q)),
+            np.asarray(jax.grad(ref_loss)(q)), atol=1e-4, rtol=1e-3)
+
+
+# ====================================================== registry surface
+
+class TestAttentionRegistry:
+    def test_builtin_backends_registered(self):
+        names = mm.available_attention_backends()
+        assert "xla" in names and "pallas_fused" in names
+
+    def test_unknown_backend_raises(self):
+        q, k, v = _problem(10, s=8)
+        route = mm.MatmulRoute(attn="flashinfer")
+        with pytest.raises(ValueError, match="unknown attention backend"):
+            mm.attention_forward(q, k, v, policy=route)
+
+    def test_policy_threads_attn_backend(self):
+        p = mm.MatmulPolicy(default="bf16", attn_backend="pallas_fused")
+        assert p.for_("attention").attn == "pallas_fused"
+        assert p.for_("mlp").attn == "pallas_fused"  # route-wide field
+
+    def test_config_helper_uses_arch_default(self):
+        cfg = _tiny_config()
+        assert matmul_policy_for(cfg).attn_backend == "xla"
+        got = matmul_policy_for(cfg, attn_backend="pallas_fused")
+        assert got.attn_backend == "pallas_fused"
+
+    def test_register_custom_attention_backend(self):
+        def fwd(q, k, v, *, causal, window, softcap, route, kv_chunk=2048):
+            return jnp.zeros(q.shape, jnp.float32)
+
+        def dec(q, ck, cv, pos, *, window, softcap, route):
+            return jnp.zeros(q.shape, jnp.float32)
+
+        mm.register_attention_backend("test_zero", forward=fwd, decode=dec)
+        try:
+            q, k, v = _problem(11, s=8)
+            out = mm.attention_forward(
+                q, k, v, policy=mm.MatmulRoute(attn="test_zero"))
+            assert float(jnp.abs(out).max()) == 0.0
+        finally:
+            mm._ATTN_BACKENDS.pop("test_zero", None)
+
+
+# ========================================================== train accept
+
+def _tiny_config(**kw) -> ModelConfig:
+    return ModelConfig(
+        name="tiny", family="dense", d_model=32, num_layers=2,
+        segments=(Segment(("attn", "mlp"), 2),), vocab_size=128,
+        num_heads=4, num_kv_heads=2, head_dim=16, d_ff=64,
+        mlp_kind="swiglu", **kw)
+
+
+class TestModelOnFusedAttention:
+    def test_prefill_matches_xla_attention(self):
+        from repro.models import api
+        cfg = _tiny_config()
+        params = api.init_params(jax.random.PRNGKey(0), cfg)
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                    cfg.vocab_size)
+        lx, _ = api.prefill(params, {"tokens": tokens}, cfg,
+                            policy=mm.MatmulPolicy(default="bf16"))
+        lf, _ = api.prefill(
+            params, {"tokens": tokens}, cfg,
+            policy=mm.MatmulPolicy(default="bf16",
+                                   attn_backend="pallas_fused",
+                                   interpret=True))
+        assert np.all(np.isfinite(np.asarray(lf, np.float32)))
+        np.testing.assert_allclose(np.asarray(lf), np.asarray(lx),
+                                   atol=2e-2, rtol=1e-2)
+
+    def test_decode_step_on_fused_backend(self):
+        from repro.models import api
+        cfg = _tiny_config()
+        pol = mm.MatmulPolicy(default="bf16", attn_backend="pallas_fused",
+                              interpret=True)
+        polx = mm.MatmulPolicy(default="bf16")
+        params = api.init_params(jax.random.PRNGKey(0), cfg)
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                    cfg.vocab_size)
+        logits, cache = api.prefill(params, {"tokens": tokens}, cfg,
+                                    policy=pol)
+        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        # staggered per-row positions, as the serve engine produces
+        pos = jnp.asarray([8, 5], jnp.int32)
+        lf, _ = api.decode(params, cache, nxt, pos, cfg, policy=pol)
+        lx, _ = api.decode(params, cache, nxt, pos, cfg, policy=polx)
+        assert lf.shape == (2, 1, cfg.vocab_size)
+        np.testing.assert_allclose(np.asarray(lf), np.asarray(lx),
+                                   atol=2e-2, rtol=1e-2)
+
+    def test_train_step_grads_through_fused_attention(self):
+        """Acceptance: a real train step (loss + backward + AdamW) runs
+        with the attention sublayers on the fused Pallas kernels, under
+        remat, and produces finite loss/grads."""
+        from repro.models import api
+        from repro.optim import adamw
+        from repro.runtime.train_step import make_train_step
+        cfg = _tiny_config()
+        pol = mm.MatmulPolicy(default="bf16", attn_backend="pallas_fused",
+                              interpret=True)
+        params = api.init_params(jax.random.PRNGKey(0), cfg)
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                    cfg.vocab_size)
+        batch = {"tokens": tokens, "labels": tokens}
+        step = jax.jit(make_train_step(cfg, adamw.AdamWConfig(), pol,
+                                       microbatches=1, remat=True))
+        _, opt2, metrics = step(params, adamw.init(params), batch)
+        assert np.isfinite(float(metrics["loss"]))
+        assert float(metrics["grad_norm"]) > 0.0
+        assert int(opt2.step) == 1
