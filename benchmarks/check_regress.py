@@ -1,8 +1,8 @@
 """Bench-regression gate: fail CI when precision or parity drifts.
 
 Compares the freshly produced ``BENCH_gemm.json`` / ``BENCH_attention.json``
-(from ``benchmarks.run --point N``) against the COMMITTED baselines in
-``benchmarks/baselines/``.  Sun et al. (2022)'s lesson — per-instruction
+/ ``BENCH_moe.json`` (from ``benchmarks.run --point N``) against the
+COMMITTED baselines in ``benchmarks/baselines/``.  Sun et al. (2022)'s lesson — per-instruction
 numeric behavior must be regression-TESTED, not assumed — applied to our
 dispatch layer: a kernel or registry change that silently costs accuracy,
 or makes one backend drift away from the reference, turns CI red instead
@@ -15,10 +15,11 @@ Gates (timing fields are machine-dependent and deliberately NOT gated):
   error      per point, ``max_abs_error`` must not exceed the baseline
              by more than --tol (default 10%) plus an absolute floor
              that keeps ~1e-7 fp32 noise from flapping;
-  parity     per (policy[, mask]) row, each non-reference backend's
-             error ratio vs the ``xla`` reference must not grow more
-             than --tol over its baseline ratio — backends are allowed
-             to be differently accurate, but not to DRIFT apart.
+  parity     per (policy[, mask | profile]) row, each non-reference
+             backend's error ratio vs the ``xla`` reference must not
+             grow more than --tol over its baseline ratio — backends
+             are allowed to be differently accurate, but not to DRIFT
+             apart.
 
 Usage (CI bench-smoke, after ``python -m benchmarks.run --point 128``):
 
@@ -49,17 +50,25 @@ BASELINE_DIR = os.path.join(_ROOT, "benchmarks", "baselines")
 # 1e-4, a refined pass silently dropped) still trips the gate.
 ABS_FLOOR = 2e-7
 
-FILES = ("BENCH_gemm.json", "BENCH_attention.json")
+FILES = ("BENCH_gemm.json", "BENCH_attention.json", "BENCH_moe.json")
+
+# Per-matrix extra point axes beyond backend x policy (attention masks,
+# MoE group-imbalance profiles).
+_EXTRA_AXES = ("mask", "profile")
+
+
+def _extra(p: dict) -> str:
+    return "".join(f"/{p[a]}" for a in _EXTRA_AXES if a in p)
 
 
 def _point_key(p: dict) -> str:
-    key = f"{p['backend']}/{p['policy']}"
-    return key + (f"/{p['mask']}" if "mask" in p else "")
+    return f"{p['backend']}/{p['policy']}" + _extra(p)
 
 
 def _row_key(p: dict) -> str:
-    """Grouping for the parity gate: same policy (and mask), any backend."""
-    return p["policy"] + (f"/{p['mask']}" if "mask" in p else "")
+    """Grouping for the parity gate: same policy (and extra axes), any
+    backend."""
+    return p["policy"] + _extra(p)
 
 
 def _load(path: str) -> dict[str, dict]:

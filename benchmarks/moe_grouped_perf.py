@@ -1,0 +1,138 @@
+"""Grouped ragged expert-GEMM benchmark: backend x policy x imbalance.
+
+The MoE twin of the Fig.-7 batched-GEMM experiment, run through the ONE
+dispatch layer models use (the grouped kernel family of the
+``core.matmul`` registry).  Every point is a ragged grouped matmul —
+T token assignments over E experts in the sorted aligned layout — and
+reports
+
+  * measured CPU tflops on the USEFUL flops only (``pallas_grouped``
+    executes in interpret mode here, so its wall time ranks structure,
+    not silicon),
+  * max-abs-error vs a per-group fp64 oracle over the VALID rows — the
+    precision payload: the grouped kernel must land on the same ladder
+    rung as the capacity-padded reference for every policy,
+  * the ISSUED-row packing model: sorted dispatch pads each expert run
+    to one row tile, the capacity-padded dropless reference pads every
+    expert to the worst case T — ``grouped_util`` vs ``capacity_util``
+    is the occupancy headroom the paper measures as 4-of-125 Tflops/s.
+
+Group-imbalance profiles cover the router regimes: ``uniform`` (equal
+expert load), ``skewed`` (half the tokens on one expert — the hot-expert
+case capacity dispatch drops or over-pads for), and ``empty`` (experts
+with zero tokens — their tiles must be skipped, not computed).
+
+The machine-readable result lands in ``BENCH_moe.json`` (see
+``benchmarks.run``); ``benchmarks.check_regress`` gates CI on it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import matmul as mm
+from repro.core.precision import num_passes
+
+PROFILES = ("uniform", "skewed", "empty")
+
+
+def profile_sizes(profile: str, t: int, e: int) -> np.ndarray:
+    """Deterministic per-expert assignment counts summing to t."""
+    if profile == "uniform":
+        sizes = np.full(e, t // e)
+    elif profile == "skewed":
+        rest = (t - t // 2) // (e - 1)
+        sizes = np.array([t // 2] + [rest] * (e - 1))
+    elif profile == "empty":
+        live = max(e // 2, 1)
+        sizes = np.array([t // live] * live + [0] * (e - live))
+    else:
+        raise ValueError(profile)
+    sizes[0] += t - sizes.sum()
+    return sizes.astype(np.int64)
+
+
+def _problem(sizes: np.ndarray, d: int, f: int, bm: int, seed: int = 0):
+    """Sorted aligned layout for the given group sizes (+ fp64 oracle)."""
+    e = len(sizes)
+    aligned = np.maximum(-(-sizes // bm) * bm, bm)
+    offsets = np.concatenate([[0], np.cumsum(aligned)]).astype(np.int32)
+    n_buf = int(offsets[-1])
+    rng = np.random.default_rng(seed)
+    x = np.zeros((n_buf, d), np.float32)
+    for g in range(e):
+        x[offsets[g]:offsets[g] + sizes[g]] = rng.uniform(
+            -1, 1, (sizes[g], d))
+    w = rng.uniform(-1, 1, (e, d, f)).astype(np.float32)
+    oracle = np.zeros((n_buf, f))
+    valid = np.zeros(n_buf, bool)
+    for g in range(e):
+        oracle[offsets[g]:offsets[g] + sizes[g]] = (
+            x[offsets[g]:offsets[g] + sizes[g]].astype(np.float64)
+            @ w[g].astype(np.float64))
+        valid[offsets[g]:offsets[g] + sizes[g]] = True
+    return jnp.asarray(x), jnp.asarray(w), jnp.asarray(offsets), \
+        oracle, valid
+
+
+def bench_matrix(t: int = 128, reps: int = 2,
+                 policies=("bf16", "refine_a", "refine_ab", "f32"),
+                 backends=None, profiles=PROFILES, *, d: int = 64,
+                 f: int = 128, e: int = 4, interpret: bool = True) -> dict:
+    """The backend x policy x imbalance-profile matrix through the
+    grouped dispatch layer."""
+    backends = list(backends or mm.available_grouped_backends())
+    points = {}
+    rows = []
+    for profile in profiles:
+        sizes = profile_sizes(profile, t, e)
+        for backend in backends:
+            route = mm.MatmulRoute(grouped=backend, interpret=interpret)
+            tiles = mm.grouped_tiles(route, t, f, d)
+            route = dataclasses.replace(route, tiles=tiles)
+            x, w, offsets, oracle, valid = _problem(sizes, d, f, tiles.bm)
+            # Issued-row packing model: sorted-aligned rows vs the
+            # dropless capacity pad (every expert padded to T slots).
+            grouped_util = t / x.shape[0]
+            capacity_util = t / float(e * t)
+            for policy in policies:
+                r = dataclasses.replace(route, precision=policy)
+                fn = functools.partial(mm.grouped_matmul, x, w, offsets,
+                                       policy=r)
+                tm = common.time_fn(fn, reps=reps, warmup=1)
+                err = float(np.max(np.abs(
+                    np.asarray(fn(), np.float64) - oracle)[valid]))
+                tf = common.hmean_tflops(2.0 * t * d * f, tm["mean_s"])
+                points[f"{backend}/{policy}/{profile}"] = {
+                    "backend": backend, "policy": policy,
+                    "profile": profile, "t": t, "tflops": tf,
+                    "max_abs_error": err, "mean_s": tm["mean_s"],
+                    "passes": num_passes(policy),
+                    "grouped_util": grouped_util,
+                    "capacity_util": capacity_util,
+                }
+                rows.append([backend, policy, profile,
+                             f"{tm['mean_s']*1e3:.1f}ms", f"{tf:.4f}",
+                             f"{grouped_util:.2f}", f"{err:.3e}"])
+    common.print_table(
+        f"grouped backend x policy x imbalance (T={t}, E={e}, Pallas in "
+        f"interpret mode; util = useful/issued rows, capacity path = "
+        f"{1.0/e:.2f})",
+        ["backend", "policy", "profile", "cpu_time", "cpu_TF/s",
+         "util", "max_abs_err"], rows)
+    return {"t": t, "e": e, "interpret": interpret, "points": points}
+
+
+def run(t: int = 128, reps: int = 3) -> dict:
+    matrix = bench_matrix(t=t, reps=reps)
+    common.write_json("moe_grouped_perf", matrix)
+    return matrix
+
+
+if __name__ == "__main__":
+    run()

@@ -2,6 +2,7 @@
 
   Fig. 6  GEMM throughput by interface          benchmarks.gemm_perf
   Fig. 7  batched 16x16 GEMM vs batch size      benchmarks.batched_gemm_perf
+  Fig. 7  grouped ragged expert-GEMM matrix     benchmarks.moe_grouped_perf
   Fig. 8  ||e||_max vs N (+ the +-16 text expt) benchmarks.precision_error
   Fig. 9  error-vs-cost plane                   benchmarks.refine_tradeoff
   (a)     fused attention backend matrix        benchmarks.attention_perf
@@ -9,12 +10,12 @@
 
 Every run also sweeps the backend x policy matrices through the ONE
 dispatch layer (core.matmul registries — the exact code paths model
-matmuls and attention sublayers take) and writes them to
-``BENCH_gemm.json`` + ``BENCH_attention.json`` at the repo root:
-tflops + max-abs-error per point, machine-readable for CI trend
-tracking.  ``benchmarks.check_regress`` compares them against the
-committed ``benchmarks/baselines/`` and FAILS CI on error regressions
-or backend-parity drift.
+matmuls, attention sublayers and MoE expert FFNs take) and writes them
+to ``BENCH_gemm.json`` + ``BENCH_attention.json`` + ``BENCH_moe.json``
+at the repo root: tflops + max-abs-error per point, machine-readable
+for CI trend tracking.  ``benchmarks.check_regress`` compares them
+against the committed ``benchmarks/baselines/`` and FAILS CI on error
+regressions or backend-parity drift.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick]
 CI smoke: PYTHONPATH=src python -m benchmarks.run --point 128
@@ -32,6 +33,7 @@ import time
 _ROOT = os.path.join(os.path.dirname(__file__), "..")
 BENCH_JSON = os.path.join(_ROOT, "BENCH_gemm.json")
 BENCH_ATTN_JSON = os.path.join(_ROOT, "BENCH_attention.json")
+BENCH_MOE_JSON = os.path.join(_ROOT, "BENCH_moe.json")
 
 
 def write_bench_json(matrix: dict) -> str:
@@ -71,6 +73,27 @@ def write_attention_json(matrix: dict) -> str:
     return path
 
 
+def write_moe_json(matrix: dict) -> str:
+    payload = {
+        "schema": "bench_moe/v1",
+        "t": matrix["t"],
+        "e": matrix["e"],
+        "interpret": matrix["interpret"],
+        "points": [
+            {"backend": v["backend"], "policy": v["policy"],
+             "profile": v["profile"], "tflops": v["tflops"],
+             "max_abs_error": v["max_abs_error"], "mean_s": v["mean_s"],
+             "passes": v["passes"], "grouped_util": v["grouped_util"],
+             "capacity_util": v["capacity_util"]}
+            for v in matrix["points"].values()
+        ],
+    }
+    path = os.path.abspath(BENCH_MOE_JSON)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -81,7 +104,7 @@ def main() -> None:
                          "write BENCH_gemm.json + BENCH_attention.json")
     args = ap.parse_args()
 
-    from benchmarks import attention_perf, gemm_perf
+    from benchmarks import attention_perf, gemm_perf, moe_grouped_perf
 
     t0 = time.time()
     if args.point is not None:
@@ -90,7 +113,10 @@ def main() -> None:
         print(f"\nwrote {path} ({len(matrix['points'])} points)")
         amatrix = attention_perf.bench_matrix(s=args.point, reps=1)
         apath = write_attention_json(amatrix)
-        print(f"wrote {apath} ({len(amatrix['points'])} points) "
+        print(f"wrote {apath} ({len(amatrix['points'])} points)")
+        mmatrix = moe_grouped_perf.bench_matrix(t=args.point, reps=1)
+        mpath = write_moe_json(mmatrix)
+        print(f"wrote {mpath} ({len(mmatrix['points'])} points) "
               f"— all in {time.time() - t0:.1f}s")
         return
 
@@ -104,6 +130,7 @@ def main() -> None:
         gemm_perf.run(ns=(256, 512), reps=2)
         matrix = gemm_perf.bench_matrix(n=128, reps=1)
         amatrix = attention_perf.bench_matrix(s=128, reps=1)
+        mmatrix = moe_grouped_perf.bench_matrix(t=128, reps=1)
         batched_gemm_perf.run(batches=(256, 1024), reps=2)
         precision_error.run(ns=(512, 1024))
         precision_error.run(ns=(1024,), value_range=16.0)
@@ -112,12 +139,14 @@ def main() -> None:
         gemm_perf.run()
         matrix = gemm_perf.bench_matrix()
         amatrix = attention_perf.run(s=256)
+        mmatrix = moe_grouped_perf.run(t=256)
         batched_gemm_perf.run()
         precision_error.run()
         precision_error.run(ns=(1024, 4096), value_range=16.0)
         refine_tradeoff.run()
     print(f"\nwrote {write_bench_json(matrix)}")
     print(f"wrote {write_attention_json(amatrix)}")
+    print(f"wrote {write_moe_json(mmatrix)}")
 
     # Roofline table (only if dry-run artifacts exist).
     try:

@@ -91,6 +91,12 @@ class ModelConfig:
     # chunked two-GEMM path or "pallas_fused" flash-attention kernels;
     # CLI --attn-backend overrides)
     attn_backend: str = "xla"
+    # which GROUPED-GEMM kernel the MoE expert FFN runs (core.matmul
+    # grouped-family registry name: "xla" capacity-padded vmap
+    # reference with Switch dropping, or "pallas_grouped" sort-based
+    # dropless dispatch onto the ragged grouped kernel; CLI
+    # --grouped-backend overrides)
+    grouped_backend: str = "xla"
     # which shapes this arch supports (long_500k dropped for pure full-attn)
     supported_shapes: tuple[str, ...] = (
         "train_4k", "prefill_32k", "decode_32k")
@@ -120,15 +126,18 @@ def matmul_policy_for(cfg: ModelConfig, *, default: str = "bf16",
                       logits: str | None = None,
                       backend: str | None = None,
                       attn_backend: str | None = None,
+                      grouped_backend: str | None = None,
                       tiles: TileConfig | None = None) -> MatmulPolicy:
     """The launch-script policy constructor: precision knobs from CLI
-    flags, backend + attention kernel from the CLI overrides or the
-    arch's defaults."""
+    flags, backend + attention/grouped kernel families from the CLI
+    overrides or the arch's defaults."""
     return MatmulPolicy(
         default=default, logits=logits,
         backend=backend if backend is not None else cfg.matmul_backend,
         attn_backend=(attn_backend if attn_backend is not None
                       else cfg.attn_backend),
+        grouped_backend=(grouped_backend if grouped_backend is not None
+                         else cfg.grouped_backend),
         tiles=tiles)
 
 

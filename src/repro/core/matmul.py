@@ -33,6 +33,13 @@ backend + tile config; its ``for_(family)`` returns a ``MatmulRoute``
 that ``peinsum`` accepts anywhere a plain policy string is accepted, so
 models switch backends without touching call sites.
 
+Beyond the 2-D GEMM registry, two FUSED-OP kernel families live here as
+named registries of whole pipelines rather than single GEMMs: the
+attention family (``register_attention_backend``: chunked two-GEMM
+reference vs flash-attention Pallas kernels) and the grouped-GEMM
+family (``register_grouped_backend``: capacity-padded vmap reference vs
+the sorted ragged expert-GEMM kernel the dropless MoE dispatch runs).
+
 Pallas interpret mode is resolved once per process (``default_interpret``)
 unless a route pins it explicitly.
 """
@@ -41,6 +48,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import json
+import os
 import string
 from typing import Callable, Sequence
 
@@ -64,10 +73,19 @@ __all__ = [
     "available_attention_backends",
     "attention_forward",
     "attention_decode",
+    "GroupedBackend",
+    "register_grouped_backend",
+    "get_grouped_backend",
+    "available_grouped_backends",
+    "grouped_matmul",
+    "grouped_tiles",
     "tile_for",
     "set_tiles",
     "autotune_tiles",
     "clear_tile_cache",
+    "tile_cache_path",
+    "save_tile_cache",
+    "load_tile_cache",
     "default_interpret",
     "routed_einsum",
     "gemm",
@@ -122,6 +140,9 @@ _TILE_DEFAULTS: dict[str, TileConfig] = {
     "xla": TileConfig(256, 256, 256),          # unused; XLA picks its own
     "pallas": TileConfig(256, 256, 256),
     "pallas_naive": TileConfig(128, 128, 128),
+    # Grouped family: bm is the token-row tile AND the group alignment
+    # the sorted MoE dispatch pads each expert run to, so it stays small.
+    "pallas_grouped": TileConfig(128, 256, 256),
 }
 
 # Shape-keyed overrides/autotune results: (backend, m, n, k) -> TileConfig.
@@ -151,16 +172,81 @@ def clear_tile_cache() -> None:
     _TILE_CACHE.clear()
 
 
+# Persisted autotune results: serve restarts should not re-tune hot
+# shapes.  The cache file is plain JSON ("backend/m/n/k" -> [bm,bn,bk]);
+# the path comes from the REPRO_TILE_CACHE env var (the --tile-cache
+# launch flags set it) or an explicit argument.
+
+_TILE_CACHE_ENV = "REPRO_TILE_CACHE"
+
+
+def tile_cache_path(path: str | None = None) -> str | None:
+    return path if path is not None else os.environ.get(_TILE_CACHE_ENV)
+
+
+def save_tile_cache(path: str | None = None) -> str | None:
+    """Write the shape-keyed tile cache to JSON; no-op without a path.
+
+    Best-effort merge over any entries already on disk (this process's
+    results win per shape) so concurrent servers sharing one cache file
+    usually keep each other's autotune results — there is no file lock,
+    so simultaneous read-modify-writes can still lose an update; the
+    worst case is a redundant re-tune, never a wrong tile.  Writes are
+    atomic (tmp + rename) so a crash mid-save never corrupts the cache
+    a restarting server is about to load.
+    """
+    path = tile_cache_path(path)
+    if not path:
+        return None
+    payload: dict[str, list[int]] = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, ValueError):
+            payload = {}               # unreadable file: rewrite it
+    payload.update({f"{b}/{m}/{n}/{k}": [t.bm, t.bn, t.bk]
+                    for (b, m, n, k), t in sorted(_TILE_CACHE.items())})
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+    return path
+
+
+def load_tile_cache(path: str | None = None) -> int:
+    """Merge a saved tile cache into the process cache; returns the
+    number of entries loaded (0 when no path / no file).  A corrupt or
+    unreadable file degrades to an empty cache (re-tune) rather than
+    failing server startup — mirroring the save path's tolerance."""
+    path = tile_cache_path(path)
+    if not path or not os.path.exists(path):
+        return 0
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+        items = [(key.rsplit("/", 3), tiles)
+                 for key, tiles in payload.items()]
+    except (OSError, ValueError):
+        return 0
+    for (backend, m, n, k), (bm, bn, bk) in items:
+        _TILE_CACHE[(backend, int(m), int(n), int(k))] = TileConfig(
+            bm=int(bm), bn=int(bn), bk=int(bk))
+    return len(items)
+
+
 def autotune_tiles(backend: str, m: int, n: int, k: int, *,
                    policy: str = "bf16",
                    candidates: Sequence[TileConfig] | None = None,
                    reps: int = 2, interpret: bool | None = None,
-                   ) -> TileConfig:
+                   persist: bool = True) -> TileConfig:
     """Time `candidates` on the real backend path and cache the winner.
 
     Wall-clock autotune (compile excluded via one warmup call); the
     winning config lands in the shape-keyed cache so subsequent
-    dispatches for this exact shape pick it up automatically.
+    dispatches for this exact shape pick it up automatically, and — when
+    a tile-cache file is configured (REPRO_TILE_CACHE / --tile-cache)
+    and ``persist`` is left on — is saved so restarts skip the re-tune.
     """
     import time
 
@@ -189,6 +275,8 @@ def autotune_tiles(backend: str, m: int, n: int, k: int, *,
             best, best_t = cand, t
     assert best is not None
     set_tiles(backend, m, n, k, best)
+    if persist:
+        save_tile_cache()
     return best
 
 
@@ -317,6 +405,12 @@ class MatmulRoute:
     the 2-D-reducible einsums a spec decomposes into — it selects a
     whole named fused op (online-softmax flash attention).  Only
     ``attention_forward``/``attention_decode`` read it.
+
+    ``grouped`` likewise names the GROUPED-GEMM kernel-family backend
+    (``register_grouped_backend``): the ragged per-expert contraction of
+    the MoE FFN.  Only ``grouped_matmul`` (and the ``models.moe``
+    dispatch, which switches to sort-based dropless dispatch whenever a
+    non-reference grouped backend is selected) reads it.
     """
 
     precision: str = "bf16"
@@ -324,6 +418,7 @@ class MatmulRoute:
     tiles: TileConfig | None = None    # None -> shape-keyed tile cache
     interpret: bool | None = None      # None -> default_interpret()
     attn: str = "xla"                  # attention kernel-family backend
+    grouped: str = "xla"               # grouped-GEMM kernel-family backend
 
 
 def as_route(policy: "str | MatmulRoute") -> MatmulRoute:
@@ -360,6 +455,12 @@ class MatmulPolicy(PrecisionPolicy):
     # Orthogonal to attention_backend, which routes the GEMMs the
     # reference path decomposes into.
     attn_backend: str = "xla"
+    # Which GROUPED-GEMM kernel the MoE expert FFN runs
+    # (register_grouped_backend name: "xla" = capacity-padded vmap
+    # reference, "pallas_grouped" = sorted ragged grouped kernel with
+    # dropless dispatch).  Orthogonal to moe_backend, which routes the
+    # 2-D GEMMs the capacity-padded reference decomposes into.
+    grouped_backend: str = "xla"
 
     def backend_for(self, family: str) -> str:
         v = getattr(self, f"{family}_backend", None)
@@ -372,6 +473,7 @@ class MatmulPolicy(PrecisionPolicy):
             tiles=self.tiles,
             interpret=self.interpret,
             attn=self.attn_backend,
+            grouped=self.grouped_backend,
         )
 
     # Models call policy.for_(family) and hand the result to peinsum;
@@ -739,6 +841,129 @@ def attention_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     backend = get_attention_backend(route.attn)
     return backend.decode(q, k_cache, v_cache, pos, window=window,
                           softcap=softcap, route=route)
+
+
+# ================================================ grouped-GEMM kernel family
+#
+# The third kernel family: the ragged grouped GEMM of the MoE expert
+# FFN — E per-expert GEMMs whose row counts are data-dependent (the
+# paper's Fig.-7 batched-GEMM occupancy regime).  A backend computes
+#
+#   out[r] = x[r] @ w[e]   for every row r in group e's region,
+#
+# over a flat token buffer sorted by group with each group's region
+# aligned to the row tile (``grouped_tiles(...).bm``): group e occupies
+# rows [offsets[e], offsets[e+1]), interior offsets are bm-multiples,
+# padding rows are zero and come back zero.
+#
+#   ``xla``             the capacity-padded vmap reference: a strided
+#                       gather into the worst-case (E, C, D) dispatch
+#                       tensor, one ``ecd,edf->ecf`` policy-decomposed
+#                       einsum (the pre-grouped model path), scatter
+#                       back — the vendor-library analogue and the
+#                       parity oracle for the family.
+#   ``pallas_grouped``  ``kernels.gemm_grouped``: one kernel walks the
+#                       sorted token dim, scalar-prefetched group
+#                       offsets pick each tile's expert weight block via
+#                       the BlockSpec index map, dead tiles are skipped,
+#                       the policy ladder is fused in-kernel, and
+#                       custom-VJP dx/dw kernels keep training on the
+#                       fused path.
+
+# matmul(x, w, group_offsets, *, route): x (N, D) sorted+aligned,
+# w (E, D, F), group_offsets (E+1,) int32; fp32 (N, F) out.
+GroupedFn = Callable[..., jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupedBackend:
+    name: str
+    matmul: GroupedFn
+
+
+_GROUPED_BACKENDS: dict[str, GroupedBackend] = {}
+
+
+def register_grouped_backend(name: str, matmul_fn: GroupedFn,
+                             ) -> GroupedBackend:
+    """Register (or replace) a named grouped-GEMM backend."""
+    backend = GroupedBackend(name=name, matmul=matmul_fn)
+    _GROUPED_BACKENDS[name] = backend
+    return backend
+
+
+def get_grouped_backend(name: str) -> GroupedBackend:
+    if name not in _GROUPED_BACKENDS:
+        raise ValueError(
+            f"unknown grouped backend {name!r}; registered: "
+            f"{available_grouped_backends()}")
+    return _GROUPED_BACKENDS[name]
+
+
+def available_grouped_backends() -> tuple[str, ...]:
+    return tuple(_GROUPED_BACKENDS)
+
+
+def grouped_tiles(policy: "str | MatmulRoute", m: int, n: int,
+                  k: int) -> TileConfig:
+    """The tile config the grouped backend will run (m, n, k) with.
+
+    ``bm`` doubles as the GROUP ALIGNMENT: callers building the sorted
+    token buffer pad each group's region to a multiple of it and pin the
+    result on the route (``dataclasses.replace(route, tiles=...)``) so
+    dispatcher and kernel agree on the layout.  m is the real (pre-
+    alignment) token-assignment count — the shape key autotune results
+    land under.
+    """
+    route = as_route(policy)
+    tiles = route.tiles or tile_for(route.grouped, m, n, k)
+    return tiles.clamp(m, n, k)
+
+
+def _xla_grouped_matmul(x, w, group_offsets, *, route: MatmulRoute):
+    """Reference: strided gather to the worst-case-capacity (E, C, D)
+    dispatch tensor + the pre-grouped vmap path's ``ecd,edf->ecf``
+    policy einsum + scatter back.  C = N (every group could own every
+    row), so this is the memory-heavy oracle, not a production path."""
+    n, _ = x.shape
+    f = w.shape[2]
+    offsets = group_offsets.astype(jnp.int32)
+    idx = offsets[:-1, None] + jnp.arange(n, dtype=jnp.int32)[None]  # (E, C)
+    valid = idx < offsets[1:, None]
+    idx_c = jnp.minimum(idx, n - 1)
+    xe = jnp.where(valid[..., None], x[idx_c], 0)
+    he = xla_policy_einsum("ecd,edf->ecf", xe, w, route.precision)
+    out = jnp.zeros((n, f), jnp.float32)
+    contrib = jnp.where(valid[..., None], he, 0.0)
+    return out.at[idx_c.reshape(-1)].add(contrib.reshape(-1, f))
+
+
+def _pallas_grouped_matmul(x, w, group_offsets, *, route: MatmulRoute):
+    from repro.kernels.gemm_grouped import grouped_gemm
+    n, d = x.shape
+    tiles = grouped_tiles(route, n, w.shape[2], d)
+    return grouped_gemm(x, w, group_offsets, precision=route.precision,
+                        bm=tiles.bm, bn=tiles.bn, bk=tiles.bk,
+                        interpret=_route_interpret(route))
+
+
+register_grouped_backend("xla", _xla_grouped_matmul)
+register_grouped_backend("pallas_grouped", _pallas_grouped_matmul)
+
+
+def grouped_matmul(x: jax.Array, w: jax.Array, group_offsets: jax.Array,
+                   *, policy: "str | MatmulRoute" = "bf16") -> jax.Array:
+    """Ragged grouped-GEMM dispatch (the MoE expert contraction).
+
+    x: (N, D) token rows sorted by group in the aligned layout above;
+    w: (E, D, F) per-group weights; group_offsets: (E+1,) int32.
+    Returns (N, F) fp32.  ``policy`` is a precision string (runs the
+    ``xla`` reference) or a route whose ``grouped`` field names a
+    registered grouped backend.  Differentiable on every backend.
+    """
+    route = as_route(policy)
+    backend = get_grouped_backend(route.grouped)
+    return backend.matmul(x, w, group_offsets, route=route)
 
 
 def gemm(a: jax.Array, b: jax.Array, *, policy: "str | MatmulRoute" = "bf16",

@@ -4,19 +4,24 @@ GEMM family (the paper's object of study): naive / tiled / fused-refined
 / batched-packed. Attention family: fused flash-attention forward /
 decode / backward (``attention_fused`` — online softmax, causal +
 sliding-window masks, GQA, per-row-position cache decode, the policy
-ladder fused in-kernel). Plus the WKV6 linear-attention kernel (the
+ladder fused in-kernel). Grouped family: the ragged expert-GEMM of the
+dropless MoE dispatch (``gemm_grouped`` — one kernel walking the
+token dim sorted by expert with scalar-prefetched group offsets,
+custom-VJP dx/dw backward). Plus the WKV6 linear-attention kernel (the
 memory fix for the rwkv6 cells, §Perf cell B). Each kernel ships with a
-pure-jnp oracle (ref.py / models.attention.reference_*); dispatch goes
-through the backend registries in ``repro.core.matmul`` (ops.py is a
-thin shim over the GEMM one), which is also how model matmuls reach
-these kernels when a ``MatmulPolicy`` selects the
-``pallas``/``pallas_naive`` GEMM backends or the ``pallas_fused``
-attention backend. Tests sweep shapes/dtypes in interpret mode.
+pure-jnp oracle (ref.py / models.attention.reference_* / the grouped
+``xla`` registry entry); dispatch goes through the backend registries
+in ``repro.core.matmul`` (ops.py is a thin shim over the GEMM one),
+which is also how model matmuls reach these kernels when a
+``MatmulPolicy`` selects the ``pallas``/``pallas_naive`` GEMM backends
+or the ``pallas_fused`` attention / ``pallas_grouped`` grouped
+backends. Tests sweep shapes/dtypes in interpret mode.
 """
 
 from repro.kernels.attention_fused import flash_attention, flash_decode
+from repro.kernels.gemm_grouped import grouped_gemm
 from repro.kernels.ops import gemm, gemm_batched
 from repro.kernels.wkv6 import wkv6
 
 __all__ = ["flash_attention", "flash_decode", "gemm", "gemm_batched",
-           "wkv6"]
+           "grouped_gemm", "wkv6"]

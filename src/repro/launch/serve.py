@@ -25,6 +25,7 @@ from __future__ import annotations
 import argparse
 import collections
 import dataclasses
+import os
 import time
 
 import jax
@@ -33,7 +34,10 @@ import numpy as np
 
 from repro.configs import ARCHS, get_config, get_smoke
 from repro.configs.base import matmul_policy_for
-from repro.core.matmul import available_attention_backends, available_backends
+from repro.core import matmul as mm
+from repro.core.matmul import (available_attention_backends,
+                               available_backends,
+                               available_grouped_backends)
 from repro.core.precision import PrecisionPolicy
 from repro.models import api
 from repro.runtime import serve_step
@@ -299,12 +303,33 @@ def main() -> None:
                     help="fused attention kernel family for prefill + "
                          "per-slot decode (default: the arch's "
                          "attn_backend, usually xla)")
+    ap.add_argument("--grouped-backend", default=None,
+                    choices=available_grouped_backends(),
+                    help="grouped-GEMM kernel family for MoE expert "
+                         "FFNs (pallas_grouped = sort-based dropless "
+                         "dispatch; keeps decode independent of batch "
+                         "composition without worst-case capacity pads)")
+    ap.add_argument("--tile-cache", default=None, metavar="PATH",
+                    help="JSON tile-autotune cache: loaded at startup "
+                         "so restarts skip re-tuning hot shapes, and "
+                         "the persistence target for new autotune "
+                         "results (also via REPRO_TILE_CACHE)")
     args = ap.parse_args()
+
+    if args.tile_cache:
+        # The flag is both load source and persistence target — it must
+        # override any inherited REPRO_TILE_CACHE, or autotune results
+        # would save to a different file than the one just loaded.
+        os.environ["REPRO_TILE_CACHE"] = args.tile_cache
+    n = mm.load_tile_cache()          # flag or inherited REPRO_TILE_CACHE
+    if n:
+        print(f"tile cache: {n} shape(s) loaded from {mm.tile_cache_path()}")
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     policy = matmul_policy_for(cfg, default=args.policy,
                                backend=args.backend,
-                               attn_backend=args.attn_backend)
+                               attn_backend=args.attn_backend,
+                               grouped_backend=args.grouped_backend)
     eng = ServeEngine(cfg, batch_size=args.batch, max_ctx=args.max_ctx,
                       policy=policy)
     eng.load(api.init_params(jax.random.PRNGKey(0), cfg))

@@ -30,6 +30,7 @@ Usage (CPU-scale example):
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -38,7 +39,10 @@ import jax.numpy as jnp
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import ARCHS, get_config, get_smoke
 from repro.configs.base import matmul_policy_for
-from repro.core.matmul import available_attention_backends, available_backends
+from repro.core import matmul as mm
+from repro.core.matmul import (available_attention_backends,
+                               available_backends,
+                               available_grouped_backends)
 from repro.core.precision import PrecisionPolicy
 from repro.data.pipeline import DataConfig, SyntheticLMDataset
 from repro.models import api
@@ -159,17 +163,37 @@ def main() -> None:
                     help="fused attention kernel family (default: the "
                          "arch's attn_backend, usually xla = chunked "
                          "two-GEMM reference)")
+    ap.add_argument("--grouped-backend", default=None,
+                    choices=available_grouped_backends(),
+                    help="grouped-GEMM kernel family for MoE expert "
+                         "FFNs (default: the arch's grouped_backend; "
+                         "pallas_grouped = sort-based dropless dispatch "
+                         "on the ragged grouped kernel)")
+    ap.add_argument("--tile-cache", default=None, metavar="PATH",
+                    help="JSON tile-autotune cache to load now and "
+                         "persist autotune results to (also via the "
+                         "REPRO_TILE_CACHE env var)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--use-mesh", action="store_true")
     args = ap.parse_args()
 
+    if args.tile_cache:
+        # The flag is both load source and persistence target — it must
+        # override any inherited REPRO_TILE_CACHE, or autotune results
+        # would save to a different file than the one just loaded.
+        os.environ["REPRO_TILE_CACHE"] = args.tile_cache
+    n = mm.load_tile_cache()          # flag or inherited REPRO_TILE_CACHE
+    if n:
+        print(f"tile cache: {n} shape(s) loaded from {mm.tile_cache_path()}")
+
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     policy = matmul_policy_for(cfg, default=args.policy,
                                logits=args.logits_policy,
                                backend=args.backend,
-                               attn_backend=args.attn_backend)
+                               attn_backend=args.attn_backend,
+                               grouped_backend=args.grouped_backend)
     data_cfg = DataConfig(
         global_batch=args.batch, seq_len=args.seq,
         vocab_size=cfg.vocab_size,

@@ -1,11 +1,30 @@
-"""Mixture-of-Experts FFN (top-k router, capacity-bounded dispatch).
+"""Mixture-of-Experts FFN: top-k router + two dispatch layouts.
 
-Expert compute is a batch of medium-size GEMMs — structurally the
-paper's Fig.-7 batched-GEMM workload — and routes through the `moe`
-precision policy. Dispatch is gather/scatter with static shapes (no
-(T, E, C) one-hot blow-up): position-in-expert via a (T*k, E) cumsum,
-tokens over capacity are dropped (standard Switch semantics), and the
-combine is a scatter-add weighted by router probabilities.
+Expert compute is E data-dependent ragged GEMMs — structurally the
+paper's Fig.-7 batched-GEMM workload, the regime where the matrix unit
+loses the most headroom to occupancy.  The router (fp32, VPU — the
+paper's 'use CUDA cores for what Tensor Cores are bad at' point) picks
+top-k experts per token; what happens next depends on the GROUPED
+kernel-family backend carried by the matmul route:
+
+``grouped="xla"`` (default) — capacity-padded dispatch, the reference:
+  position-in-expert via a (T*k, E) cumsum, a materialized (E, C, D)
+  one-slot-per-capacity gather, tokens over capacity DROPPED (Switch
+  semantics, ``capacity_factor``), expert GEMMs as the vmap-batched
+  ``ecd,edf->ecf`` policy einsum, weighted scatter-add combine.
+
+``grouped="pallas_grouped"`` (or any registered backend) — sort-based
+  DROPLESS dispatch: argsort tokens by expert, per-expert run lengths
+  via bincount, cumsum group offsets with each run padded only to the
+  row-TILE multiple (``core.matmul.grouped_tiles(...).bm``) instead of
+  to worst-case capacity, then three ``grouped_matmul`` calls (wi / wg
+  / wo) through the grouped kernel registry — one Pallas kernel walking
+  the sorted token dim with scalar-prefetched offsets selecting each
+  tile's expert weight block (``kernels.gemm_grouped``).  No token is
+  ever dropped, no (E, C, D) tensor exists, and per-token outputs are
+  independent of batch composition (each output row is its own dot
+  product), which is what makes decode under continuous batching
+  token-exact.
 
 Sharding: the expert dim maps to the `model` mesh axis when divisible
 (dbrx: 16 experts on 16-way model axis = true EP); otherwise experts
@@ -15,9 +34,12 @@ stay replicated and the FFN hidden dim takes the TP sharding (mixtral:
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
+from repro.core import matmul as mm
 from repro.core.matmul import MatmulRoute
 from repro.core.refined_matmul import peinsum
 from repro.models import layers as L
@@ -40,45 +62,27 @@ def init_moe(key, d: int, d_ff: int, num_experts: int, mlp_kind: str,
     return p
 
 
-def moe_ffn(p: dict, x: jax.Array, *, num_experts: int, top_k: int,
-            capacity_factor: float, mlp_kind: str, policy: "str | MatmulRoute",
-            router_policy: str = "f32", dropless: bool = False,
-            ) -> tuple[jax.Array, jax.Array]:
-    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar).
+def _activate(h, g, mlp_kind: str):
+    if mlp_kind == "swiglu":
+        return jax.nn.silu(g) * h
+    if mlp_kind == "squared_relu":
+        return jnp.square(jax.nn.relu(h))
+    return jax.nn.gelu(h)
 
-    Router runs in fp32 regardless of the matmul policy (standard
-    practice: routing decisions are precision-sensitive, cheap, and on
-    the VPU anyway — the paper's 'use CUDA cores for what Tensor Cores
-    are bad at' point).
 
-    ``dropless=True`` sets capacity to the worst case (t * top_k) so no
-    token is ever dropped — used on the DECODE path, where capacity-
-    based dropping would make generation depend on batch composition
-    (and t is small, so the static worst-case dispatch stays cheap).
-    Train/prefill keep capacity-factor dispatch (Switch semantics).
+# ===================================================== capacity dispatch
+
+def _capacity_ffn(p: dict, xf: jax.Array, gate_vals, expert_idx, *,
+                  num_experts: int, top_k: int, capacity: int,
+                  mlp_kind: str, policy, dtype) -> jax.Array:
+    """The capacity-padded reference dispatch (Switch semantics).
+
+    Position-in-expert via a (T*k, E) cumsum; assignments past
+    ``capacity`` are dropped; the (E, C, D) gather feeds the vmap-
+    batched ``ecd,edf->ecf`` expert einsum; the combine is a scatter-add
+    weighted by router probabilities.  xf: (T, D) -> (T, D) fp32.
     """
-    b, s, d = x.shape
-    t = b * s
-    dtype = x.dtype
-    xf = x.reshape(t, d)
-
-    logits = peinsum("td,de->te", xf, p["router"]["w"], router_policy)
-    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)  # (T, E)
-    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)          # (T, k)
-
-    # Load-balancing auxiliary loss (Switch/Mixtral form).
-    density = jnp.mean(
-        jax.nn.one_hot(expert_idx[:, 0], num_experts, dtype=jnp.float32), 0)
-    density_proxy = jnp.mean(probs, axis=0)
-    aux_loss = num_experts * jnp.sum(density * density_proxy)
-
-    if dropless:
-        capacity = t * top_k            # worst case: every slot one expert
-    else:
-        capacity = int(capacity_factor * top_k * t / num_experts)
-        capacity = max(capacity, top_k)
-
-    # Position of each (token, slot) assignment within its expert queue.
+    t = xf.shape[0]
     flat_expert = expert_idx.reshape(-1)                          # (T*k,)
     onehot = jax.nn.one_hot(flat_expert, num_experts, dtype=jnp.int32)
     pos_in_expert = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1
@@ -100,13 +104,9 @@ def moe_ffn(p: dict, x: jax.Array, *, num_experts: int, top_k: int,
 
     # Expert FFN — batched GEMMs under the moe policy.
     h = peinsum("ecd,edf->ecf", xe, p["wi"]["w"], policy)
-    if mlp_kind == "swiglu":
-        g = peinsum("ecd,edf->ecf", xe, p["wg"]["w"], policy)
-        h = jax.nn.silu(g) * h
-    elif mlp_kind == "squared_relu":
-        h = jnp.square(jax.nn.relu(h))
-    else:
-        h = jax.nn.gelu(h)
+    g = (peinsum("ecd,edf->ecf", xe, p["wg"]["w"], policy)
+         if mlp_kind == "swiglu" else None)
+    h = _activate(h, g, mlp_kind)
     ye = peinsum("ecf,efd->ecd", h.astype(dtype), p["wo"]["w"], policy)
 
     # Combine: scatter-add each expert slot back, weighted by its gate.
@@ -116,6 +116,119 @@ def moe_ffn(p: dict, x: jax.Array, *, num_experts: int, top_k: int,
         jnp.where(keep, gates_flat, 0.0), mode="drop")
     slot_gate = slot_gate[:num_experts]
 
+    out = jnp.zeros((t, xf.shape[1]), jnp.float32)
+    return out.at[dispatch].add(ye * slot_gate[..., None], mode="drop")
+
+
+# ======================================================= sorted dispatch
+
+def _round_up(x, mult: int):
+    return ((x + mult - 1) // mult) * mult
+
+
+def _sorted_ffn(p: dict, xf: jax.Array, gate_vals, expert_idx, *,
+                num_experts: int, top_k: int, mlp_kind: str,
+                route: MatmulRoute, dtype) -> jax.Array:
+    """Dropless sort-based dispatch onto the grouped-GEMM registry.
+
+    Assignments are argsorted by expert into a flat buffer whose
+    per-expert runs are padded only to the row-tile multiple (every run
+    gets at least one tile so each expert's weight gradient block is
+    defined); ``grouped_matmul`` then runs the expert FFN as ragged
+    grouped GEMMs.  xf: (T, D) -> (T, D) fp32.
+    """
+    t, d = xf.shape
+    tk = t * top_k
+    d_ff = p["wi"]["w"].shape[-1]
+    # One tile config for dispatcher AND kernel: bm is the group align.
+    tiles = mm.grouped_tiles(route, tk, d_ff, d)
+    route = dataclasses.replace(route, tiles=tiles)
+    bm = tiles.bm
+
+    flat_expert = expert_idx.reshape(-1)                          # (T*k,)
+    order = jnp.argsort(flat_expert)                              # stable
+    counts = jnp.bincount(flat_expert, length=num_experts)
+    aligned = jnp.maximum(_round_up(counts, bm), bm)
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32),
+         jnp.cumsum(aligned).astype(jnp.int32)])                  # (E+1,)
+    # Static buffer bound: sum(aligned) <= round_up(T*k, bm) + E*bm.
+    n_buf = _round_up(tk, bm) + num_experts * bm
+
+    # Destination row of each sorted assignment: its group's aligned
+    # start plus its rank within the group (sorted order is by expert,
+    # so ranks are positions past the group's first occurrence).
+    sorted_e = flat_expert[order]
+    group_first = jnp.concatenate(
+        [jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(tk) - group_first[sorted_e]
+    dest = (offsets[:-1][sorted_e] + rank).astype(jnp.int32)      # (T*k,)
+    tok = (order // top_k).astype(jnp.int32)                      # (T*k,)
+
+    xs = jnp.zeros((n_buf, d), dtype).at[dest].set(xf[tok].astype(dtype))
+    h = mm.grouped_matmul(xs, p["wi"]["w"], offsets, policy=route)
+    g = (mm.grouped_matmul(xs, p["wg"]["w"], offsets, policy=route)
+         if mlp_kind == "swiglu" else None)
+    h = _activate(h, g, mlp_kind)
+    ys = mm.grouped_matmul(h.astype(dtype), p["wo"]["w"], offsets,
+                           policy=route)                          # (N, D)
+
+    gates = gate_vals.reshape(-1)[order]                          # (T*k,)
     out = jnp.zeros((t, d), jnp.float32)
-    out = out.at[dispatch].add(ye * slot_gate[..., None], mode="drop")
+    return out.at[tok].add(ys[dest] * gates[:, None])
+
+
+# ================================================================== FFN
+
+def moe_ffn(p: dict, x: jax.Array, *, num_experts: int, top_k: int,
+            capacity_factor: float, mlp_kind: str, policy: "str | MatmulRoute",
+            router_policy: str = "f32", dropless: bool = False,
+            ) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar).
+
+    Router runs in fp32 regardless of the matmul policy (standard
+    practice: routing decisions are precision-sensitive, cheap, and on
+    the VPU anyway).
+
+    Dispatch follows the route's grouped backend (module docstring):
+    the ``xla`` reference keeps capacity-padded Switch semantics, any
+    other registered grouped backend runs the sort-based dropless path.
+    ``dropless=True`` lifts the reference path's capacity to the worst
+    case (t * top_k) — used on the DECODE path, where capacity-based
+    dropping would make generation depend on batch composition.  The
+    sorted path is dropless by construction, so the flag is moot there.
+    """
+    b, s, d = x.shape
+    t = b * s
+    dtype = x.dtype
+    xf = x.reshape(t, d)
+
+    logits = peinsum("td,de->te", xf, p["router"]["w"], router_policy)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)  # (T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)          # (T, k)
+
+    # Load-balancing auxiliary loss (Switch -> Mixtral form): density
+    # counts ALL top-k assignments, not just the top-1 column, so a
+    # top-k>1 router is pushed to balance its full assignment load.
+    density = jnp.mean(
+        jax.nn.one_hot(expert_idx, num_experts, dtype=jnp.float32),
+        axis=(0, 1))
+    density_proxy = jnp.mean(probs, axis=0)
+    aux_loss = num_experts * jnp.sum(density * density_proxy)
+
+    route = mm.as_route(policy)
+    if route.grouped == "xla":
+        if dropless:
+            capacity = t * top_k        # worst case: every slot one expert
+        else:
+            capacity = int(capacity_factor * top_k * t / num_experts)
+            capacity = max(capacity, top_k)
+        out = _capacity_ffn(p, xf, gate_vals, expert_idx,
+                            num_experts=num_experts, top_k=top_k,
+                            capacity=capacity, mlp_kind=mlp_kind,
+                            policy=policy, dtype=dtype)
+    else:
+        out = _sorted_ffn(p, xf, gate_vals, expert_idx,
+                          num_experts=num_experts, top_k=top_k,
+                          mlp_kind=mlp_kind, route=route, dtype=dtype)
     return out.astype(dtype).reshape(b, s, d), aux_loss

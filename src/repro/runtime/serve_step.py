@@ -26,9 +26,13 @@ __all__ = ["make_prefill", "make_decode", "make_engine_tick", "pad_cache",
 
 # Either policy flavour routes every model matmul below (MatmulPolicy
 # additionally selects the backend each family's contractions run on,
-# and its attn_backend field the fused attention kernel the prefill
-# and per-slot decode paths use — "pallas_fused" reads the ring/linear
-# KV cache at the engine's per-row position vector in-kernel).
+# its attn_backend field the fused attention kernel the prefill and
+# per-slot decode paths use — "pallas_fused" reads the ring/linear KV
+# cache at the engine's per-row position vector in-kernel — and its
+# grouped_backend field the MoE expert-FFN dispatch: "pallas_grouped"
+# replaces the capacity-padded (E, C, D) gather with sort-based
+# dropless grouped GEMMs, keeping each slot's decode independent of
+# which other requests share the batch).
 Policy = PrecisionPolicy | MatmulPolicy
 
 

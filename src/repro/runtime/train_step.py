@@ -11,9 +11,13 @@ activation memory for the 340B-class cells (see EXPERIMENTS.md §Perf).
 ``core.matmul.MatmulPolicy`` (per-family backend routing: the same
 train step runs on the Pallas kernels, gradients included — the routed
 einsum's custom VJP keeps the backward contractions on the selected
-backend, and ``attn_backend="pallas_fused"`` additionally runs every
+backend, ``attn_backend="pallas_fused"`` additionally runs every
 attention sublayer forward AND backward on the fused flash-attention
-kernels of ``kernels.attention_fused``).
+kernels of ``kernels.attention_fused``, and
+``grouped_backend="pallas_grouped"`` runs every MoE expert FFN on the
+sort-based dropless grouped kernels of ``kernels.gemm_grouped`` — the
+grouped custom VJP computes dx against transposed expert weights and dw
+by per-group accumulation, so MoE training stays fused end to end).
 """
 
 from __future__ import annotations

@@ -175,6 +175,42 @@ class TestRegistry:
         finally:
             mm.clear_tile_cache()
 
+    def test_tile_cache_persists_roundtrip(self, tmp_path, monkeypatch):
+        """Satellite: autotune results survive a process restart via the
+        JSON tile cache (REPRO_TILE_CACHE / --tile-cache)."""
+        path = str(tmp_path / "tiles.json")
+        monkeypatch.setenv("REPRO_TILE_CACHE", path)
+        mm.clear_tile_cache()
+        try:
+            mm.set_tiles("pallas", 512, 384, 256, mm.TileConfig(64, 128, 64))
+            mm.set_tiles("pallas_grouped", 1024, 512, 512,
+                         mm.TileConfig(128, 256, 128))
+            assert mm.save_tile_cache() == path
+            mm.clear_tile_cache()                     # "restart"
+            assert mm.tile_for("pallas", 512, 384, 256).bm != 64
+            assert mm.load_tile_cache() == 2
+            assert mm.tile_for("pallas", 512, 384, 256) == \
+                mm.TileConfig(64, 128, 64)
+            assert mm.tile_for("pallas_grouped", 1024, 512, 512) == \
+                mm.TileConfig(128, 256, 128)
+        finally:
+            mm.clear_tile_cache()
+
+    def test_autotune_persists_to_tile_cache(self, tmp_path, monkeypatch):
+        path = str(tmp_path / "tiles.json")
+        monkeypatch.setenv("REPRO_TILE_CACHE", path)
+        mm.clear_tile_cache()
+        try:
+            cands = [mm.TileConfig(64, 64, 64)]
+            best = mm.autotune_tiles("pallas", 64, 64, 64,
+                                     candidates=cands, reps=1,
+                                     interpret=True)
+            mm.clear_tile_cache()
+            assert mm.load_tile_cache() == 1
+            assert mm.tile_for("pallas", 64, 64, 64) == best
+        finally:
+            mm.clear_tile_cache()
+
     def test_naive_backend_k_pad_respects_bk(self):
         """Satellite regression: the pallas_naive path used to hardcode
         the K padding to 128; it now comes from the tile config."""

@@ -1,0 +1,393 @@
+"""MoE grouped-GEMM kernel family: parity, grads, dispatch semantics.
+
+Four layers of coverage, all in interpret mode on CPU:
+
+  * the ragged grouped-matmul CONTRACT: every registered grouped
+    backend must agree with the per-group fp64 oracle (and with the
+    capacity-padded ``xla`` reference) within each policy's error
+    bound, across uniform / skewed / empty-expert group profiles;
+  * gradients: the custom-VJP dx/dw Pallas kernels against the
+    reference backend's autodiff (bit-exact at f32 policy);
+  * the MoE dispatch built on it: sorted dropless dispatch equals the
+    dropless capacity reference, decode outputs are independent of
+    batch composition, and the issued-work model beats worst-case
+    capacity padding on skewed profiles;
+  * the registry + serve surfaces: custom backends route, unknown names
+    fail loudly, and a staggered continuous-batching engine on
+    ``--grouped-backend pallas_grouped`` stays token-exact vs
+    batch-of-one.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import matmul as mm
+from repro.core.precision import POLICIES
+from repro.models import api
+from repro.models import moe as M
+
+# Same ladder bounds as tests/test_matmul_backends.py (U[-1,1] operands,
+# K ~ 130, slack for summation-order differences between backends).
+ERROR_BOUNDS = {
+    "bf16": 2e-1,
+    "refine_a": 1e-1,
+    "bf16x3": 1e-3,
+    "refine_ab": 1e-3,
+    "bf16x6": 1e-4,
+    "f32": 1e-4,
+}
+
+GROUPED_BACKENDS = mm.available_grouped_backends()
+
+PROFILES = {
+    "uniform": [6, 6, 6, 5],
+    "skewed": [17, 3, 2, 1],
+    "empty": [12, 0, 11, 0],
+}
+
+
+def _aligned_problem(sizes, d=130, f=50, *, policy="bf16",
+                     backend="pallas_grouped", seed=0):
+    """Sorted aligned layout + fp64 oracle for the given group sizes."""
+    route = mm.MatmulRoute(precision=policy, grouped=backend,
+                           interpret=True)
+    tiles = mm.grouped_tiles(route, int(np.sum(sizes)), f, d)
+    route = dataclasses.replace(route, tiles=tiles)
+    bm = tiles.bm
+    sizes = np.asarray(sizes)
+    aligned = np.maximum(-(-sizes // bm) * bm, bm)
+    offsets = np.concatenate([[0], np.cumsum(aligned)]).astype(np.int32)
+    rng = np.random.default_rng(seed)
+    x = np.zeros((int(offsets[-1]), d), np.float32)
+    oracle = np.zeros((int(offsets[-1]), f))
+    valid = np.zeros(int(offsets[-1]), bool)
+    w = rng.uniform(-1, 1, (len(sizes), d, f)).astype(np.float32)
+    for g, sz in enumerate(sizes):
+        x[offsets[g]:offsets[g] + sz] = rng.uniform(-1, 1, (sz, d))
+        oracle[offsets[g]:offsets[g] + sz] = (
+            x[offsets[g]:offsets[g] + sz].astype(np.float64)
+            @ w[g].astype(np.float64))
+        valid[offsets[g]:offsets[g] + sz] = True
+    return (jnp.asarray(x), jnp.asarray(w), jnp.asarray(offsets), route,
+            oracle, valid)
+
+
+# ================================================ contract parity matrix
+
+class TestGroupedContract:
+    @pytest.mark.parametrize("backend", GROUPED_BACKENDS)
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_vs_f64_oracle(self, backend, policy):
+        """Every (grouped backend, policy) point lands inside the
+        policy's error bound on a ragged skewed problem."""
+        x, w, offsets, route, oracle, valid = _aligned_problem(
+            PROFILES["skewed"], policy=policy, backend=backend)
+        out = mm.grouped_matmul(x, w, offsets, policy=route)
+        assert out.shape == oracle.shape and out.dtype == jnp.float32
+        err = np.max(np.abs(np.asarray(out, np.float64) - oracle)[valid])
+        assert err < ERROR_BOUNDS[policy], (backend, policy, err)
+
+    @pytest.mark.parametrize("profile", sorted(PROFILES))
+    @pytest.mark.parametrize("policy", ["bf16", "refine_ab", "f32"])
+    def test_backend_parity_across_profiles(self, profile, policy):
+        """pallas_grouped equals the capacity-padded xla reference on
+        every imbalance profile — including empty experts, whose tiles
+        must be SKIPPED (still-zero output), not computed."""
+        x, w, offsets, route, _, valid = _aligned_problem(
+            PROFILES[profile], policy=policy)
+        out_p = mm.grouped_matmul(x, w, offsets, policy=route)
+        out_x = mm.grouped_matmul(
+            x, w, offsets, policy=dataclasses.replace(route, grouped="xla"))
+        np.testing.assert_allclose(
+            np.asarray(out_p)[valid], np.asarray(out_x)[valid],
+            rtol=1e-5, atol=1e-5)
+        # padding + dead rows come back zero on the kernel path
+        assert not np.asarray(out_p)[~valid].any()
+
+    def test_padding_rows_do_not_leak(self):
+        """Garbage in padding rows must not reach valid outputs (the
+        kernel may compute them, but groups are tile-isolated) — only
+        the documented ZERO-padding contract is load-bearing."""
+        x, w, offsets, route, oracle, valid = _aligned_problem(
+            PROFILES["uniform"], policy="f32")
+        out_clean = mm.grouped_matmul(x, w, offsets, policy=route)
+        noisy = np.asarray(x).copy()
+        noisy[~valid] = 1e3                    # violate on purpose...
+        out_noisy = mm.grouped_matmul(jnp.asarray(noisy), w, offsets,
+                                      policy=route)
+        np.testing.assert_array_equal(        # ...valid rows unaffected
+            np.asarray(out_clean)[valid], np.asarray(out_noisy)[valid])
+
+    def test_grads_match_reference_exactly_at_f32(self):
+        """The custom-VJP dx (grouped GEMM vs transposed weights) and dw
+        (per-group accumulation over sorted runs) kernels are bit-exact
+        against the reference backend's autodiff at f32 policy."""
+        x, w, offsets, route, _, _ = _aligned_problem(
+            PROFILES["empty"], policy="f32")
+
+        def loss(backend):
+            r = dataclasses.replace(route, grouped=backend)
+
+            def f(x, w):
+                return (mm.grouped_matmul(x, w, offsets, policy=r) ** 2).sum()
+
+            return jax.grad(f, argnums=(0, 1))(x, w)
+
+        (dx_p, dw_p), (dx_x, dw_x) = loss("pallas_grouped"), loss("xla")
+        np.testing.assert_array_equal(np.asarray(dx_p), np.asarray(dx_x))
+        np.testing.assert_array_equal(np.asarray(dw_p), np.asarray(dw_x))
+
+    def test_grads_with_asymmetric_tiles(self):
+        """Regression: with bn != bk the backward kernels swap D/F tile
+        roles; the remainder columns of the cotangent must still reach
+        dx (they were floored away before both dims were padded to a
+        common tile quantum)."""
+        from repro.kernels.gemm_grouped import grouped_gemm
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.uniform(-1, 1, (8, 64)).astype(np.float32))
+        w = jnp.asarray(rng.uniform(-1, 1, (1, 64, 384)).astype(np.float32))
+        off = jnp.asarray([0, 8], jnp.int32)
+
+        def f(x, w):
+            return grouped_gemm(x, w, off, precision="f32", bm=8,
+                                bn=128, bk=256, interpret=True).sum()
+
+        dx, dw = jax.grad(f, argnums=(0, 1))(x, w)
+        np.testing.assert_allclose(
+            np.asarray(dx), np.asarray(w)[0].sum(axis=1)[None, :]
+            .repeat(8, axis=0), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(
+            np.asarray(dw)[0],
+            np.asarray(x).sum(axis=0)[:, None].repeat(384, axis=1),
+            rtol=1e-4, atol=1e-4)
+
+    def test_grads_track_reference_at_bf16(self):
+        x, w, offsets, route, _, _ = _aligned_problem(
+            PROFILES["skewed"], policy="bf16")
+
+        def loss(backend):
+            r = dataclasses.replace(route, grouped=backend)
+
+            def f(w):
+                return mm.grouped_matmul(x, w, offsets, policy=r).sum()
+
+            return jax.grad(f)(w)
+
+        dw_p, dw_x = loss("pallas_grouped"), loss("xla")
+        assert np.all(np.isfinite(np.asarray(dw_p)))
+        np.testing.assert_allclose(np.asarray(dw_p), np.asarray(dw_x),
+                                   rtol=0.05, atol=0.05)
+
+
+# ======================================================== registry surface
+
+class TestGroupedRegistry:
+    def test_unknown_backend_raises(self):
+        route = mm.MatmulRoute(grouped="megablocks")
+        with pytest.raises(ValueError, match="unknown grouped backend"):
+            mm.grouped_matmul(jnp.ones((8, 8)), jnp.ones((2, 8, 8)),
+                              jnp.asarray([0, 8, 8]), policy=route)
+
+    def test_register_custom_backend_routes(self):
+        def doubling(x, w, group_offsets, *, route):
+            return 2.0 * mm._xla_grouped_matmul(x, w, group_offsets,
+                                                route=route)
+
+        mm.register_grouped_backend("test_double", doubling)
+        try:
+            x, w, offsets, route, oracle, valid = _aligned_problem(
+                PROFILES["uniform"], policy="f32", backend="xla")
+            out = mm.grouped_matmul(
+                x, w, offsets,
+                policy=dataclasses.replace(route, grouped="test_double"))
+            np.testing.assert_allclose(
+                np.asarray(out, np.float64)[valid], 2.0 * oracle[valid],
+                rtol=1e-5, atol=1e-5)
+            assert "test_double" in mm.available_grouped_backends()
+        finally:
+            mm._GROUPED_BACKENDS.pop("test_double", None)
+
+    def test_policy_threads_grouped_backend(self):
+        p = mm.MatmulPolicy(default="bf16",
+                            grouped_backend="pallas_grouped")
+        assert p.for_("moe").grouped == "pallas_grouped"
+        from repro.configs.base import matmul_policy_for
+        from repro.configs import get_smoke
+        cfg = get_smoke("mixtral-8x7b")
+        assert matmul_policy_for(cfg).grouped_backend == cfg.grouped_backend
+        assert matmul_policy_for(
+            cfg, grouped_backend="pallas_grouped",
+        ).for_("moe").grouped == "pallas_grouped"
+
+
+# ===================================================== MoE dispatch layer
+
+def _moe_setup(top_k=2, num_experts=4, d=32, d_ff=48, mlp_kind="swiglu"):
+    p = M.init_moe(jax.random.PRNGKey(0), d, d_ff, num_experts, mlp_kind)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (2, 6, d), jnp.float32,
+                           -1, 1)
+    return p, x
+
+
+def _moe_policy(grouped, default="f32"):
+    return mm.MatmulPolicy(default=default, grouped_backend=grouped,
+                           interpret=True)
+
+
+class TestMoEDispatch:
+    @pytest.mark.parametrize("mlp_kind", ["swiglu", "gelu"])
+    def test_sorted_equals_dropless_capacity_reference(self, mlp_kind):
+        """The grouped sorted dispatch must reproduce the capacity path
+        at dropless settings (capacity_factor >= E) — same experts, same
+        gates, same math, different layout."""
+        p, x = _moe_setup(mlp_kind=mlp_kind)
+        kw = dict(num_experts=4, top_k=2, mlp_kind=mlp_kind,
+                  capacity_factor=4.0)
+        out_ref, aux_ref = M.moe_ffn(
+            p, x, policy=_moe_policy("xla").for_("moe"), **kw)
+        out_grp, aux_grp = M.moe_ffn(
+            p, x, policy=_moe_policy("pallas_grouped").for_("moe"), **kw)
+        np.testing.assert_allclose(np.asarray(out_grp), np.asarray(out_ref),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(float(aux_grp), float(aux_ref))
+
+    def test_dropless_decode_independent_of_batch_composition(self):
+        """A token's MoE output must not depend on which other tokens
+        share the batch — the property capacity dropping breaks and the
+        acceptance bar for dropless serve."""
+        p, x = _moe_setup()
+        kw = dict(num_experts=4, top_k=2, mlp_kind="swiglu",
+                  capacity_factor=1.0)
+        pol = _moe_policy("pallas_grouped").for_("moe")
+        out_both, _ = M.moe_ffn(p, x, policy=pol, **kw)
+        out_solo, _ = M.moe_ffn(p, x[:1], policy=pol, **kw)
+        np.testing.assert_array_equal(np.asarray(out_both)[0],
+                                      np.asarray(out_solo)[0])
+
+    def test_capacity_path_drops_but_sorted_path_does_not(self):
+        """With a tight capacity factor the reference path zeroes
+        overflow tokens; the sorted path still computes them."""
+        p, x = _moe_setup()
+        # Rig the router so EVERY token picks expert 0 first: capacity
+        # dispatch (cf=1 -> C=6 of 12 slots) must drop, dropless not.
+        p = dict(p, router={"w": jnp.zeros_like(p["router"]["w"])
+                            .at[:, 0].set(5.0)})
+        kw = dict(num_experts=4, top_k=2, mlp_kind="swiglu",
+                  capacity_factor=1.0)
+        out_cap, _ = M.moe_ffn(p, x, policy=_moe_policy("xla").for_("moe"),
+                               **kw)
+        out_grp, _ = M.moe_ffn(
+            p, x, policy=_moe_policy("pallas_grouped").for_("moe"), **kw)
+        out_full, _ = M.moe_ffn(p, x,
+                                policy=_moe_policy("xla").for_("moe"),
+                                dropless=True, **kw)
+        assert np.abs(np.asarray(out_cap) - np.asarray(out_full)).max() > 0
+        np.testing.assert_allclose(np.asarray(out_grp),
+                                   np.asarray(out_full),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_grads_flow_through_sorted_dispatch(self):
+        p, x = _moe_setup()
+        pol = _moe_policy("pallas_grouped", default="bf16").for_("moe")
+
+        def loss(p):
+            out, aux = M.moe_ffn(p, x, num_experts=4, top_k=2,
+                                 capacity_factor=1.25, mlp_kind="swiglu",
+                                 policy=pol)
+            return (out ** 2).sum() + aux
+
+        g = jax.grad(loss)(p)
+        leaves = jax.tree_util.tree_leaves(g)
+        assert all(np.all(np.isfinite(np.asarray(v))) for v in leaves)
+        # every expert weight receives gradient (dropless: no dead experts
+        # unless the router never picks them; top-2 of 4 over 12 tokens
+        # with random init touches all here)
+        assert float(sum(np.abs(np.asarray(v)).sum() for v in leaves)) > 0
+
+    def test_aux_loss_counts_all_topk_assignments(self):
+        """Satellite regression: the load-balancing density must count
+        every top-k assignment (Switch -> Mixtral form), not only the
+        top-1 column."""
+        p, x = _moe_setup()
+        b, s, d = x.shape
+        xf = np.asarray(x.reshape(-1, d), np.float64)
+        wr = np.asarray(p["router"]["w"], np.float64)
+        probs = np.exp(xf @ wr)
+        probs /= probs.sum(-1, keepdims=True)
+        idx = np.argsort(-probs, axis=-1)[:, :2]              # top-2
+        density = np.zeros(4)
+        for e in range(4):
+            density[e] = (idx == e).mean() * idx.shape[1]     # over T and k
+        density /= idx.shape[1]
+        expected = 4.0 * float((density * probs.mean(0)).sum())
+        _, aux = M.moe_ffn(p, x, num_experts=4, top_k=2,
+                           capacity_factor=1.25, mlp_kind="swiglu",
+                           policy=_moe_policy("xla").for_("moe"))
+        assert abs(float(aux) - expected) < 1e-4
+        # and it differs from the old top-1-only form on this router
+        top1 = np.zeros(4)
+        for e in range(4):
+            top1[e] = (idx[:, 0] == e).mean()
+        old = 4.0 * float((top1 * probs.mean(0)).sum())
+        assert abs(expected - old) > 1e-6
+
+    def test_grouped_beats_capacity_issued_work(self):
+        """The acceptance work model: on a skewed profile at real scale,
+        sorted tile-aligned padding issues far fewer GEMM rows than the
+        dropless capacity pad (E * T slots)."""
+        t, top_k, e, bm = 512, 2, 8, 128
+        tk = t * top_k
+        rng = np.random.default_rng(0)
+        # heavily skewed router: expert 0 takes half the assignments
+        counts = np.bincount(
+            np.concatenate([np.zeros(tk // 2, int),
+                            rng.integers(1, e, tk - tk // 2)]),
+            minlength=e)
+        aligned = np.maximum(-(-counts // bm) * bm, bm)
+        issued_grouped = int(aligned.sum())
+        issued_capacity = e * tk          # dropless capacity pad
+        assert issued_grouped <= issued_capacity / 3, (
+            issued_grouped, issued_capacity)
+
+
+# ========================================================== serve engine
+
+@pytest.mark.slow
+def test_staggered_serve_token_exact_on_grouped_backend():
+    """Continuous batching on --grouped-backend pallas_grouped: slots
+    admitted at different ticks must reproduce batch-of-one outputs
+    token for token (the dropless dispatch makes each slot's expert
+    compute independent of its batch neighbours)."""
+    from repro.configs import get_smoke
+    from repro.launch.serve import Request, ServeEngine
+
+    cfg = dataclasses.replace(get_smoke("mixtral-8x7b"),
+                              activation_dtype="float32")
+    policy = mm.MatmulPolicy(default="f32",
+                             grouped_backend="pallas_grouped",
+                             interpret=True)
+    params = api.init_params(jax.random.PRNGKey(3), cfg)
+    rng = np.random.default_rng(17)
+    prompts = [rng.integers(2, cfg.vocab_size, 4 + (i % 2)).astype(np.int32)
+               for i in range(3)]
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=3 + (i % 2))
+            for i, p in enumerate(prompts)]
+
+    eng = ServeEngine(cfg, batch_size=2, max_ctx=24, policy=policy)
+    eng.load(params)
+    eng.run(reqs)
+    assert all(r.done for r in reqs)
+
+    for i, p in enumerate(prompts):
+        ref = Request(rid=100 + i, prompt=p,
+                      max_new_tokens=reqs[i].max_new_tokens)
+        solo = ServeEngine(cfg, batch_size=1, max_ctx=24, policy=policy)
+        solo.load(params)
+        solo.run([ref])
+        assert reqs[i].out_tokens == ref.out_tokens, (
+            f"staggered req {i} diverged on pallas_grouped: "
+            f"{reqs[i].out_tokens} vs {ref.out_tokens}")
