@@ -2,7 +2,7 @@
 
 The attention analogue of ``gemm_perf.bench_matrix``: every point runs
 through the ONE dispatch layer models use (the attention kernel family
-of the ``core.matmul`` registry) and reports
+of the ``core.ops`` registry) and reports
 
   * measured CPU tflops (relative ranking; ``pallas_fused`` executes in
     interpret mode here, so its wall time ranks structure, not silicon),
@@ -28,10 +28,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from repro.core import matmul as mm
+from repro.core import ops
 from repro.core.precision import num_passes
 
-MASKS = ("causal", "sliding", "full", "decode")
+# The mask axis comes from the registry's family spec (OpSpec.bench_axes)
+# so the bench matrix and the capability table stay one data model.
+MASKS = dict(ops.get_family("attention").bench_axes)["mask"]
 
 
 def _rand(key, shape):
@@ -84,12 +86,12 @@ def _oracle(q, k, v, mask: str, *, window: int | None,
 
 def _dispatch(backend: str, policy: str, mask: str, q, k, v, qd, pos,
               window: int | None, interpret: bool):
-    route = mm.MatmulRoute(precision=policy, attn=backend,
-                           interpret=interpret)
+    route = ops.Route(precision=policy, backends={"attention": backend},
+                      interpret=interpret)
     if mask == "decode":
-        return mm.attention_decode(qd, k, v, pos, window=None,
-                                   softcap=None, policy=route)
-    return mm.attention_forward(
+        return ops.attention_decode(qd, k, v, pos, window=None,
+                                    softcap=None, policy=route)
+    return ops.attention_forward(
         q, k, v, causal=mask in ("causal", "sliding"),
         window=window if mask == "sliding" else None, softcap=None,
         policy=route)
@@ -101,13 +103,16 @@ def attn_flops(s_q: int, s_k: int, batch: int, heads: int,
     return 2.0 * 2.0 * batch * heads * s_q * s_k * head_dim
 
 
-def bench_matrix(s: int = 128, reps: int = 2,
-                 policies=("bf16", "refine_a", "refine_ab", "f32"),
+def bench_matrix(s: int = 128, reps: int = 2, policies=None,
                  backends=None, masks=MASKS, *, batch: int = 2,
                  kv_heads: int = 2, group: int = 2, head_dim: int = 64,
                  interpret: bool = True) -> dict:
-    """The backend x policy x mask matrix through the dispatch layer."""
-    backends = list(backends or mm.available_attention_backends())
+    """The backend x policy x mask matrix through the dispatch layer —
+    point list derived from the registry (impls x bench_policies x the
+    mask bench axis), so new registrations are swept automatically."""
+    backends = list(backends or ops.available_impls("attention"))
+    policies = list(policies
+                    or ops.get_family("attention").bench_policies)
     window = max(s // 4, 1)
     q, k, v, qd, pos = _problem(s, batch=batch, kv_heads=kv_heads,
                                 group=group, head_dim=head_dim)

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks import common
-from repro.core import matmul as mm
+from repro.core.ops import available_impls
 from repro.kernels import ops
 
 
@@ -56,7 +56,7 @@ def run(n: int = 16, batches=(256, 1024, 4096, 16384), reps: int = 3) -> dict:
             # (ops.gemm_batched implements these; custom registry
             # backends are 2-D-only and would raise there)
             for backend in ("pallas", "pallas_naive"):
-                if backend not in mm.available_backends():
+                if backend not in available_impls("gemm"):
                     continue
                 t = common.time_fn(
                     functools.partial(ops.gemm_batched, a, b,

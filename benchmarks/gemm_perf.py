@@ -24,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from repro.core import matmul as mm
+from repro.core import ops
 from repro.core.precision import num_passes
 
 
@@ -62,15 +62,15 @@ def run(ns=(512, 1024, 2048), reps: int = 5) -> dict:
             rows.append([name, n, f"{t['mean_s']*1e3:.1f}ms", f"{tf:.3f}",
                          "-", "measured(CPU)"])
 
-        # Non-XLA registry backends: interpret-mode correctness timing at
-        # small N only + TPU projection for the paper's headline shapes.
-        # Same dispatch path the models run (core.matmul registry).
+        # Non-reference registry impls: interpret-mode correctness timing
+        # at small N only + TPU projection for the paper's headline
+        # shapes.  Same dispatch path the models run (core.ops registry).
         if n <= 512:
-            for backend in mm.available_backends():
-                if backend == "xla":
+            for backend in ops.available_impls("gemm"):
+                if backend == ops.reference_impl("gemm"):
                     continue
                 t = common.time_fn(
-                    functools.partial(mm.gemm, a, b, policy="bf16",
+                    functools.partial(ops.gemm, a, b, policy="bf16",
                                       backend=backend, interpret=True),
                     reps=2, warmup=1)
                 results[f"{backend}_N{n}"] = {**t, "note": "interpret mode"}
@@ -104,18 +104,20 @@ def run(ns=(512, 1024, 2048), reps: int = 5) -> dict:
     return results
 
 
-def bench_matrix(n: int = 256, reps: int = 2,
-                 policies=("bf16", "refine_a", "bf16x3", "refine_ab",
-                           "bf16x6", "f32"),
+def bench_matrix(n: int = 256, reps: int = 2, policies=None,
                  backends=None, interpret: bool = True) -> dict:
     """The backend x policy matrix through the ONE dispatch layer.
 
-    Per point: measured CPU tflops (relative ranking; Pallas backends run
+    The point list is DERIVED FROM THE REGISTRY — every registered gemm
+    impl x the family's ``bench_policies`` — so a new registration is
+    benchmarked (and regression-gated) without touching this file.
+    Per point: measured CPU tflops (relative ranking; Pallas impls run
     in interpret mode here) + max-abs-error vs the fp64 oracle — the
     machine-readable payload behind BENCH_gemm.json (CI smoke runs one
     small point of this).
     """
-    backends = list(backends or mm.available_backends())
+    backends = list(backends or ops.available_impls("gemm"))
+    policies = list(policies or ops.get_family("gemm").bench_policies)
     key = jax.random.PRNGKey(n)
     a = jax.random.uniform(key, (n, n), jnp.float32, -1, 1)
     b = jax.random.uniform(jax.random.fold_in(key, 1), (n, n),
@@ -126,7 +128,7 @@ def bench_matrix(n: int = 256, reps: int = 2,
     rows = []
     for backend in backends:
         for policy in policies:
-            fn = functools.partial(mm.gemm, a, b, policy=policy,
+            fn = functools.partial(ops.gemm, a, b, policy=policy,
                                    backend=backend, interpret=interpret)
             t = common.time_fn(fn, reps=reps, warmup=1)
             err = float(np.max(np.abs(

@@ -2,7 +2,7 @@
 
 The MoE twin of the Fig.-7 batched-GEMM experiment, run through the ONE
 dispatch layer models use (the grouped kernel family of the
-``core.matmul`` registry).  Every point is a ragged grouped matmul —
+``core.ops`` registry).  Every point is a ragged grouped matmul —
 T token assignments over E experts in the sorted aligned layout — and
 reports
 
@@ -35,10 +35,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from repro.core import matmul as mm
+from repro.core import ops
 from repro.core.precision import num_passes
 
-PROFILES = ("uniform", "skewed", "empty")
+# The imbalance-profile axis comes from the registry's family spec
+# (OpSpec.bench_axes) so the bench matrix stays registry-derived.
+PROFILES = dict(ops.get_family("grouped").bench_axes)["profile"]
 
 
 def profile_sizes(profile: str, t: int, e: int) -> np.ndarray:
@@ -60,7 +62,7 @@ def profile_sizes(profile: str, t: int, e: int) -> np.ndarray:
 def _problem(sizes: np.ndarray, d: int, f: int, bm: int, seed: int = 0):
     """Sorted aligned layout for the given group sizes (+ fp64 oracle)."""
     e = len(sizes)
-    aligned = np.maximum(-(-sizes // bm) * bm, bm)
+    aligned = ops.align_group_counts(sizes, bm)   # shared with models.moe
     offsets = np.concatenate([[0], np.cumsum(aligned)]).astype(np.int32)
     n_buf = int(offsets[-1])
     rng = np.random.default_rng(seed)
@@ -80,20 +82,22 @@ def _problem(sizes: np.ndarray, d: int, f: int, bm: int, seed: int = 0):
         oracle, valid
 
 
-def bench_matrix(t: int = 128, reps: int = 2,
-                 policies=("bf16", "refine_a", "refine_ab", "f32"),
+def bench_matrix(t: int = 128, reps: int = 2, policies=None,
                  backends=None, profiles=PROFILES, *, d: int = 64,
                  f: int = 128, e: int = 4, interpret: bool = True) -> dict:
     """The backend x policy x imbalance-profile matrix through the
-    grouped dispatch layer."""
-    backends = list(backends or mm.available_grouped_backends())
+    grouped dispatch layer — point list derived from the registry
+    (impls x bench_policies x the profile bench axis)."""
+    backends = list(backends or ops.available_impls("grouped"))
+    policies = list(policies or ops.get_family("grouped").bench_policies)
     points = {}
     rows = []
     for profile in profiles:
         sizes = profile_sizes(profile, t, e)
         for backend in backends:
-            route = mm.MatmulRoute(grouped=backend, interpret=interpret)
-            tiles = mm.grouped_tiles(route, t, f, d)
+            route = ops.Route(backends={"grouped": backend},
+                              interpret=interpret)
+            tiles = ops.grouped_tiles(route, t, f, d)
             route = dataclasses.replace(route, tiles=tiles)
             x, w, offsets, oracle, valid = _problem(sizes, d, f, tiles.bm)
             # Issued-row packing model: sorted-aligned rows vs the
@@ -102,7 +106,7 @@ def bench_matrix(t: int = 128, reps: int = 2,
             capacity_util = t / float(e * t)
             for policy in policies:
                 r = dataclasses.replace(route, precision=policy)
-                fn = functools.partial(mm.grouped_matmul, x, w, offsets,
+                fn = functools.partial(ops.grouped_matmul, x, w, offsets,
                                        policy=r)
                 tm = common.time_fn(fn, reps=reps, warmup=1)
                 err = float(np.max(np.abs(

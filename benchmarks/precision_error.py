@@ -25,7 +25,7 @@ POLICIES = ("bf16", "refine_a", "bf16x3", "refine_ab", "bf16x6", "f32")
 def run(ns=(512, 1024, 2048, 4096), value_range: float = 1.0,
         seed: int = 0, backend: str = "xla") -> dict:
     """``backend`` routes the whole ladder through any registered matmul
-    backend (core.matmul registry) — the paper's point that the error
+    backend (core.ops registry) — the paper's point that the error
     behaviour belongs to the ALGORITHM, not the programming interface."""
     results = {"backend": backend}
     rows = []

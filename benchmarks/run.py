@@ -9,7 +9,7 @@
   (g)     roofline table from dry-run artifacts benchmarks.roofline
 
 Every run also sweeps the backend x policy matrices through the ONE
-dispatch layer (core.matmul registries — the exact code paths model
+dispatch layer (the core.ops registry — the exact code paths model
 matmuls, attention sublayers and MoE expert FFNs take) and writes them
 to ``BENCH_gemm.json`` + ``BENCH_attention.json`` + ``BENCH_moe.json``
 at the repo root: tflops + max-abs-error per point, machine-readable
@@ -34,6 +34,46 @@ _ROOT = os.path.join(os.path.dirname(__file__), "..")
 BENCH_JSON = os.path.join(_ROOT, "BENCH_gemm.json")
 BENCH_ATTN_JSON = os.path.join(_ROOT, "BENCH_attention.json")
 BENCH_MOE_JSON = os.path.join(_ROOT, "BENCH_moe.json")
+README = os.path.join(_ROOT, "README.md")
+
+# The README capability matrix lives between these markers and is
+# REGENERATED from the registry (--update-readme); --check-readme (the
+# CI registry-docs job) fails on drift so the docs can't rot.
+_README_BEGIN = "<!-- registry-matrix:begin (benchmarks/run.py --update-readme) -->"
+_README_END = "<!-- registry-matrix:end -->"
+
+
+def readme_block() -> str:
+    from repro.core import ops
+    return f"{_README_BEGIN}\n{ops.capability_markdown()}\n{_README_END}"
+
+
+def check_readme() -> int:
+    """0 when the README matrix matches the registry, else 1."""
+    with open(README) as f:
+        text = f.read()
+    want = readme_block()
+    if want in text:
+        print("registry-docs: README capability matrix matches the "
+              "registry")
+        return 0
+    if _README_BEGIN not in text or _README_END not in text:
+        print("registry-docs: README is missing the registry-matrix "
+              "markers; run benchmarks/run.py --update-readme")
+        return 1
+    print("registry-docs: README capability matrix DRIFTED from the "
+          "registry; run benchmarks/run.py --update-readme and commit")
+    return 1
+
+
+def update_readme() -> None:
+    with open(README) as f:
+        text = f.read()
+    start = text.index(_README_BEGIN)
+    end = text.index(_README_END) + len(_README_END)
+    with open(README, "w") as f:
+        f.write(text[:start] + readme_block() + text[end:])
+    print(f"README capability matrix regenerated ({README})")
 
 
 def write_bench_json(matrix: dict) -> str:
@@ -102,7 +142,27 @@ def main() -> None:
                     help="CI smoke: run ONLY the backend x policy "
                          "matrices at one small N (interpret mode) and "
                          "write BENCH_gemm.json + BENCH_attention.json")
+    ap.add_argument("--list", action="store_true",
+                    help="print the op-registry family x impl x "
+                         "capability table (the source of every bench "
+                         "matrix) and exit")
+    ap.add_argument("--check-readme", action="store_true",
+                    help="with --list: exit 1 if the README capability "
+                         "matrix drifted from the registry (CI "
+                         "registry-docs job)")
+    ap.add_argument("--update-readme", action="store_true",
+                    help="regenerate the README capability matrix from "
+                         "the registry")
     args = ap.parse_args()
+
+    if args.list or args.check_readme or args.update_readme:
+        from repro.core import ops
+        print(ops.format_capability_table())
+        if args.update_readme:
+            update_readme()
+        if args.check_readme:
+            raise SystemExit(check_readme())
+        return
 
     from benchmarks import attention_perf, gemm_perf, moe_grouped_perf
 

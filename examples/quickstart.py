@@ -15,7 +15,7 @@ import numpy as np
 from repro.core.error import max_norm_error, random_operands
 from repro.core.precision import num_passes, split2
 from repro.core.refined_matmul import refined_matmul
-from repro.kernels import ops
+from repro.core import ops
 
 N = 1024
 a, b = random_operands(N, seed=0)

@@ -20,11 +20,13 @@ Layer kinds:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
-from repro.core.matmul import MatmulPolicy, TileConfig
+from repro.core.matmul import MatmulPolicy
+from repro.core.ops import ExecutionPolicy, TileConfig, normalize_backends
 
 __all__ = ["Segment", "ModelConfig", "ShapeSpec", "LM_SHAPES",
-           "matmul_policy_for"]
+           "execution_policy_for", "matmul_policy_for"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,25 +85,25 @@ class ModelConfig:
     norm_eps: float = 1e-5
     tie_embeddings: bool = False
     activation_dtype: str = "bfloat16"
-    # which matmul backend this arch's matmuls run on by default
-    # (core.matmul registry name; CLI --backend overrides)
+    # which registered impl each op family runs by default for this
+    # arch: a {family: impl} mapping over the repro.core.ops registry
+    # ("gemm" / "attention" / "grouped", optionally layer-scoped keys
+    # like "gemm@logits"; CLI --backend family=impl overrides).
+    # Families absent here resolve to their reference impl.
+    backends: tuple[tuple[str, str], ...] = ()
+    # DEPRECATED per-family fields (the pre-registry surface): merged
+    # into the ``backends`` mapping by execution_policy_for /
+    # matmul_policy_for; explicit ``backends`` entries win.
     matmul_backend: str = "xla"
-    # which FUSED attention kernel the attention sublayers run
-    # (core.matmul attention-family registry name: "xla" reference
-    # chunked two-GEMM path or "pallas_fused" flash-attention kernels;
-    # CLI --attn-backend overrides)
     attn_backend: str = "xla"
-    # which GROUPED-GEMM kernel the MoE expert FFN runs (core.matmul
-    # grouped-family registry name: "xla" capacity-padded vmap
-    # reference with Switch dropping, or "pallas_grouped" sort-based
-    # dropless dispatch onto the ragged grouped kernel; CLI
-    # --grouped-backend overrides)
     grouped_backend: str = "xla"
     # which shapes this arch supports (long_500k dropped for pure full-attn)
     supported_shapes: tuple[str, ...] = (
         "train_4k", "prefill_32k", "decode_32k")
 
     def __post_init__(self) -> None:
+        object.__setattr__(self, "backends",
+                           normalize_backends(self.backends))
         # "num_layers" counts mixer sublayers (attn / mamba2 / rwkv6 /
         # shared_attn); mlp/moe sublayers ride along inside the same layer.
         mixers = sum(
@@ -122,15 +124,46 @@ class ModelConfig:
         return self.num_kv_heads * self.head_dim
 
 
+def _arch_backends(cfg: ModelConfig) -> dict[str, str]:
+    """The arch's default {family: impl} mapping: legacy per-family
+    fields first, explicit ``cfg.backends`` entries win."""
+    merged = {"gemm": cfg.matmul_backend, "attention": cfg.attn_backend,
+              "grouped": cfg.grouped_backend}
+    merged.update(dict(cfg.backends))
+    return merged
+
+
+def execution_policy_for(cfg: ModelConfig, *, default: str = "bf16",
+                         logits: str | None = None,
+                         backends=None,
+                         tiles: TileConfig | None = None,
+                         fallback: bool = False,
+                         require=None) -> ExecutionPolicy:
+    """The launch-script policy constructor: precision knobs from CLI
+    flags, the op-family ``backends`` mapping from the repeatable
+    ``--backend family=impl`` CLI overrides layered over the arch's
+    defaults — validated against capability metadata at build time
+    (``require`` adds feature demands, e.g. serve's attention decode)."""
+    merged = _arch_backends(cfg)
+    merged.update(dict(normalize_backends(backends or ())))
+    return ExecutionPolicy(default=default, logits=logits, backends=merged,
+                           tiles=tiles, fallback=fallback,
+                           require=require or ())
+
+
 def matmul_policy_for(cfg: ModelConfig, *, default: str = "bf16",
                       logits: str | None = None,
                       backend: str | None = None,
                       attn_backend: str | None = None,
                       grouped_backend: str | None = None,
                       tiles: TileConfig | None = None) -> MatmulPolicy:
-    """The launch-script policy constructor: precision knobs from CLI
-    flags, backend + attention/grouped kernel families from the CLI
-    overrides or the arch's defaults."""
+    """DEPRECATED pre-registry policy constructor (one knob per kernel
+    family); kept as a thin wrapper so old call sites and flags work.
+    Use ``execution_policy_for(cfg, backends={family: impl})``."""
+    warnings.warn(
+        "matmul_policy_for is deprecated; use execution_policy_for(cfg, "
+        "backends={'gemm': ..., 'attention': ..., 'grouped': ...})",
+        DeprecationWarning, stacklevel=2)
     return MatmulPolicy(
         default=default, logits=logits,
         backend=backend if backend is not None else cfg.matmul_backend,

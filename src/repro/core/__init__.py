@@ -1,15 +1,29 @@
 """Core library: the paper's precision-refinement technique as a
 composable JAX module (splitting, policy routing, error analysis) plus
-the backend-routed matmul dispatch layer (``repro.core.matmul``)."""
+the op-registry dispatch subsystem (``repro.core.ops``: declarative
+kernel families, capability-aware routing) and its deprecated
+back-compat shim (``repro.core.matmul``)."""
 
 from repro.core.matmul import (
     MatmulPolicy,
     MatmulRoute,
-    TileConfig,
     available_backends,
-    autotune_tiles,
     get_backend,
     register_backend,
+)
+from repro.core.ops import (
+    Capabilities,
+    ExecutionPolicy,
+    KernelImpl,
+    OpSpec,
+    Route,
+    TileConfig,
+    autotune_tiles,
+    available_impls,
+    families,
+    get_impl,
+    register_family,
+    register_impl,
     tile_for,
 )
 from repro.core.precision import (
@@ -25,18 +39,33 @@ from repro.core.refined_matmul import peinsum, pmatmul, refined_matmul
 __all__ = [
     "POLICIES",
     "PrecisionPolicy",
+    # op registry (the new surface)
+    "Capabilities",
+    "ExecutionPolicy",
+    "KernelImpl",
+    "OpSpec",
+    "Route",
+    "TileConfig",
+    "available_impls",
+    "families",
+    "get_impl",
+    "register_family",
+    "register_impl",
+    # deprecated shim surface
     "MatmulPolicy",
     "MatmulRoute",
-    "TileConfig",
     "available_backends",
-    "autotune_tiles",
     "get_backend",
     "register_backend",
+    # tiles
+    "autotune_tiles",
     "tile_for",
+    # precision helpers
     "merge2",
     "num_passes",
     "split2",
     "split3",
+    # routers
     "peinsum",
     "pmatmul",
     "refined_matmul",

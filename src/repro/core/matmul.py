@@ -1,66 +1,68 @@
-"""One matmul surface: backend-routed, policy-carrying dispatch.
+"""DEPRECATED back-compat shim over the op registry (``repro.core.ops``).
 
-The paper's core exercise is running the SAME mixed-precision GEMM
-through three programming interfaces (raw WMMA, CUTLASS, cuBLAS) and
-comparing programmability/performance/precision. This module is that
-comparison made first-class: every contraction in the framework reaches
-a *backend registry* whose entries mirror the paper's taxonomy:
+The three hand-rolled per-family registries that used to live here
+(``register_backend`` / ``register_attention_backend`` /
+``register_grouped_backend`` with their ``get_*``/``available_*``
+trios) are now ONE declarative subsystem: ``repro.core.ops`` — an
+``OpSpec`` per kernel family, ``KernelImpl`` registrations carrying
+capability metadata, and a uniform ``Route``/``ExecutionPolicy``
+``backends: {family: impl}`` mapping validated at route-build time.
 
-  ``xla``           vendor-library path (the cuBLAS analogue): policy-
-                    decomposed chains of XLA dots.
-  ``pallas``        hand-tiled VMEM-staged kernels (the CUTLASS
-                    analogue): ``gemm_tiled`` / fused ``gemm_refined``.
-  ``pallas_naive``  no-staging kernel (the raw-WMMA analogue):
-                    ``gemm_naive``, one program per output tile.
+Everything importable from here still works:
 
-Three layers live here:
+  * the tile layer, ``routed_einsum``/``gemm``, the family dispatchers
+    (``attention_forward`` / ``attention_decode`` / ``grouped_matmul``
+    / ``grouped_tiles``) and ``default_interpret`` are re-exports;
+  * ``MatmulRoute`` is a thin subclass of ``ops.Route`` whose
+    historical per-family fields (``backend``/``attn``/``grouped``)
+    populate the uniform backends mapping;
+  * ``MatmulPolicy`` is a thin subclass of ``ops.ExecutionPolicy``
+    doing the same for the per-layer-family backend fields;
+  * the ``register_*`` trio wraps ``ops.register_impl`` and emits
+    ``DeprecationWarning`` — new code registers impls with capability
+    metadata directly.
 
-  * ``TileConfig`` + a shape-keyed tile cache (``tile_for`` /
-    ``set_tiles`` / ``autotune_tiles``) so backends pick block shapes
-    without callers hardcoding them;
-  * the backend registry (``register_backend`` / ``get_backend``),
-    extensible by downstream code;
-  * the einsum router (``routed_einsum``): 2-D-reducible two-operand
-    specs (`mk,kn->mn`, `...i,io->...o`, the MoE `ecd,edf->ecf`
-    per-expert contractions, attention score/value contractions) lower
-    to the registered 2-D GEMM backends — batched via ``vmap``, padded
-    to tile multiples, with a custom VJP whose backward contractions
-    route through the SAME backend — and everything else falls back to
-    the XLA path.
-
-``MatmulPolicy`` extends ``PrecisionPolicy`` with a per-layer-family
-backend + tile config; its ``for_(family)`` returns a ``MatmulRoute``
-that ``peinsum`` accepts anywhere a plain policy string is accepted, so
-models switch backends without touching call sites.
-
-Beyond the 2-D GEMM registry, two FUSED-OP kernel families live here as
-named registries of whole pipelines rather than single GEMMs: the
-attention family (``register_attention_backend``: chunked two-GEMM
-reference vs flash-attention Pallas kernels) and the grouped-GEMM
-family (``register_grouped_backend``: capacity-padded vmap reference vs
-the sorted ragged expert-GEMM kernel the dropless MoE dispatch runs).
-
-Pallas interpret mode is resolved once per process (``default_interpret``)
-unless a route pins it explicitly.
+``tests/test_backcompat_shims.py`` locks this surface.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
-import json
-import os
-import string
-from typing import Callable, Sequence
+import warnings
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import precision as prec
+from repro.core import ops
+from repro.core.ops import registry as _registry
+from repro.core.ops.attention import AttentionOps
+from repro.core.ops.grouped import _xla_grouped_matmul  # noqa: F401 (compat)
+from repro.core.ops.route import ExecutionPolicy, Route
 from repro.core.precision import PrecisionPolicy
+
+# Re-exported surface (unchanged call contracts).
+from repro.core.ops import (
+    TileConfig,
+    as_route,
+    attention_decode,
+    attention_forward,
+    autotune_tiles,
+    clear_tile_cache,
+    default_interpret,
+    gemm,
+    grouped_matmul,
+    grouped_tiles,
+    load_tile_cache,
+    routed_einsum,
+    save_tile_cache,
+    set_tiles,
+    tile_cache_path,
+    tile_for,
+    xla_policy_einsum,
+)
 
 __all__ = [
     "TileConfig",
+    "as_route",
     "MatmulRoute",
     "MatmulPolicy",
     "Backend",
@@ -92,388 +94,197 @@ __all__ = [
     "xla_policy_einsum",
 ]
 
+# The historical Backend/AttentionBackend/GroupedBackend records are all
+# the one KernelImpl shape now (name + fn + capabilities).
+Backend = AttentionBackend = GroupedBackend = ops.KernelImpl
 
-# ================================================================ interpret
-
-_DEFAULT_INTERPRET: bool | None = None
-
-
-def default_interpret() -> bool:
-    """Pallas interpret mode unless we are actually on TPU.
-
-    Resolved once per process: backend detection is stable and every
-    dispatch site shares the answer.
-    """
-    global _DEFAULT_INTERPRET
-    if _DEFAULT_INTERPRET is None:
-        _DEFAULT_INTERPRET = jax.default_backend() != "tpu"
-    return _DEFAULT_INTERPRET
+# Live views of the per-family registries (tests reach in to clean up
+# temporary registrations; popping here pops the real registry).
+_BACKENDS = _registry._IMPLS["gemm"]
+_ATTN_BACKENDS = _registry._IMPLS["attention"]
+_GROUPED_BACKENDS = _registry._IMPLS["grouped"]
 
 
-# ============================================================== tile config
-
-@dataclasses.dataclass(frozen=True)
-class TileConfig:
-    """(bm, bn, bk) block shape for one 2-D GEMM problem."""
-
-    bm: int = 256
-    bn: int = 256
-    bk: int = 256
-
-    def clamp(self, m: int, n: int, k: int) -> "TileConfig":
-        """Shrink blocks to MXU-friendly sizes no larger than the
-        (sublane-/lane-rounded) problem so padding stays small."""
-        return TileConfig(
-            bm=min(self.bm, _round_up(m, 8)),
-            bn=min(self.bn, _round_up(n, 128)),
-            bk=min(self.bk, _round_up(k, 128)),
-        )
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(f"repro.core.matmul.{old} is deprecated; use {new}",
+                  DeprecationWarning, stacklevel=3)
 
 
-def _round_up(x: int, mult: int) -> int:
-    return ((x + mult - 1) // mult) * mult
+# ========================================================== legacy registry
 
-
-# Seeded with the block shapes the kernels shipped with (gemm_tiled /
-# gemm_refined default 256^3; gemm_naive's historical 128 pads).
-_TILE_DEFAULTS: dict[str, TileConfig] = {
-    "xla": TileConfig(256, 256, 256),          # unused; XLA picks its own
-    "pallas": TileConfig(256, 256, 256),
-    "pallas_naive": TileConfig(128, 128, 128),
-    # Grouped family: bm is the token-row tile AND the group alignment
-    # the sorted MoE dispatch pads each expert run to, so it stays small.
-    "pallas_grouped": TileConfig(128, 256, 256),
-}
-
-# Shape-keyed overrides/autotune results: (backend, m, n, k) -> TileConfig.
-_TILE_CACHE: dict[tuple[str, int, int, int], TileConfig] = {}
-
-
-def tile_for(backend: str, m: int, n: int, k: int) -> TileConfig:
-    """Block shapes for one (backend, problem-shape) point.
-
-    Exact-shape overrides (``set_tiles`` / ``autotune_tiles``) win;
-    otherwise the backend's seeded default, clamped to the problem.
-    """
-    hit = _TILE_CACHE.get((backend, m, n, k))
-    if hit is not None:
-        return hit
-    base = _TILE_DEFAULTS.get(backend, TileConfig())
-    return base.clamp(m, n, k)
-
-
-def set_tiles(backend: str, m: int, n: int, k: int,
-              tiles: TileConfig) -> None:
-    """Pin the tile config for one exact problem shape."""
-    _TILE_CACHE[(backend, m, n, k)] = tiles
-
-
-def clear_tile_cache() -> None:
-    _TILE_CACHE.clear()
-
-
-# Persisted autotune results: serve restarts should not re-tune hot
-# shapes.  The cache file is plain JSON ("backend/m/n/k" -> [bm,bn,bk]);
-# the path comes from the REPRO_TILE_CACHE env var (the --tile-cache
-# launch flags set it) or an explicit argument.
-
-_TILE_CACHE_ENV = "REPRO_TILE_CACHE"
-
-
-def tile_cache_path(path: str | None = None) -> str | None:
-    return path if path is not None else os.environ.get(_TILE_CACHE_ENV)
-
-
-def save_tile_cache(path: str | None = None) -> str | None:
-    """Write the shape-keyed tile cache to JSON; no-op without a path.
-
-    Best-effort merge over any entries already on disk (this process's
-    results win per shape) so concurrent servers sharing one cache file
-    usually keep each other's autotune results — there is no file lock,
-    so simultaneous read-modify-writes can still lose an update; the
-    worst case is a redundant re-tune, never a wrong tile.  Writes are
-    atomic (tmp + rename) so a crash mid-save never corrupts the cache
-    a restarting server is about to load.
-    """
-    path = tile_cache_path(path)
-    if not path:
-        return None
-    payload: dict[str, list[int]] = {}
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                payload = json.load(f)
-        except (OSError, ValueError):
-            payload = {}               # unreadable file: rewrite it
-    payload.update({f"{b}/{m}/{n}/{k}": [t.bm, t.bn, t.bk]
-                    for (b, m, n, k), t in sorted(_TILE_CACHE.items())})
-    tmp = f"{path}.tmp"
-    with open(tmp, "w") as f:
-        json.dump(payload, f, indent=1, sort_keys=True)
-    os.replace(tmp, path)
-    return path
-
-
-def load_tile_cache(path: str | None = None) -> int:
-    """Merge a saved tile cache into the process cache; returns the
-    number of entries loaded (0 when no path / no file).  A corrupt or
-    unreadable file degrades to an empty cache (re-tune) rather than
-    failing server startup — mirroring the save path's tolerance."""
-    path = tile_cache_path(path)
-    if not path or not os.path.exists(path):
-        return 0
-    try:
-        with open(path) as f:
-            payload = json.load(f)
-        items = [(key.rsplit("/", 3), tiles)
-                 for key, tiles in payload.items()]
-    except (OSError, ValueError):
-        return 0
-    for (backend, m, n, k), (bm, bn, bk) in items:
-        _TILE_CACHE[(backend, int(m), int(n), int(k))] = TileConfig(
-            bm=int(bm), bn=int(bn), bk=int(bk))
-    return len(items)
-
-
-def autotune_tiles(backend: str, m: int, n: int, k: int, *,
-                   policy: str = "bf16",
-                   candidates: Sequence[TileConfig] | None = None,
-                   reps: int = 2, interpret: bool | None = None,
-                   persist: bool = True) -> TileConfig:
-    """Time `candidates` on the real backend path and cache the winner.
-
-    Wall-clock autotune (compile excluded via one warmup call); the
-    winning config lands in the shape-keyed cache so subsequent
-    dispatches for this exact shape pick it up automatically, and — when
-    a tile-cache file is configured (REPRO_TILE_CACHE / --tile-cache)
-    and ``persist`` is left on — is saved so restarts skip the re-tune.
-    """
-    import time
-
-    if candidates is None:
-        candidates = [
-            TileConfig(bm, bn, bk).clamp(m, n, k)
-            for bm in (128, 256) for bn in (128, 256) for bk in (128, 256)
-        ]
-        # dedupe post-clamp while preserving order
-        candidates = list(dict.fromkeys(candidates))
-    key = jax.random.PRNGKey(0)
-    a = jax.random.uniform(key, (m, k), jnp.float32, -1, 1)
-    b = jax.random.uniform(jax.random.fold_in(key, 1), (k, n),
-                           jnp.float32, -1, 1)
-    best, best_t = None, float("inf")
-    for cand in candidates:
-        def run(cand=cand):
-            return gemm(a, b, policy=policy, backend=backend, tiles=cand,
-                        interpret=interpret)
-        jax.block_until_ready(run())          # warmup/compile
-        t0 = time.perf_counter()
-        for _ in range(reps):
-            jax.block_until_ready(run())
-        t = (time.perf_counter() - t0) / reps
-        if t < best_t:
-            best, best_t = cand, t
-    assert best is not None
-    set_tiles(backend, m, n, k, best)
-    if persist:
-        save_tile_cache()
-    return best
-
-
-# ========================================================= backend registry
-
-# A backend's core contract is ONE bf16-input / fp32-accumulate 2-D GEMM
-# on tile-aligned operands; ``fused_policies`` lists the refinement
-# policies it additionally implements in a single fused call. The router
-# decomposes every other policy into bf16 passes (paper Fig. 5: chained
-# narrow GEMMs) or falls back to the XLA path for f32.
-GemmFn = Callable[..., jax.Array]
-
-
-@dataclasses.dataclass(frozen=True)
-class Backend:
-    name: str
-    gemm: GemmFn                       # (a, b, *, policy, tiles, interpret)
-    fused_policies: frozenset[str]     # policies gemm handles natively
-    pads_to_tiles: bool = True         # router pads operands to multiples
-
-
-_BACKENDS: dict[str, Backend] = {}
-
-
-def register_backend(name: str, gemm_fn: GemmFn, *,
-                     fused_policies: Sequence[str] = ("bf16",),
+def register_backend(name: str, gemm_fn, *,
+                     fused_policies=("bf16",),
                      pads_to_tiles: bool = True,
-                     default_tiles: TileConfig | None = None) -> Backend:
-    """Register (or replace) a named 2-D GEMM backend."""
-    backend = Backend(name=name, gemm=gemm_fn,
-                      fused_policies=frozenset(fused_policies),
-                      pads_to_tiles=pads_to_tiles)
-    _BACKENDS[name] = backend
-    if default_tiles is not None:
-        _TILE_DEFAULTS[name] = default_tiles
-    return backend
+                     default_tiles: TileConfig | None = None):
+    """DEPRECATED: register a 2-D GEMM impl (no capability metadata —
+    assumes the full policy ladder via router decomposition, vjp via
+    the router's custom VJP).  Use ``ops.register_impl('gemm', ...)``."""
+    _deprecated("register_backend",
+                "repro.core.ops.register_impl('gemm', name, ...)")
+    ops.register_impl(
+        "gemm", name, fused_policies=fused_policies, features=("vjp",),
+        pads_to_tiles=pads_to_tiles, tile_schema=("bm", "bn", "bk"),
+        default_tiles=default_tiles)(gemm_fn)
+    return ops.get_impl("gemm", name)
 
 
-def get_backend(name: str) -> Backend:
-    if name not in _BACKENDS:
-        raise ValueError(
-            f"unknown backend {name!r}; registered: {available_backends()}")
-    return _BACKENDS[name]
+def register_attention_backend(name: str, *, forward, decode):
+    """DEPRECATED: register a fused-attention impl.  Use
+    ``ops.register_impl('attention', ...)`` with explicit capability
+    metadata (this shim assumes the full feature surface)."""
+    _deprecated("register_attention_backend",
+                "repro.core.ops.register_impl('attention', name, ...)")
+    from repro.core.ops.attention import FULL_FEATURES
+    ops.register_impl("attention", name, features=FULL_FEATURES)(
+        AttentionOps(forward=forward, decode=decode))
+    return ops.get_impl("attention", name)
+
+
+def register_grouped_backend(name: str, matmul_fn):
+    """DEPRECATED: register a grouped-GEMM impl.  Use
+    ``ops.register_impl('grouped', ...)``."""
+    _deprecated("register_grouped_backend",
+                "repro.core.ops.register_impl('grouped', name, ...)")
+    ops.register_impl("grouped", name, features=("vjp",))(matmul_fn)
+    return ops.get_impl("grouped", name)
+
+
+def get_backend(name: str) -> ops.KernelImpl:
+    return ops.get_impl("gemm", name)
+
+
+def get_attention_backend(name: str) -> ops.KernelImpl:
+    return ops.get_impl("attention", name)
+
+
+def get_grouped_backend(name: str) -> ops.KernelImpl:
+    return ops.get_impl("grouped", name)
 
 
 def available_backends() -> tuple[str, ...]:
-    return tuple(_BACKENDS)
+    return ops.available_impls("gemm")
 
 
-# ----------------------------------------------------------- xla backend
+def available_attention_backends() -> tuple[str, ...]:
+    return ops.available_impls("attention")
 
-def xla_policy_einsum(spec: str, a: jax.Array, b: jax.Array,
-                      policy: str) -> jax.Array:
-    """The vendor-path einsum: 1..6 chained XLA dots per the policy.
 
-    This is the reference / distribution-friendly implementation (the
-    paper chained 4 cuBLAS calls; we chain 1-6 XLA dots, summed
-    smallest-magnitude-first in fp32).
+def available_grouped_backends() -> tuple[str, ...]:
+    return ops.available_impls("grouped")
+
+
+# ============================================================ legacy route
+
+def _merge_legacy_backends(obj, pairs, merged: dict) -> dict:
+    """One merge rule for both legacy shims: an explicitly set field
+    (non-None, even ``"xla"``) wins over the mapping; an unset field
+    defers to a mapping entry, else the family's reference impl.  The
+    fields are then synced to the resolved values so attribute reads and
+    ``impl(family)`` always agree (and survive ``dataclasses.replace``).
     """
-    if policy == "f32":
-        return jnp.einsum(
-            spec,
-            a.astype(jnp.float32),
-            b.astype(jnp.float32),
-            preferred_element_type=jnp.float32,
-        )
-    a_terms, b_terms = prec.operand_terms(a, b, policy)
-    out = None
-    for ta, tb in prec.policy_terms(policy):
-        part = jnp.einsum(
-            spec, a_terms[ta], b_terms[tb],
-            preferred_element_type=jnp.float32)
-        out = part if out is None else out + part
-    assert out is not None
-    return out
+    for fam, field in pairs:
+        v = getattr(obj, field)
+        if v is None:
+            v = merged.get(fam, ops.reference_impl(fam))
+        merged[fam] = v
+        object.__setattr__(obj, field, v)
+    return merged
 
-
-def _xla_gemm(a, b, *, policy, tiles, interpret):
-    del tiles, interpret
-    return xla_policy_einsum("mk,kn->mn", a, b, policy)
-
-
-register_backend("xla", _xla_gemm, fused_policies=prec.POLICIES,
-                 pads_to_tiles=False)
-
-
-# -------------------------------------------------------- pallas backends
-# Kernel imports stay inside the functions: core must import without
-# dragging the Pallas toolchain in, and kernels/ops.py imports this
-# module (a top-level import would cycle).
-
-def _pallas_gemm(a, b, *, policy, tiles, interpret):
-    if policy == "bf16":
-        from repro.kernels.gemm_tiled import gemm_tiled
-        return gemm_tiled(a, b, bm=tiles.bm, bn=tiles.bn, bk=tiles.bk,
-                          interpret=interpret)
-    from repro.kernels.gemm_refined import gemm_refined
-    return gemm_refined(a, b, policy=policy, bm=tiles.bm, bn=tiles.bn,
-                        bk=tiles.bk, interpret=interpret)
-
-
-def _pallas_naive_gemm(a, b, *, policy, tiles, interpret):
-    assert policy == "bf16", policy
-    from repro.kernels.gemm_naive import gemm_naive
-    return gemm_naive(a, b, bm=tiles.bm, bn=tiles.bn, interpret=interpret)
-
-
-register_backend("pallas", _pallas_gemm,
-                 fused_policies=("bf16", "refine_a", "bf16x3", "refine_ab"))
-register_backend("pallas_naive", _pallas_naive_gemm,
-                 fused_policies=("bf16",),
-                 default_tiles=TileConfig(128, 128, 128))
-
-
-# ============================================================ route/policy
 
 @dataclasses.dataclass(frozen=True)
-class MatmulRoute:
-    """Everything one contraction needs: precision x backend x tiles.
+class MatmulRoute(Route):
+    """DEPRECATED route flavour with per-family fields.
 
-    ``peinsum``/``pmatmul``/``refined_matmul`` accept a route anywhere a
-    policy string is accepted; a bare string means (policy, backend="xla").
-
-    ``attn`` names the FUSED-OP backend for the attention kernel family
-    (``register_attention_backend``): unlike ``backend`` — which routes
-    the 2-D-reducible einsums a spec decomposes into — it selects a
-    whole named fused op (online-softmax flash attention).  Only
-    ``attention_forward``/``attention_decode`` read it.
-
-    ``grouped`` likewise names the GROUPED-GEMM kernel-family backend
-    (``register_grouped_backend``): the ragged per-expert contraction of
-    the MoE FFN.  Only ``grouped_matmul`` (and the ``models.moe``
-    dispatch, which switches to sort-based dropless dispatch whenever a
-    non-reference grouped backend is selected) reads it.
+    ``backend`` / ``attn`` / ``grouped`` populate the uniform
+    ``backends`` mapping of ``ops.Route``: a field you SET (to anything,
+    reference impl included) wins over a mapping entry, so
+    ``dataclasses.replace(route, grouped=...)`` and resets back to
+    ``"xla"`` both keep working; unset fields defer to the mapping.
+    New code builds ``ops.Route`` (or lets ``ExecutionPolicy.for_``).
     """
 
-    precision: str = "bf16"
-    backend: str = "xla"
-    tiles: TileConfig | None = None    # None -> shape-keyed tile cache
-    interpret: bool | None = None      # None -> default_interpret()
-    attn: str = "xla"                  # attention kernel-family backend
-    grouped: str = "xla"               # grouped-GEMM kernel-family backend
+    backend: str | None = None         # gemm-family impl
+    attn: str | None = None            # attention-family impl
+    grouped: str | None = None         # grouped-family impl
+
+    _LEGACY_FIELDS = (("gemm", "backend"), ("attention", "attn"),
+                      ("grouped", "grouped"))
+
+    def __post_init__(self) -> None:
+        super().__post_init__()
+        merged = _merge_legacy_backends(self, self._LEGACY_FIELDS,
+                                        dict(self.backends))
+        object.__setattr__(self, "backends",
+                           ops.normalize_backends(merged))
+
+    def with_impl(self, family: str, name: str) -> "MatmulRoute":
+        legacy_field = dict(self._LEGACY_FIELDS).get(family)
+        if legacy_field is not None:
+            return dataclasses.replace(self, **{legacy_field: name})
+        return super().with_impl(family, name)
 
 
-def as_route(policy: "str | MatmulRoute") -> MatmulRoute:
-    if isinstance(policy, MatmulRoute):
-        return policy
-    return MatmulRoute(precision=policy)
-
+# =========================================================== legacy policy
 
 _BACKEND_FAMILIES = ("attention", "mlp", "moe", "logits", "embed")
 
 
 @dataclasses.dataclass(frozen=True)
-class MatmulPolicy(PrecisionPolicy):
-    """Per-layer-family precision policy + backend + tile config.
+class MatmulPolicy(ExecutionPolicy):
+    """DEPRECATED policy flavour with per-family backend fields.
 
-    Extends ``PrecisionPolicy`` (precision fields and their semantics are
-    inherited) with where each family's matmuls RUN: a default backend,
-    optional per-family backend overrides, and an optional tile config
-    pin. ``for_(family)`` returns a ``MatmulRoute`` — models thread it
-    straight into ``peinsum`` without knowing which backend fires.
+    Extends ``ops.ExecutionPolicy``: the historical fields (``backend``
+    + per-layer-family overrides + ``attn_backend`` /
+    ``grouped_backend``) are merged into the uniform ``backends``
+    mapping at construction (and win over mapping entries for their
+    keys), then validated against capability metadata exactly like any
+    other policy.  ``for_(family)`` returns a ``MatmulRoute``.
     """
 
-    backend: str = "xla"
+    backend: str | None = None
     attention_backend: str | None = None
     mlp_backend: str | None = None
     moe_backend: str | None = None
     logits_backend: str | None = None
     embed_backend: str | None = None
-    tiles: TileConfig | None = None
-    interpret: bool | None = None
-    # Which FUSED attention kernel the attention sublayers run
-    # (register_attention_backend name: "xla" = chunked two-GEMM
-    # reference, "pallas_fused" = flash-attention Pallas kernels).
-    # Orthogonal to attention_backend, which routes the GEMMs the
-    # reference path decomposes into.
-    attn_backend: str = "xla"
-    # Which GROUPED-GEMM kernel the MoE expert FFN runs
-    # (register_grouped_backend name: "xla" = capacity-padded vmap
-    # reference, "pallas_grouped" = sorted ragged grouped kernel with
-    # dropless dispatch).  Orthogonal to moe_backend, which routes the
-    # 2-D GEMMs the capacity-padded reference decomposes into.
-    grouped_backend: str = "xla"
+    attn_backend: str | None = None
+    grouped_backend: str | None = None
+
+    _LEGACY_FIELDS = (("gemm", "backend"), ("attention", "attn_backend"),
+                      ("grouped", "grouped_backend"))
+
+    def __post_init__(self) -> None:
+        warnings.warn(
+            "MatmulPolicy is deprecated; use repro.core.ops."
+            "ExecutionPolicy(backends={'gemm': ..., 'attention': ..., "
+            "'grouped': ...})", DeprecationWarning, stacklevel=3)
+        merged = _merge_legacy_backends(
+            self, self._LEGACY_FIELDS,
+            dict(ops.normalize_backends(self.backends)))
+        for fam in _BACKEND_FAMILIES:
+            v = getattr(self, f"{fam}_backend")
+            if v is not None:
+                merged[f"gemm@{fam}"] = v
+        object.__setattr__(self, "backends", merged)
+        super().__post_init__()
 
     def backend_for(self, family: str) -> str:
         v = getattr(self, f"{family}_backend", None)
         return v if v is not None else self.backend
 
     def route(self, family: str) -> MatmulRoute:
+        # Thread the WHOLE resolved mapping through (a fourth-family
+        # entry must survive the legacy route type), with the three
+        # historical fields synced on top.
+        r = super().route(family)
         return MatmulRoute(
-            precision=PrecisionPolicy.for_(self, family),
-            backend=self.backend_for(family),
+            precision=r.precision,
+            backends=r.backends,
+            backend=r.impl("gemm"),
             tiles=self.tiles,
             interpret=self.interpret,
-            attn=self.attn_backend,
-            grouped=self.grouped_backend,
+            attn=r.impl("attention"),
+            grouped=r.impl("grouped"),
         )
 
     # Models call policy.for_(family) and hand the result to peinsum;
@@ -486,7 +297,7 @@ class MatmulPolicy(PrecisionPolicy):
     def from_precision(cls, policy: PrecisionPolicy, *,
                        backend: str = "xla",
                        tiles: TileConfig | None = None,
-                       **backend_overrides: str | None) -> "MatmulPolicy":
+                       **backend_overrides) -> "MatmulPolicy":
         """Lift a plain PrecisionPolicy onto a backend."""
         fields = {f.name: getattr(policy, f.name)
                   for f in dataclasses.fields(PrecisionPolicy)}
@@ -503,483 +314,3 @@ jax.tree_util.register_dataclass(
     data_fields=[],
     meta_fields=[f.name for f in dataclasses.fields(MatmulPolicy)],
 )
-
-
-# ============================================================ einsum router
-
-@dataclasses.dataclass(frozen=True)
-class _Plan:
-    """Static lowering recipe: einsum spec -> (batched) 2-D GEMM."""
-
-    a_perm: tuple[int, ...]      # a -> (batch..., m..., k...)
-    b_perm: tuple[int, ...]      # b -> (batch..., k..., n...)
-    batch: int                   # product of batch dims (0 = unbatched)
-    m: int
-    n: int
-    k: int
-    out_shape: tuple[int, ...]   # (batch..., m..., n...) before out_perm
-    out_perm: tuple[int, ...]    # -> the spec's requested output order
-
-
-def _expand_ellipsis(spec: str, a_ndim: int, b_ndim: int) -> str | None:
-    """Concretize '...' with fresh labels. Supports '...' on at most one
-    operand (plus the output); returns None when it can't."""
-    if "..." not in spec:
-        return spec
-    lhs, out = spec.split("->")
-    a_spec, b_spec = lhs.split(",")
-    if "..." in a_spec and "..." in b_spec:
-        return None
-    used = set(spec) - {".", ",", "-", ">"}
-    fresh = [c for c in string.ascii_letters if c not in used]
-    if "..." in a_spec:
-        n_extra = a_ndim - (len(a_spec) - 3)
-    else:
-        n_extra = b_ndim - (len(b_spec) - 3)
-    if n_extra < 0 or n_extra > len(fresh):
-        return None
-    ell = "".join(fresh[:n_extra])
-    return (f"{a_spec.replace('...', ell)},{b_spec.replace('...', ell)}"
-            f"->{out.replace('...', ell)}")
-
-
-@functools.lru_cache(maxsize=512)
-def _plan_2d(spec: str, a_shape: tuple[int, ...], b_shape: tuple[int, ...],
-             ) -> _Plan | None:
-    """Classify a concrete two-operand spec as a (batched) 2-D GEMM.
-
-    Returns None whenever the contraction is not expressible as
-    transpose+reshape around one GEMM (repeated labels, broadcast
-    batch dims, no contracted dim, ...) — the caller then falls back to
-    the XLA einsum path.
-    """
-    spec = _expand_ellipsis(spec, len(a_shape), len(b_shape))
-    if spec is None or "->" not in spec:
-        return None
-    lhs, out = spec.split("->")
-    if "," not in lhs:
-        return None
-    a_l, b_l = lhs.split(",")
-    if (len(set(a_l)) != len(a_l) or len(set(b_l)) != len(b_l)
-            or len(set(out)) != len(out)):
-        return None                      # diagonals / repeated outputs
-    if len(a_l) != len(a_shape) or len(b_l) != len(b_shape):
-        return None
-    a_set, b_set, o_set = set(a_l), set(b_l), set(out)
-    if not o_set <= (a_set | b_set):
-        return None
-    dim = {}
-    for labels, shape in ((a_l, a_shape), (b_l, b_shape)):
-        for lab, d in zip(labels, shape):
-            if dim.setdefault(lab, d) != d:
-                return None              # size-mismatched shared label
-    shared = a_set & b_set
-    k_labs = [l for l in a_l if l in shared and l not in o_set]
-    batch_labs = [l for l in out if l in shared]
-    m_labs = [l for l in a_l if l in a_set - b_set]
-    n_labs = [l for l in b_l if l in b_set - a_set]
-    if not k_labs:
-        return None                      # outer products: not a GEMM
-    if any(l not in o_set for l in m_labs + n_labs):
-        return None                      # summed-out non-shared dims
-    a_perm = tuple(a_l.index(l) for l in batch_labs + m_labs + k_labs)
-    b_perm = tuple(b_l.index(l) for l in batch_labs + k_labs + n_labs)
-
-    def prod(labs):
-        out = 1
-        for l in labs:
-            out *= dim[l]
-        return out
-
-    pre_out = batch_labs + m_labs + n_labs
-    out_shape = tuple(dim[l] for l in pre_out)
-    out_perm = tuple(pre_out.index(l) for l in out)
-    return _Plan(
-        a_perm=a_perm, b_perm=b_perm,
-        batch=prod(batch_labs) if batch_labs else 0,
-        m=prod(m_labs), n=prod(n_labs), k=prod(k_labs),
-        out_shape=out_shape, out_perm=out_perm)
-
-
-def _pad2(x: jax.Array, r: int, c: int) -> jax.Array:
-    pr, pc = (-x.shape[-2]) % r, (-x.shape[-1]) % c
-    if pr or pc:
-        pad = [(0, 0)] * (x.ndim - 2) + [(0, pr), (0, pc)]
-        x = jnp.pad(x, pad)
-    return x
-
-
-def _backend_gemm_2d(backend: Backend, a: jax.Array, b: jax.Array,
-                     route: MatmulRoute) -> jax.Array:
-    """One policy-routed 2-D GEMM on an arbitrary-shape problem."""
-    m, k = a.shape
-    n = b.shape[1]
-    precision = route.precision
-    if precision == "f32" and "f32" not in backend.fused_policies:
-        # no narrow-pass decomposition exists for exact f32; vendor path
-        return xla_policy_einsum("mk,kn->mn", a, b, "f32")
-
-    tiles = route.tiles or tile_for(backend.name, m, n, k)
-    tiles = tiles.clamp(m, n, k)
-    interp = (default_interpret() if route.interpret is None
-              else route.interpret)
-    if backend.pads_to_tiles:
-        ap, bp = _pad2(a, tiles.bm, tiles.bk), _pad2(b, tiles.bk, tiles.bn)
-    else:
-        ap, bp = a, b
-
-    if precision in backend.fused_policies:
-        out = backend.gemm(ap, bp, policy=precision, tiles=tiles,
-                           interpret=interp)
-    else:
-        # Paper Fig. 5: refinement as chained narrow GEMMs, here chained
-        # through whichever backend was asked for (smallest-first sum).
-        a_terms, b_terms = prec.operand_terms(ap, bp, precision)
-        out = None
-        for ta, tb in prec.policy_terms(precision):
-            part = backend.gemm(a_terms[ta], b_terms[tb], policy="bf16",
-                                tiles=tiles, interpret=interp)
-            out = part if out is None else out + part
-        assert out is not None
-    return out[:m, :n]
-
-
-def _execute_plan(plan: _Plan, a: jax.Array, b: jax.Array,
-                  route: MatmulRoute) -> jax.Array:
-    backend = get_backend(route.backend)
-    at = jnp.transpose(a, plan.a_perm)
-    bt = jnp.transpose(b, plan.b_perm)
-    if plan.batch:
-        at = at.reshape(plan.batch, plan.m, plan.k)
-        bt = bt.reshape(plan.batch, plan.k, plan.n)
-        out = jax.vmap(
-            lambda x, y: _backend_gemm_2d(backend, x, y, route))(at, bt)
-    else:
-        at = at.reshape(plan.m, plan.k)
-        bt = bt.reshape(plan.k, plan.n)
-        out = _backend_gemm_2d(backend, at, bt, route)
-    out = out.reshape(plan.out_shape)
-    return jnp.transpose(out, plan.out_perm)
-
-
-# Custom VJP: Pallas kernels are not reverse-mode differentiable, and we
-# want the backward contractions to run the SAME backend the forward ran
-# (models train on the path benchmarks measure). For a two-operand
-# einsum with unique labels, dA = einsum(out_spec, b_spec -> a_spec) and
-# dB = einsum(a_spec, out_spec -> b_spec).
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
-def _lowered_einsum(spec: str, route: MatmulRoute, a, b):
-    plan = _plan_2d(spec, a.shape, b.shape)
-    assert plan is not None
-    return _execute_plan(plan, a, b, route)
-
-
-def _lowered_fwd(spec, route, a, b):
-    return _lowered_einsum(spec, route, a, b), (a, b)
-
-
-def _lowered_bwd(spec, route, res, g):
-    a, b = res
-    concrete = _expand_ellipsis(spec, a.ndim, b.ndim)
-    assert concrete is not None
-    lhs, out = concrete.split("->")
-    a_spec, b_spec = lhs.split(",")
-    da = routed_einsum(f"{out},{b_spec}->{a_spec}", g, b, route)
-    db = routed_einsum(f"{a_spec},{out}->{b_spec}", a, g, route)
-    return da.astype(a.dtype), db.astype(b.dtype)
-
-
-_lowered_einsum.defvjp(_lowered_fwd, _lowered_bwd)
-
-
-def routed_einsum(spec: str, a: jax.Array, b: jax.Array,
-                  policy: "str | MatmulRoute" = "bf16") -> jax.Array:
-    """Two-operand einsum under a (precision, backend, tiles) route.
-
-    fp32 out always (the accumulator type). Non-XLA backends require a
-    2-D-reducible spec; anything else falls back to the XLA path so the
-    call NEVER fails on spec structure.
-    """
-    route = as_route(policy)
-    if route.backend == "xla":
-        return xla_policy_einsum(spec, a, b, route.precision)
-    get_backend(route.backend)           # unknown backends fail loudly
-    plan = _plan_2d(spec, a.shape, b.shape)
-    if plan is None:
-        return xla_policy_einsum(spec, a, b, route.precision)
-    return _lowered_einsum(spec, route, a, b)
-
-
-# ============================================== attention kernel family
-#
-# The first NON-GEMM family in the registry: a named fused op rather
-# than a 2-D-reducible einsum.  A backend supplies the whole
-# online-softmax attention pipeline (the paper's fused WMMA/CUTLASS
-# pipeline analogue) instead of one GEMM the router chains:
-#
-#   ``xla``           the chunked two-GEMM reference path (score and
-#                     value contractions through ``routed_einsum``,
-#                     online softmax in jnp between them) — the
-#                     vendor-library analogue, and the parity oracle.
-#   ``pallas_fused``  flash-attention Pallas kernels
-#                     (``kernels.attention_fused``): score tile never
-#                     leaves VMEM, policy ladder fused in-kernel,
-#                     custom-VJP backward on the same kernels.
-#
-# Both entries are lazily imported so core stays import-light and
-# acyclic (models/ and kernels/ import this module).
-
-# forward(q, k, v, *, causal, window, softcap, route, kv_chunk) and
-# decode(q, k_cache, v_cache, pos, *, window, softcap, route);
-# q (B,Sq,Kv,G,hd) pre-scaled, k/v (B,Skv,Kv,hd), fp32 out.
-AttnFn = Callable[..., jax.Array]
-
-
-@dataclasses.dataclass(frozen=True)
-class AttentionBackend:
-    name: str
-    forward: AttnFn
-    decode: AttnFn
-
-
-_ATTN_BACKENDS: dict[str, AttentionBackend] = {}
-
-
-def register_attention_backend(name: str, *, forward: AttnFn,
-                               decode: AttnFn) -> AttentionBackend:
-    """Register (or replace) a named fused-attention backend."""
-    backend = AttentionBackend(name=name, forward=forward, decode=decode)
-    _ATTN_BACKENDS[name] = backend
-    return backend
-
-
-def get_attention_backend(name: str) -> AttentionBackend:
-    if name not in _ATTN_BACKENDS:
-        raise ValueError(
-            f"unknown attention backend {name!r}; registered: "
-            f"{available_attention_backends()}")
-    return _ATTN_BACKENDS[name]
-
-
-def available_attention_backends() -> tuple[str, ...]:
-    return tuple(_ATTN_BACKENDS)
-
-
-def _route_interpret(route: MatmulRoute) -> bool:
-    return default_interpret() if route.interpret is None else route.interpret
-
-
-def _xla_attn_forward(q, k, v, *, causal, window, softcap, route,
-                      kv_chunk=2048):
-    from repro.models.attention import reference_forward
-    return reference_forward(q, k, v, causal=causal, window=window,
-                             softcap=softcap, policy=route,
-                             kv_chunk=kv_chunk)
-
-
-def _xla_attn_decode(q, k_cache, v_cache, pos, *, window, softcap, route):
-    from repro.models.attention import reference_decode
-    return reference_decode(q, k_cache, v_cache, pos, window=window,
-                            softcap=softcap, policy=route)
-
-
-def _fused_attn_forward(q, k, v, *, causal, window, softcap, route,
-                        kv_chunk=2048):
-    # route.tiles deliberately NOT threaded here: TileConfig's (bm,bn,bk)
-    # describe GEMM problems; flash block_q/block_kv live in a different
-    # tiling domain (128-lane score tiles) and keep the kernel defaults.
-    del kv_chunk
-    from repro.kernels.attention_fused import flash_attention
-    return flash_attention(
-        q, k, v, causal=causal, window=window, softcap=softcap,
-        precision=route.precision, interpret=_route_interpret(route))
-
-
-def _fused_attn_decode(q, k_cache, v_cache, pos, *, window, softcap, route):
-    from repro.kernels.attention_fused import flash_decode
-    return flash_decode(
-        q, k_cache, v_cache, pos, window=window, softcap=softcap,
-        precision=route.precision, interpret=_route_interpret(route))
-
-
-register_attention_backend("xla", forward=_xla_attn_forward,
-                           decode=_xla_attn_decode)
-register_attention_backend("pallas_fused", forward=_fused_attn_forward,
-                           decode=_fused_attn_decode)
-
-
-def attention_forward(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                      causal: bool = True, window: int | None = None,
-                      softcap: float | None = None,
-                      policy: "str | MatmulRoute" = "bf16",
-                      kv_chunk: int = 2048) -> jax.Array:
-    """Fused-attention dispatch (train/prefill/encode/cross shapes).
-
-    q: (B, Sq, Kv, G, hd) PRE-SCALED; k/v: (B, Skv, Kv, hd); returns
-    (B, Sq, Kv, G, hd) fp32.  ``policy`` is a precision string (runs
-    the ``xla`` reference) or a route whose ``attn`` field names a
-    registered attention backend.  Differentiable on every backend.
-    """
-    route = as_route(policy)
-    backend = get_attention_backend(route.attn)
-    return backend.forward(q, k, v, causal=causal, window=window,
-                           softcap=softcap, route=route, kv_chunk=kv_chunk)
-
-
-def attention_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
-                     pos: jax.Array, *, window: int | None = None,
-                     softcap: float | None = None,
-                     policy: "str | MatmulRoute" = "bf16") -> jax.Array:
-    """Single-token fused-attention decode against a KV cache.
-
-    ``pos`` is the PER-ROW (B,) position vector of the continuous-
-    batching engine; ``window`` selects ring-buffer vs linear masking.
-    The caches are post-write (the current token's row included).
-    """
-    route = as_route(policy)
-    backend = get_attention_backend(route.attn)
-    return backend.decode(q, k_cache, v_cache, pos, window=window,
-                          softcap=softcap, route=route)
-
-
-# ================================================ grouped-GEMM kernel family
-#
-# The third kernel family: the ragged grouped GEMM of the MoE expert
-# FFN — E per-expert GEMMs whose row counts are data-dependent (the
-# paper's Fig.-7 batched-GEMM occupancy regime).  A backend computes
-#
-#   out[r] = x[r] @ w[e]   for every row r in group e's region,
-#
-# over a flat token buffer sorted by group with each group's region
-# aligned to the row tile (``grouped_tiles(...).bm``): group e occupies
-# rows [offsets[e], offsets[e+1]), interior offsets are bm-multiples,
-# padding rows are zero and come back zero.
-#
-#   ``xla``             the capacity-padded vmap reference: a strided
-#                       gather into the worst-case (E, C, D) dispatch
-#                       tensor, one ``ecd,edf->ecf`` policy-decomposed
-#                       einsum (the pre-grouped model path), scatter
-#                       back — the vendor-library analogue and the
-#                       parity oracle for the family.
-#   ``pallas_grouped``  ``kernels.gemm_grouped``: one kernel walks the
-#                       sorted token dim, scalar-prefetched group
-#                       offsets pick each tile's expert weight block via
-#                       the BlockSpec index map, dead tiles are skipped,
-#                       the policy ladder is fused in-kernel, and
-#                       custom-VJP dx/dw kernels keep training on the
-#                       fused path.
-
-# matmul(x, w, group_offsets, *, route): x (N, D) sorted+aligned,
-# w (E, D, F), group_offsets (E+1,) int32; fp32 (N, F) out.
-GroupedFn = Callable[..., jax.Array]
-
-
-@dataclasses.dataclass(frozen=True)
-class GroupedBackend:
-    name: str
-    matmul: GroupedFn
-
-
-_GROUPED_BACKENDS: dict[str, GroupedBackend] = {}
-
-
-def register_grouped_backend(name: str, matmul_fn: GroupedFn,
-                             ) -> GroupedBackend:
-    """Register (or replace) a named grouped-GEMM backend."""
-    backend = GroupedBackend(name=name, matmul=matmul_fn)
-    _GROUPED_BACKENDS[name] = backend
-    return backend
-
-
-def get_grouped_backend(name: str) -> GroupedBackend:
-    if name not in _GROUPED_BACKENDS:
-        raise ValueError(
-            f"unknown grouped backend {name!r}; registered: "
-            f"{available_grouped_backends()}")
-    return _GROUPED_BACKENDS[name]
-
-
-def available_grouped_backends() -> tuple[str, ...]:
-    return tuple(_GROUPED_BACKENDS)
-
-
-def grouped_tiles(policy: "str | MatmulRoute", m: int, n: int,
-                  k: int) -> TileConfig:
-    """The tile config the grouped backend will run (m, n, k) with.
-
-    ``bm`` doubles as the GROUP ALIGNMENT: callers building the sorted
-    token buffer pad each group's region to a multiple of it and pin the
-    result on the route (``dataclasses.replace(route, tiles=...)``) so
-    dispatcher and kernel agree on the layout.  m is the real (pre-
-    alignment) token-assignment count — the shape key autotune results
-    land under.
-    """
-    route = as_route(policy)
-    tiles = route.tiles or tile_for(route.grouped, m, n, k)
-    return tiles.clamp(m, n, k)
-
-
-def _xla_grouped_matmul(x, w, group_offsets, *, route: MatmulRoute):
-    """Reference: strided gather to the worst-case-capacity (E, C, D)
-    dispatch tensor + the pre-grouped vmap path's ``ecd,edf->ecf``
-    policy einsum + scatter back.  C = N (every group could own every
-    row), so this is the memory-heavy oracle, not a production path."""
-    n, _ = x.shape
-    f = w.shape[2]
-    offsets = group_offsets.astype(jnp.int32)
-    idx = offsets[:-1, None] + jnp.arange(n, dtype=jnp.int32)[None]  # (E, C)
-    valid = idx < offsets[1:, None]
-    idx_c = jnp.minimum(idx, n - 1)
-    xe = jnp.where(valid[..., None], x[idx_c], 0)
-    he = xla_policy_einsum("ecd,edf->ecf", xe, w, route.precision)
-    out = jnp.zeros((n, f), jnp.float32)
-    contrib = jnp.where(valid[..., None], he, 0.0)
-    return out.at[idx_c.reshape(-1)].add(contrib.reshape(-1, f))
-
-
-def _pallas_grouped_matmul(x, w, group_offsets, *, route: MatmulRoute):
-    from repro.kernels.gemm_grouped import grouped_gemm
-    n, d = x.shape
-    tiles = grouped_tiles(route, n, w.shape[2], d)
-    return grouped_gemm(x, w, group_offsets, precision=route.precision,
-                        bm=tiles.bm, bn=tiles.bn, bk=tiles.bk,
-                        interpret=_route_interpret(route))
-
-
-register_grouped_backend("xla", _xla_grouped_matmul)
-register_grouped_backend("pallas_grouped", _pallas_grouped_matmul)
-
-
-def grouped_matmul(x: jax.Array, w: jax.Array, group_offsets: jax.Array,
-                   *, policy: "str | MatmulRoute" = "bf16") -> jax.Array:
-    """Ragged grouped-GEMM dispatch (the MoE expert contraction).
-
-    x: (N, D) token rows sorted by group in the aligned layout above;
-    w: (E, D, F) per-group weights; group_offsets: (E+1,) int32.
-    Returns (N, F) fp32.  ``policy`` is a precision string (runs the
-    ``xla`` reference) or a route whose ``grouped`` field names a
-    registered grouped backend.  Differentiable on every backend.
-    """
-    route = as_route(policy)
-    backend = get_grouped_backend(route.grouped)
-    return backend.matmul(x, w, group_offsets, route=route)
-
-
-def gemm(a: jax.Array, b: jax.Array, *, policy: "str | MatmulRoute" = "bf16",
-         backend: str | None = None, tiles: TileConfig | None = None,
-         interpret: bool | None = None) -> jax.Array:
-    """Policy-routed C = A @ B through a registry backend (2-D entry).
-
-    Keyword overrides (backend/tiles/interpret) refine whatever `policy`
-    carries; shapes are padded to tile multiples and sliced back.
-    """
-    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
-        raise ValueError(f"gemm expects (m,k) x (k,n); got {a.shape} x {b.shape}")
-    route = as_route(policy)
-    route = dataclasses.replace(
-        route,
-        backend=backend if backend is not None else route.backend,
-        tiles=tiles if tiles is not None else route.tiles,
-        interpret=interpret if interpret is not None else route.interpret)
-    return routed_einsum("mk,kn->mn", a, b, route)

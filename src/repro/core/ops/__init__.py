@@ -1,0 +1,122 @@
+"""One op registry: declarative kernel families + capability routing.
+
+The paper benchmarks the SAME matrix-multiply contract through three
+programming surfaces (WMMA / CUTLASS / cuBLAS) and finds each has its
+own performance and precision envelope.  This subsystem is that finding
+as architecture: "which implementations exist, what they support, at
+what error" is a queryable data model, not scattered if/elif chains.
+
+Three concepts (see ``registry``):
+
+  ``OpSpec``      one kernel FAMILY — name, abstract call contract,
+                  which registered impl is the reference (parity oracle
+                  + fallback target), and bench/parity hooks that let
+                  benchmarks and the generic contract suite derive
+                  their sweeps from the registry.
+  ``KernelImpl``  one registered implementation, carrying declarative
+                  ``Capabilities`` (supported precision-policy rungs,
+                  natively-fused rungs, feature tags like ``decode`` /
+                  ``vjp`` / ``masks:sliding``, tile schema, interpret
+                  support).
+  ``Route`` /     what call sites carry: a precision rung plus a
+  ``ExecutionPolicy``  uniform ``backends: {family: impl}`` mapping,
+                  validated against capabilities at route-BUILD time —
+                  requesting a capability an impl lacks fails with an
+                  error naming it (or falls back to the reference impl
+                  when allowed).
+
+Adding a family:
+
+    spec = register_family(OpSpec(family="scan", contract=...,
+                                  reference="xla", ...))
+
+    @register_impl("scan", "pallas_scan", features=("vjp",))
+    def my_scan(...): ...
+
+    def scan_op(x, *, policy="bf16"):
+        route = as_route(policy)
+        return registry.get_impl("scan", route.impl("scan")).fn(x, route=route)
+
+With the ``OpSpec`` bench/parity hooks filled in, the new family is
+automatically covered by ``tests/test_registry_contract.py`` (parity vs
+its fp64 oracle for every (impl, policy) triple), surfaces in
+``benchmarks/run.py --list`` and the README capability matrix, and is
+selectable via ``--backend scan=pallas_scan`` on every launch driver.
+
+Family-generic machinery lives beside it: the tile/pad/autotune layer
+(``tiles``), the 2-D einsum router with its vmap batching and custom
+VJP (``gemm``), and the routing/validation layer (``route``).
+
+The legacy ``repro.core.matmul`` module remains as a deprecated
+back-compat shim over this package.
+"""
+
+from repro.core.ops import registry as registry  # noqa: F401 (namespace)
+from repro.core.ops.registry import (
+    Capabilities,
+    KernelImpl,
+    LADDER_BOUNDS,
+    OpSpec,
+    available_impls,
+    capability_markdown,
+    capability_rows,
+    families,
+    format_capability_table,
+    get_family,
+    get_impl,
+    reference_impl,
+    register_family,
+    register_impl,
+)
+from repro.core.ops.route import (
+    ExecutionPolicy,
+    Route,
+    as_route,
+    normalize_backends,
+    parse_backend_flags,
+    validate_backends,
+)
+from repro.core.ops.tiles import (
+    TileConfig,
+    align_group_counts,
+    autotune_tiles,
+    clear_tile_cache,
+    default_interpret,
+    load_tile_cache,
+    pad2,
+    round_up,
+    save_tile_cache,
+    set_default_tiles,
+    set_tiles,
+    tile_cache_path,
+    tile_for,
+)
+
+# Importing the family modules REGISTERS the built-in families + impls.
+from repro.core.ops.gemm import gemm, routed_einsum, xla_policy_einsum
+from repro.core.ops.attention import (
+    AttentionOps,
+    attention_decode,
+    attention_forward,
+)
+from repro.core.ops.grouped import grouped_matmul, grouped_tiles
+
+__all__ = [
+    # registry
+    "Capabilities", "KernelImpl", "LADDER_BOUNDS", "OpSpec",
+    "available_impls", "capability_markdown", "capability_rows",
+    "families", "format_capability_table", "get_family", "get_impl",
+    "reference_impl", "register_family", "register_impl", "registry",
+    # routing
+    "ExecutionPolicy", "Route", "as_route", "normalize_backends",
+    "parse_backend_flags", "validate_backends",
+    # tiles
+    "TileConfig", "align_group_counts", "autotune_tiles",
+    "clear_tile_cache", "default_interpret", "load_tile_cache", "pad2",
+    "round_up", "save_tile_cache", "set_default_tiles", "set_tiles",
+    "tile_cache_path", "tile_for",
+    # families
+    "gemm", "routed_einsum", "xla_policy_einsum",
+    "AttentionOps", "attention_decode", "attention_forward",
+    "grouped_matmul", "grouped_tiles",
+]

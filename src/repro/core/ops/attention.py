@@ -1,0 +1,186 @@
+"""The attention family: a named FUSED op, not a 2-D-reducible einsum.
+
+A registered impl supplies the whole online-softmax attention pipeline
+(the paper's fused WMMA/CUTLASS pipeline analogue) instead of one GEMM
+the router chains:
+
+  ``xla``           the chunked two-GEMM reference path (score and
+                    value contractions through ``routed_einsum``,
+                    online softmax in jnp between them) — the
+                    vendor-library analogue, and the parity oracle.
+  ``pallas_fused``  flash-attention Pallas kernels
+                    (``kernels.attention_fused``): score tile never
+                    leaves VMEM, policy ladder fused in-kernel,
+                    custom-VJP backward on the same kernels.
+
+The impl object is an ``AttentionOps(forward, decode)`` pair:
+
+  forward(q, k, v, *, causal, window, softcap, route, kv_chunk) and
+  decode(q, k_cache, v_cache, pos, *, window, softcap, route);
+  q (B,Sq,Kv,G,hd) pre-scaled, k/v (B,Skv,Kv,hd), fp32 out.
+
+Both built-ins are lazily imported so core stays import-light and
+acyclic (models/ and kernels/ import this subsystem).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ops import registry
+from repro.core.ops.registry import (LADDER_BOUNDS, OpSpec, register_family,
+                                     register_impl)
+from repro.core.ops.route import Route, as_route
+
+__all__ = ["AttentionOps", "attention_forward", "attention_decode"]
+
+
+class AttentionOps(NamedTuple):
+    """The two entry points an attention impl registers."""
+
+    forward: Callable
+    decode: Callable
+
+
+# The feature tags every full-surface attention impl carries; route
+# validation / the decode dispatcher check against these.
+FULL_FEATURES = ("vjp", "decode", "gqa", "softcap",
+                 "masks:causal", "masks:sliding", "masks:full")
+
+
+def _make_problem(seed: int) -> dict:
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    b, s, kv, g, hd = 2, 16, 2, 2, 32
+    r = lambda k, shape: jax.random.uniform(k, shape, jnp.float32, -1, 1)
+    return {
+        "q": r(ks[0], (b, s, kv, g, hd)) * hd ** -0.5,
+        "k": r(ks[1], (b, s, kv, hd)),
+        "v": r(ks[2], (b, s, kv, hd)),
+    }
+
+
+def _run(problem: dict, route: Route) -> jax.Array:
+    return attention_forward(problem["q"], problem["k"], problem["v"],
+                             causal=True, policy=route)
+
+
+def _oracle(problem: dict) -> np.ndarray:
+    """Dense fp64 causal softmax attention (GQA layout)."""
+    qn = np.asarray(problem["q"], np.float64)
+    kn = np.asarray(problem["k"], np.float64)
+    vn = np.asarray(problem["v"], np.float64)
+    s = qn.shape[1]
+    keep = np.arange(s)[None, :] <= np.arange(s)[:, None]
+    sc = np.einsum("bqkgd,bskd->bkgqs", qn, kn)
+    sc = np.where(keep[None, None, None], sc, -1e30)
+    p = np.exp(sc - sc.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    return np.einsum("bkgqs,bskd->bqkgd", p, vn)
+
+
+register_family(OpSpec(
+    family="attention",
+    contract="AttentionOps(forward(q, k, v, *, causal, window, softcap, "
+             "route, kv_chunk), decode(q, k_cache, v_cache, pos, *, "
+             "window, softcap, route)); q (B,Sq,Kv,G,hd) pre-scaled, "
+             "k/v (B,Skv,Kv,hd), fp32 out",
+    reference="xla",
+    label="attention backend",        # historical error wording
+    layer_families=("attention",),
+    bench_policies=("bf16", "refine_a", "refine_ab", "f32"),
+    bench_axes=(("mask", ("causal", "sliding", "full", "decode")),),
+    make_problem=_make_problem,
+    run=_run,
+    oracle=_oracle,
+    # Softmax-normalized probabilities shrink the value-contraction
+    # error, so the GEMM ladder bounds hold with margin.
+    error_bound=lambda policy: LADDER_BOUNDS[policy],
+    grad_args=("q",),
+))
+
+
+def _xla_forward(q, k, v, *, causal, window, softcap, route, kv_chunk=2048):
+    from repro.models.attention import reference_forward
+    return reference_forward(q, k, v, causal=causal, window=window,
+                             softcap=softcap, policy=route,
+                             kv_chunk=kv_chunk)
+
+
+def _xla_decode(q, k_cache, v_cache, pos, *, window, softcap, route):
+    from repro.models.attention import reference_decode
+    return reference_decode(q, k_cache, v_cache, pos, window=window,
+                            softcap=softcap, policy=route)
+
+
+def _fused_forward(q, k, v, *, causal, window, softcap, route,
+                   kv_chunk=2048):
+    # route.tiles deliberately NOT threaded here: TileConfig's (bm,bn,bk)
+    # describe GEMM problems; flash block_q/block_kv live in a different
+    # tiling domain (128-lane score tiles) and keep the kernel defaults.
+    del kv_chunk
+    from repro.kernels.attention_fused import flash_attention
+    return flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        precision=route.precision, interpret=route.resolved_interpret())
+
+
+def _fused_decode(q, k_cache, v_cache, pos, *, window, softcap, route):
+    from repro.kernels.attention_fused import flash_decode
+    return flash_decode(
+        q, k_cache, v_cache, pos, window=window, softcap=softcap,
+        precision=route.precision, interpret=route.resolved_interpret())
+
+
+register_impl("attention", "xla", fused_policies=(),
+              features=FULL_FEATURES)(
+    AttentionOps(forward=_xla_forward, decode=_xla_decode))
+
+register_impl("attention", "pallas_fused",
+              fused_policies=registry.ALL_POLICIES,
+              features=FULL_FEATURES)(
+    AttentionOps(forward=_fused_forward, decode=_fused_decode))
+
+
+def attention_forward(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int | None = None,
+                      softcap: float | None = None,
+                      policy: "str | Route" = "bf16",
+                      kv_chunk: int = 2048) -> jax.Array:
+    """Fused-attention dispatch (train/prefill/encode/cross shapes).
+
+    q: (B, Sq, Kv, G, hd) PRE-SCALED; k/v: (B, Skv, Kv, hd); returns
+    (B, Sq, Kv, G, hd) fp32.  ``policy`` is a precision string (runs
+    the reference impl) or a route whose attention entry names a
+    registered impl.  Differentiable on every impl declaring ``vjp``.
+    """
+    route = as_route(policy)
+    impl = registry.get_impl("attention", route.impl("attention"))
+    return impl.fn.forward(q, k, v, causal=causal, window=window,
+                           softcap=softcap, route=route, kv_chunk=kv_chunk)
+
+
+def attention_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, *, window: int | None = None,
+                     softcap: float | None = None,
+                     policy: "str | Route" = "bf16") -> jax.Array:
+    """Single-token fused-attention decode against a KV cache.
+
+    ``pos`` is the PER-ROW (B,) position vector of the continuous-
+    batching engine; ``window`` selects ring-buffer vs linear masking.
+    The caches are post-write (the current token's row included).
+    """
+    route = as_route(policy)
+    impl = registry.get_impl("attention", route.impl("attention"))
+    if not impl.capabilities.has("decode"):
+        raise ValueError(
+            f"attention impl {impl.name!r} does not support capability "
+            f"'decode' (features: {sorted(impl.capabilities.features)}); "
+            f"route decode to a decode-capable impl, e.g. "
+            f"{registry.reference_impl('attention')!r}")
+    return impl.fn.decode(q, k_cache, v_cache, pos, window=window,
+                          softcap=softcap, route=route)

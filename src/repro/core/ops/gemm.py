@@ -1,0 +1,365 @@
+"""The GEMM family: 2-D-reducible einsums over registered GEMM impls.
+
+The paper's object of study — one bf16-input / fp32-accumulate 2-D GEMM
+contract served by several programming surfaces:
+
+  ``xla``           vendor-library path (the cuBLAS analogue): policy-
+                    decomposed chains of XLA dots — the family's
+                    REFERENCE impl (parity oracle + fallback target).
+  ``pallas``        hand-tiled VMEM-staged kernels (the CUTLASS
+                    analogue): ``gemm_tiled`` / fused ``gemm_refined``.
+  ``pallas_naive``  no-staging kernel (the raw-WMMA analogue):
+                    ``gemm_naive``, one program per output tile.
+
+An impl's core contract is ONE tile-aligned bf16/fp32-acc GEMM
+``fn(a, b, *, policy, tiles, interpret)``; its ``fused_policies``
+capability lists the refinement rungs it additionally runs in a single
+fused call.  The router decomposes every other rung into bf16 passes
+(paper Fig. 5: chained narrow GEMMs) or falls back to the XLA path for
+exact f32 — which is why every impl's ``policies`` capability is the
+full ladder.
+
+``routed_einsum`` lowers any 2-D-reducible two-operand spec
+(`mk,kn->mn`, `...i,io->...o`, the MoE `ecd,edf->ecf` contractions,
+attention score/value contractions) to the selected impl — vmap-batched,
+padded to tile multiples, with a custom VJP whose backward contractions
+route through the SAME impl — and everything else falls back to the XLA
+path, so the call never fails on spec structure.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import string
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import precision as prec
+from repro.core.ops import registry
+from repro.core.ops.registry import (LADDER_BOUNDS, OpSpec, register_family,
+                                     register_impl)
+from repro.core.ops.route import Route, as_route
+from repro.core.ops.tiles import TileConfig, pad2, tile_for
+
+__all__ = ["routed_einsum", "gemm", "xla_policy_einsum"]
+
+
+# ------------------------------------------------------------- family spec
+
+def _make_problem(seed: int) -> dict:
+    rng = np.random.default_rng(seed)
+    return {
+        "a": jnp.asarray(rng.uniform(-1, 1, (48, 132)).astype(np.float32)),
+        "b": jnp.asarray(rng.uniform(-1, 1, (132, 40)).astype(np.float32)),
+    }
+
+
+def _run(problem: dict, route: Route) -> jax.Array:
+    return gemm(problem["a"], problem["b"], policy=route)
+
+
+def _oracle(problem: dict) -> np.ndarray:
+    return (np.asarray(problem["a"], np.float64)
+            @ np.asarray(problem["b"], np.float64))
+
+
+register_family(OpSpec(
+    family="gemm",
+    contract="fn(a (m,k), b (k,n), *, policy, tiles, interpret) -> "
+             "fp32 (m,n); operands tile-aligned when pads_to_tiles",
+    reference="xla",
+    label="backend",                  # historical error wording
+    layer_families=(),                # every matmul family reaches it
+    bench_policies=prec.POLICIES,
+    make_problem=_make_problem,
+    run=_run,
+    oracle=_oracle,
+    error_bound=lambda policy: LADDER_BOUNDS[policy],
+    grad_args=("a",),
+))
+
+
+# ----------------------------------------------------------- xla reference
+
+def xla_policy_einsum(spec: str, a: jax.Array, b: jax.Array,
+                      policy: str) -> jax.Array:
+    """The vendor-path einsum: 1..6 chained XLA dots per the policy.
+
+    This is the reference / distribution-friendly implementation (the
+    paper chained 4 cuBLAS calls; we chain 1-6 XLA dots, summed
+    smallest-magnitude-first in fp32).
+    """
+    if policy == "f32":
+        return jnp.einsum(
+            spec,
+            a.astype(jnp.float32),
+            b.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+    a_terms, b_terms = prec.operand_terms(a, b, policy)
+    out = None
+    for ta, tb in prec.policy_terms(policy):
+        part = jnp.einsum(
+            spec, a_terms[ta], b_terms[tb],
+            preferred_element_type=jnp.float32)
+        out = part if out is None else out + part
+    assert out is not None
+    return out
+
+
+@register_impl("gemm", "xla", fused_policies=prec.POLICIES,
+               features=("vjp",))
+def _xla_gemm(a, b, *, policy, tiles, interpret):
+    del tiles, interpret
+    return xla_policy_einsum("mk,kn->mn", a, b, policy)
+
+
+# ---------------------------------------------------------- pallas impls
+# Kernel imports stay inside the functions: core must import without
+# dragging the Pallas toolchain in, and kernels/ops.py imports this
+# subsystem (a top-level import would cycle).
+
+@register_impl("gemm", "pallas",
+               fused_policies=("bf16", "refine_a", "bf16x3", "refine_ab"),
+               features=("vjp",), pads_to_tiles=True,
+               tile_schema=("bm", "bn", "bk"))
+def _pallas_gemm(a, b, *, policy, tiles, interpret):
+    if policy == "bf16":
+        from repro.kernels.gemm_tiled import gemm_tiled
+        return gemm_tiled(a, b, bm=tiles.bm, bn=tiles.bn, bk=tiles.bk,
+                          interpret=interpret)
+    from repro.kernels.gemm_refined import gemm_refined
+    return gemm_refined(a, b, policy=policy, bm=tiles.bm, bn=tiles.bn,
+                        bk=tiles.bk, interpret=interpret)
+
+
+@register_impl("gemm", "pallas_naive", fused_policies=("bf16",),
+               features=("vjp",), pads_to_tiles=True,
+               tile_schema=("bm", "bn", "bk"),
+               default_tiles=TileConfig(128, 128, 128))
+def _pallas_naive_gemm(a, b, *, policy, tiles, interpret):
+    assert policy == "bf16", policy
+    from repro.kernels.gemm_naive import gemm_naive
+    return gemm_naive(a, b, bm=tiles.bm, bn=tiles.bn, interpret=interpret)
+
+
+# ============================================================ einsum router
+
+@dataclasses.dataclass(frozen=True)
+class _Plan:
+    """Static lowering recipe: einsum spec -> (batched) 2-D GEMM."""
+
+    a_perm: tuple[int, ...]      # a -> (batch..., m..., k...)
+    b_perm: tuple[int, ...]      # b -> (batch..., k..., n...)
+    batch: int                   # product of batch dims (0 = unbatched)
+    m: int
+    n: int
+    k: int
+    out_shape: tuple[int, ...]   # (batch..., m..., n...) before out_perm
+    out_perm: tuple[int, ...]    # -> the spec's requested output order
+
+
+def _expand_ellipsis(spec: str, a_ndim: int, b_ndim: int) -> str | None:
+    """Concretize '...' with fresh labels. Supports '...' on at most one
+    operand (plus the output); returns None when it can't."""
+    if "..." not in spec:
+        return spec
+    lhs, out = spec.split("->")
+    a_spec, b_spec = lhs.split(",")
+    if "..." in a_spec and "..." in b_spec:
+        return None
+    used = set(spec) - {".", ",", "-", ">"}
+    fresh = [c for c in string.ascii_letters if c not in used]
+    if "..." in a_spec:
+        n_extra = a_ndim - (len(a_spec) - 3)
+    else:
+        n_extra = b_ndim - (len(b_spec) - 3)
+    if n_extra < 0 or n_extra > len(fresh):
+        return None
+    ell = "".join(fresh[:n_extra])
+    return (f"{a_spec.replace('...', ell)},{b_spec.replace('...', ell)}"
+            f"->{out.replace('...', ell)}")
+
+
+@functools.lru_cache(maxsize=512)
+def _plan_2d(spec: str, a_shape: tuple[int, ...], b_shape: tuple[int, ...],
+             ) -> _Plan | None:
+    """Classify a concrete two-operand spec as a (batched) 2-D GEMM.
+
+    Returns None whenever the contraction is not expressible as
+    transpose+reshape around one GEMM (repeated labels, broadcast
+    batch dims, no contracted dim, ...) — the caller then falls back to
+    the XLA einsum path.
+    """
+    spec = _expand_ellipsis(spec, len(a_shape), len(b_shape))
+    if spec is None or "->" not in spec:
+        return None
+    lhs, out = spec.split("->")
+    if "," not in lhs:
+        return None
+    a_l, b_l = lhs.split(",")
+    if (len(set(a_l)) != len(a_l) or len(set(b_l)) != len(b_l)
+            or len(set(out)) != len(out)):
+        return None                      # diagonals / repeated outputs
+    if len(a_l) != len(a_shape) or len(b_l) != len(b_shape):
+        return None
+    a_set, b_set, o_set = set(a_l), set(b_l), set(out)
+    if not o_set <= (a_set | b_set):
+        return None
+    dim = {}
+    for labels, shape in ((a_l, a_shape), (b_l, b_shape)):
+        for lab, d in zip(labels, shape):
+            if dim.setdefault(lab, d) != d:
+                return None              # size-mismatched shared label
+    shared = a_set & b_set
+    k_labs = [l for l in a_l if l in shared and l not in o_set]
+    batch_labs = [l for l in out if l in shared]
+    m_labs = [l for l in a_l if l in a_set - b_set]
+    n_labs = [l for l in b_l if l in b_set - a_set]
+    if not k_labs:
+        return None                      # outer products: not a GEMM
+    if any(l not in o_set for l in m_labs + n_labs):
+        return None                      # summed-out non-shared dims
+    a_perm = tuple(a_l.index(l) for l in batch_labs + m_labs + k_labs)
+    b_perm = tuple(b_l.index(l) for l in batch_labs + k_labs + n_labs)
+
+    def prod(labs):
+        out = 1
+        for l in labs:
+            out *= dim[l]
+        return out
+
+    pre_out = batch_labs + m_labs + n_labs
+    out_shape = tuple(dim[l] for l in pre_out)
+    out_perm = tuple(pre_out.index(l) for l in out)
+    return _Plan(
+        a_perm=a_perm, b_perm=b_perm,
+        batch=prod(batch_labs) if batch_labs else 0,
+        m=prod(m_labs), n=prod(n_labs), k=prod(k_labs),
+        out_shape=out_shape, out_perm=out_perm)
+
+
+def _impl_gemm_2d(impl: registry.KernelImpl, a: jax.Array, b: jax.Array,
+                  route: Route) -> jax.Array:
+    """One policy-routed 2-D GEMM on an arbitrary-shape problem."""
+    m, k = a.shape
+    n = b.shape[1]
+    caps = impl.capabilities
+    precision = route.precision
+    if precision == "f32" and "f32" not in caps.fused_policies:
+        # no narrow-pass decomposition exists for exact f32; vendor path
+        return xla_policy_einsum("mk,kn->mn", a, b, "f32")
+
+    tiles = route.tiles or tile_for(impl.name, m, n, k)
+    tiles = tiles.clamp(m, n, k)
+    interp = route.resolved_interpret()
+    if caps.pads_to_tiles:
+        ap, bp = pad2(a, tiles.bm, tiles.bk), pad2(b, tiles.bk, tiles.bn)
+    else:
+        ap, bp = a, b
+
+    if precision in caps.fused_policies:
+        out = impl.fn(ap, bp, policy=precision, tiles=tiles,
+                      interpret=interp)
+    else:
+        # Paper Fig. 5: refinement as chained narrow GEMMs, here chained
+        # through whichever impl was asked for (smallest-first sum).
+        a_terms, b_terms = prec.operand_terms(ap, bp, precision)
+        out = None
+        for ta, tb in prec.policy_terms(precision):
+            part = impl.fn(a_terms[ta], b_terms[tb], policy="bf16",
+                           tiles=tiles, interpret=interp)
+            out = part if out is None else out + part
+        assert out is not None
+    return out[:m, :n]
+
+
+def _execute_plan(plan: _Plan, a: jax.Array, b: jax.Array,
+                  route: Route) -> jax.Array:
+    impl = registry.get_impl("gemm", route.impl("gemm"))
+    at = jnp.transpose(a, plan.a_perm)
+    bt = jnp.transpose(b, plan.b_perm)
+    if plan.batch:
+        at = at.reshape(plan.batch, plan.m, plan.k)
+        bt = bt.reshape(plan.batch, plan.k, plan.n)
+        out = jax.vmap(
+            lambda x, y: _impl_gemm_2d(impl, x, y, route))(at, bt)
+    else:
+        at = at.reshape(plan.m, plan.k)
+        bt = bt.reshape(plan.k, plan.n)
+        out = _impl_gemm_2d(impl, at, bt, route)
+    out = out.reshape(plan.out_shape)
+    return jnp.transpose(out, plan.out_perm)
+
+
+# Custom VJP: Pallas kernels are not reverse-mode differentiable, and we
+# want the backward contractions to run the SAME impl the forward ran
+# (models train on the path benchmarks measure). For a two-operand
+# einsum with unique labels, dA = einsum(out_spec, b_spec -> a_spec) and
+# dB = einsum(a_spec, out_spec -> b_spec).
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _lowered_einsum(spec: str, route: Route, a, b):
+    plan = _plan_2d(spec, a.shape, b.shape)
+    assert plan is not None
+    return _execute_plan(plan, a, b, route)
+
+
+def _lowered_fwd(spec, route, a, b):
+    return _lowered_einsum(spec, route, a, b), (a, b)
+
+
+def _lowered_bwd(spec, route, res, g):
+    a, b = res
+    concrete = _expand_ellipsis(spec, a.ndim, b.ndim)
+    assert concrete is not None
+    lhs, out = concrete.split("->")
+    a_spec, b_spec = lhs.split(",")
+    da = routed_einsum(f"{out},{b_spec}->{a_spec}", g, b, route)
+    db = routed_einsum(f"{a_spec},{out}->{b_spec}", a, g, route)
+    return da.astype(a.dtype), db.astype(b.dtype)
+
+
+_lowered_einsum.defvjp(_lowered_fwd, _lowered_bwd)
+
+
+def routed_einsum(spec: str, a: jax.Array, b: jax.Array,
+                  policy: "str | Route" = "bf16") -> jax.Array:
+    """Two-operand einsum under a (precision, backends, tiles) route.
+
+    fp32 out always (the accumulator type). Non-reference impls require
+    a 2-D-reducible spec; anything else falls back to the XLA path so
+    the call NEVER fails on spec structure.
+    """
+    route = as_route(policy)
+    name = route.impl("gemm")
+    if name == "xla":
+        return xla_policy_einsum(spec, a, b, route.precision)
+    registry.get_impl("gemm", name)      # unknown impls fail loudly
+    plan = _plan_2d(spec, a.shape, b.shape)
+    if plan is None:
+        return xla_policy_einsum(spec, a, b, route.precision)
+    return _lowered_einsum(spec, route, a, b)
+
+
+def gemm(a: jax.Array, b: jax.Array, *, policy: "str | Route" = "bf16",
+         backend: str | None = None, tiles: TileConfig | None = None,
+         interpret: bool | None = None) -> jax.Array:
+    """Policy-routed C = A @ B through a registry impl (2-D entry).
+
+    Keyword overrides (backend/tiles/interpret) refine whatever `policy`
+    carries; shapes are padded to tile multiples and sliced back.
+    """
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"gemm expects (m,k) x (k,n); got {a.shape} x {b.shape}")
+    route = as_route(policy)
+    if backend is not None:
+        route = route.with_impl("gemm", backend)
+    route = dataclasses.replace(
+        route,
+        tiles=tiles if tiles is not None else route.tiles,
+        interpret=interpret if interpret is not None else route.interpret)
+    return routed_einsum("mk,kn->mn", a, b, route)

@@ -1,0 +1,167 @@
+"""The grouped family: the ragged expert-GEMM of the MoE FFN.
+
+E per-expert GEMMs whose row counts are data-dependent (the paper's
+Fig.-7 batched-GEMM occupancy regime).  An impl computes
+
+    out[r] = x[r] @ w[e]   for every row r in group e's region,
+
+over a flat token buffer sorted by group with each group's region
+aligned to the row tile (``grouped_tiles(...).bm``): group e occupies
+rows [offsets[e], offsets[e+1]), interior offsets are bm-multiples,
+padding rows are zero and come back zero.
+
+  ``xla``             the capacity-padded vmap reference: a strided
+                      gather into the worst-case (E, C, D) dispatch
+                      tensor, one ``ecd,edf->ecf`` policy-decomposed
+                      einsum (the pre-grouped model path), scatter
+                      back — the vendor-library analogue and the
+                      parity oracle for the family.
+  ``pallas_grouped``  ``kernels.gemm_grouped``: one kernel walks the
+                      sorted token dim, scalar-prefetched group
+                      offsets pick each tile's expert weight block via
+                      the BlockSpec index map, dead tiles are skipped,
+                      the policy ladder is fused in-kernel, and
+                      custom-VJP dx/dw kernels keep training on the
+                      fused path.
+
+Impl contract: fn(x (N,D) sorted+aligned, w (E,D,F), group_offsets
+(E+1,) int32, *, route) -> fp32 (N,F).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ops import registry
+from repro.core.ops.registry import (LADDER_BOUNDS, OpSpec, register_family,
+                                     register_impl)
+from repro.core.ops.route import Route, as_route
+from repro.core.ops.tiles import TileConfig, align_group_counts, tile_for
+
+__all__ = ["grouped_matmul", "grouped_tiles"]
+
+
+def _make_problem(seed: int) -> dict:
+    rng = np.random.default_rng(seed)
+    e, d, f, bm = 3, 36, 24, 8
+    sizes = np.array([10, 0, 13])
+    aligned = align_group_counts(sizes, bm)
+    offsets = np.concatenate([[0], np.cumsum(aligned)]).astype(np.int32)
+    x = np.zeros((int(offsets[-1]), d), np.float32)
+    valid = np.zeros(int(offsets[-1]), bool)
+    for g in range(e):
+        x[offsets[g]:offsets[g] + sizes[g]] = rng.uniform(
+            -1, 1, (sizes[g], d))
+        valid[offsets[g]:offsets[g] + sizes[g]] = True
+    return {
+        "x": jnp.asarray(x),
+        "w": jnp.asarray(rng.uniform(-1, 1, (e, d, f)).astype(np.float32)),
+        "offsets": jnp.asarray(offsets),
+        "_tiles": TileConfig(bm, 128, 128),
+        "_valid": valid,
+    }
+
+
+def _run(problem: dict, route: Route) -> jax.Array:
+    if route.tiles is None:
+        route = dataclasses.replace(route, tiles=problem["_tiles"])
+    return grouped_matmul(problem["x"], problem["w"], problem["offsets"],
+                          policy=route)
+
+
+def _oracle(problem: dict) -> np.ndarray:
+    x = np.asarray(problem["x"], np.float64)
+    w = np.asarray(problem["w"], np.float64)
+    offsets = np.asarray(problem["offsets"])
+    out = np.zeros((x.shape[0], w.shape[2]))
+    for g in range(w.shape[0]):
+        out[offsets[g]:offsets[g + 1]] = x[offsets[g]:offsets[g + 1]] @ w[g]
+    return out
+
+
+register_family(OpSpec(
+    family="grouped",
+    contract="fn(x (N,D) sorted+aligned, w (E,D,F), group_offsets (E+1,) "
+             "int32, *, route) -> fp32 (N,F); tiles.bm is the row tile "
+             "AND the group alignment",
+    reference="xla",
+    label="grouped backend",          # historical error wording
+    layer_families=("moe",),
+    bench_policies=("bf16", "refine_a", "refine_ab", "f32"),
+    bench_axes=(("profile", ("uniform", "skewed", "empty")),),
+    make_problem=_make_problem,
+    run=_run,
+    oracle=_oracle,
+    valid_mask=lambda problem: problem["_valid"],
+    error_bound=lambda policy: LADDER_BOUNDS[policy],
+    grad_args=("x",),
+))
+
+
+def grouped_tiles(policy: "str | Route", m: int, n: int,
+                  k: int) -> TileConfig:
+    """The tile config the grouped impl will run (m, n, k) with.
+
+    ``bm`` doubles as the GROUP ALIGNMENT: callers building the sorted
+    token buffer pad each group's region to a multiple of it and pin the
+    result on the route (``dataclasses.replace(route, tiles=...)``) so
+    dispatcher and kernel agree on the layout.  m is the real (pre-
+    alignment) token-assignment count — the shape key autotune results
+    land under.
+    """
+    route = as_route(policy)
+    tiles = route.tiles or tile_for(route.impl("grouped"), m, n, k)
+    return tiles.clamp(m, n, k)
+
+
+@register_impl("grouped", "xla", fused_policies=registry.ALL_POLICIES,
+               features=("vjp",))
+def _xla_grouped_matmul(x, w, group_offsets, *, route: Route):
+    """Reference: strided gather to the worst-case-capacity (E, C, D)
+    dispatch tensor + the pre-grouped vmap path's ``ecd,edf->ecf``
+    policy einsum + scatter back.  C = N (every group could own every
+    row), so this is the memory-heavy oracle, not a production path."""
+    from repro.core.ops.gemm import xla_policy_einsum
+    n, _ = x.shape
+    f = w.shape[2]
+    offsets = group_offsets.astype(jnp.int32)
+    idx = offsets[:-1, None] + jnp.arange(n, dtype=jnp.int32)[None]  # (E, C)
+    valid = idx < offsets[1:, None]
+    idx_c = jnp.minimum(idx, n - 1)
+    xe = jnp.where(valid[..., None], x[idx_c], 0)
+    he = xla_policy_einsum("ecd,edf->ecf", xe, w, route.precision)
+    out = jnp.zeros((n, f), jnp.float32)
+    contrib = jnp.where(valid[..., None], he, 0.0)
+    return out.at[idx_c.reshape(-1)].add(contrib.reshape(-1, f))
+
+
+@register_impl("grouped", "pallas_grouped",
+               fused_policies=registry.ALL_POLICIES, features=("vjp",),
+               tile_schema=("bm", "bn", "bk"),
+               default_tiles=TileConfig(128, 256, 256))
+def _pallas_grouped_matmul(x, w, group_offsets, *, route: Route):
+    from repro.kernels.gemm_grouped import grouped_gemm
+    n, d = x.shape
+    tiles = grouped_tiles(route, n, w.shape[2], d)
+    return grouped_gemm(x, w, group_offsets, precision=route.precision,
+                        bm=tiles.bm, bn=tiles.bn, bk=tiles.bk,
+                        interpret=route.resolved_interpret())
+
+
+def grouped_matmul(x: jax.Array, w: jax.Array, group_offsets: jax.Array,
+                   *, policy: "str | Route" = "bf16") -> jax.Array:
+    """Ragged grouped-GEMM dispatch (the MoE expert contraction).
+
+    x: (N, D) token rows sorted by group in the aligned layout above;
+    w: (E, D, F) per-group weights; group_offsets: (E+1,) int32.
+    Returns (N, F) fp32.  ``policy`` is a precision string (runs the
+    reference impl) or a route whose grouped entry names a registered
+    impl.  Differentiable on every impl declaring ``vjp``.
+    """
+    route = as_route(policy)
+    impl = registry.get_impl("grouped", route.impl("grouped"))
+    return impl.fn(x, w, group_offsets, route=route)

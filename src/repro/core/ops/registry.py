@@ -1,0 +1,309 @@
+"""The op registry: declarative kernel families with capability metadata.
+
+The paper's central finding is that ONE matrix-multiply contract is
+served by several programming surfaces (WMMA / CUTLASS / cuBLAS) with
+very different performance and precision envelopes.  This module makes
+that a queryable data model instead of per-family if/elif chains:
+
+  * an ``OpSpec`` declares a kernel FAMILY — its name, abstract call
+    contract, which registered impl is the reference (parity oracle and
+    fallback target), and the bench/parity hooks (problem builder, fp64
+    oracle, error ladder) that let benchmarks and the generic contract
+    test derive their sweeps straight from the registry;
+  * a ``KernelImpl`` is one registered implementation of a family,
+    carrying declarative ``Capabilities`` (supported precision-policy
+    rungs, natively-fused rungs, feature tags like ``decode`` /
+    ``vjp`` / ``masks:sliding``, tile-config schema, interpret-mode
+    support);
+  * ``register_impl(family, name, ...)`` is the ONE decorator every
+    impl — built-in or downstream — registers through; routing
+    (``repro.core.ops.route``) validates requested impls against their
+    capabilities at route-build time.
+
+Adding a family = one ``register_family(OpSpec(...))`` plus a
+dispatcher that calls ``get_impl(family, route.impl(family))``; adding
+an impl = one ``register_impl`` with its capability metadata.  Parity
+tests (``tests/test_registry_contract.py``), CLI exposure
+(``--backend family=impl``), the ``--list`` introspection table and
+bench-matrix gating are inherited for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Callable, Iterable
+
+from repro.core.precision import POLICIES
+
+__all__ = [
+    "Capabilities",
+    "OpSpec",
+    "KernelImpl",
+    "register_family",
+    "register_impl",
+    "get_family",
+    "get_impl",
+    "families",
+    "available_impls",
+    "reference_impl",
+    "capability_rows",
+    "capability_markdown",
+    "format_capability_table",
+    "LADDER_BOUNDS",
+]
+
+ALL_POLICIES = frozenset(POLICIES)
+
+# Max-abs-error ladder vs a fp64 oracle for U[-1,1] operands with
+# K ~ O(100) (the paper's Fig. 8 rungs, with slack for summation-order
+# differences between impls).  Families scale these via their
+# ``error_bound`` hook.
+LADDER_BOUNDS = {
+    "bf16": 2e-1,
+    "refine_a": 1e-1,
+    "bf16x3": 1e-3,
+    "refine_ab": 1e-3,
+    "bf16x6": 1e-4,
+    "f32": 1e-4,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Capabilities:
+    """Declarative metadata for one registered impl.
+
+    ``policies`` are the precision-policy rungs the impl can serve
+    end-to-end (possibly via router-side decomposition into bf16
+    passes); ``fused_policies`` the subset it executes in ONE fused
+    kernel call.  ``features`` are free-form capability tags the
+    family's dispatcher and route validation understand — the
+    conventional tags are ``vjp`` (differentiable), ``decode``
+    (single-token cache decode), ``gqa``, ``softcap`` and
+    ``masks:causal`` / ``masks:sliding`` / ``masks:full``.
+    """
+
+    policies: frozenset[str] = ALL_POLICIES
+    fused_policies: frozenset[str] = frozenset()
+    features: frozenset[str] = frozenset()
+    pads_to_tiles: bool = False
+    tile_schema: tuple[str, ...] = ()
+    interpret: bool = True
+
+    def has(self, feature: str) -> bool:
+        return feature in self.features
+
+    def supports_policy(self, policy: str) -> bool:
+        return policy in self.policies
+
+
+@dataclasses.dataclass(frozen=True)
+class OpSpec:
+    """One kernel family: abstract contract + reference + test hooks.
+
+    ``contract`` documents the call signature every impl's ``fn`` must
+    satisfy.  ``reference`` names the registered impl that is the
+    family's parity oracle AND the automatic fallback target when a
+    requested impl lacks a capability and fallback is allowed.
+    ``layer_families`` lists the model layer families whose precision
+    rung reaches this op (empty = every matmul family); route-build
+    validation uses it to check exactly the rungs an impl will see.
+
+    The bench/parity hooks make sweeps registry-derived:
+    ``bench_policies`` (+ optional extra ``bench_axes``) define the
+    family's bench matrix, and ``make_problem`` / ``run`` / ``oracle``
+    / ``error_bound`` / ``grad_args`` let the generic contract suite
+    parity-test every (impl, policy) without family-specific tests.
+    """
+
+    family: str
+    contract: str
+    reference: str
+    label: str = ""                    # legacy error label ("backend", ...)
+    layer_families: tuple[str, ...] = ()
+    bench_policies: tuple[str, ...] = ()
+    bench_axes: tuple[tuple[str, tuple[str, ...]], ...] = ()
+    make_problem: Callable[[int], dict] | None = None
+    run: Callable[..., Any] | None = None      # (problem, route) -> array
+    oracle: Callable[[dict], Any] | None = None  # problem -> fp64 ndarray
+    valid_mask: Callable[[dict], Any] | None = None  # rows to compare
+    error_bound: Callable[[str], float] | None = None
+    grad_args: tuple[str, ...] = ()
+
+    def __post_init__(self) -> None:
+        if not self.label:
+            object.__setattr__(self, "label", f"{self.family} backend")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelImpl:
+    """One registered implementation of a family.
+
+    ``fn`` is whatever object the family contract specifies — a plain
+    callable for single-op families (gemm, grouped), a small namespace
+    with named entry points for multi-op families (attention's
+    forward/decode).
+    """
+
+    family: str
+    name: str
+    fn: Any
+    capabilities: Capabilities
+
+
+_FAMILIES: dict[str, OpSpec] = {}
+_IMPLS: dict[str, dict[str, KernelImpl]] = {}
+
+
+def register_family(spec: OpSpec) -> OpSpec:
+    """Register (or replace) a kernel family."""
+    _FAMILIES[spec.family] = spec
+    _IMPLS.setdefault(spec.family, {})
+    return spec
+
+
+def register_impl(family: str, name: str, *,
+                  capabilities: Capabilities | None = None,
+                  policies: Iterable[str] | None = None,
+                  fused_policies: Iterable[str] = (),
+                  features: Iterable[str] = (),
+                  pads_to_tiles: bool = False,
+                  tile_schema: tuple[str, ...] = (),
+                  interpret: bool = True,
+                  default_tiles=None):
+    """Decorator registering ``fn`` as impl ``name`` of ``family``.
+
+        @register_impl("gemm", "mine", fused_policies=("bf16",),
+                       features=("vjp",), pads_to_tiles=True,
+                       tile_schema=("bm", "bn", "bk"))
+        def my_gemm(a, b, *, policy, tiles, interpret): ...
+
+    Pass a prebuilt ``capabilities`` object or the individual fields.
+    ``default_tiles`` seeds the shape-keyed tile cache's default for
+    this impl.  Returns the function unchanged so kernels keep their
+    direct call surface.
+    """
+    if family not in _FAMILIES:
+        raise ValueError(
+            f"unknown op family {family!r}; registered: {families()} "
+            f"(register_family first)")
+    caps = capabilities or Capabilities(
+        policies=(ALL_POLICIES if policies is None else frozenset(policies)),
+        fused_policies=frozenset(fused_policies),
+        features=frozenset(features),
+        pads_to_tiles=pads_to_tiles,
+        tile_schema=tuple(tile_schema),
+        interpret=interpret,
+    )
+
+    def wrap(fn):
+        _IMPLS[family][name] = KernelImpl(
+            family=family, name=name, fn=fn, capabilities=caps)
+        if default_tiles is not None:
+            from repro.core.ops import tiles as _tiles
+            # The tile cache is keyed by impl NAME (one namespace shared
+            # across families — reused names like "xla" are fine because
+            # the reference impls never read tiles): a same-named impl in
+            # another family seeding DIFFERENT defaults would silently
+            # change that impl's block shapes, so say it out loud.
+            existing = _tiles._TILE_DEFAULTS.get(name)
+            if existing is not None and existing != default_tiles:
+                warnings.warn(
+                    f"impl name {name!r} already has default tiles "
+                    f"{existing} (impl names share one tile namespace "
+                    f"across families); overwriting with {default_tiles}",
+                    RuntimeWarning, stacklevel=2)
+            _tiles.set_default_tiles(name, default_tiles)
+        return fn
+
+    return wrap
+
+
+def get_family(family: str) -> OpSpec:
+    if family not in _FAMILIES:
+        raise ValueError(
+            f"unknown op family {family!r}; registered: {families()}")
+    return _FAMILIES[family]
+
+
+def get_impl(family: str, name: str) -> KernelImpl:
+    """Look up one impl; unknown names fail with the family's label and
+    the sorted list of registered impls (one wording for every family —
+    the three historical registries each had their own)."""
+    spec = get_family(family)
+    impls = _IMPLS[family]
+    if name not in impls:
+        raise ValueError(
+            f"unknown {spec.label} {name!r}; registered: "
+            f"{available_impls(family)}")
+    return impls[name]
+
+
+def families() -> tuple[str, ...]:
+    return tuple(sorted(_FAMILIES))
+
+
+def available_impls(family: str) -> tuple[str, ...]:
+    """Registered impl names of one family, ALWAYS sorted (the three
+    historical ``available_*`` functions disagreed on order)."""
+    get_family(family)
+    return tuple(sorted(_IMPLS[family]))
+
+
+def reference_impl(family: str) -> str:
+    return get_family(family).reference
+
+
+# ========================================================== introspection
+
+def _fmt_policies(pols: frozenset[str]) -> str:
+    if pols == ALL_POLICIES:
+        return "all"
+    return ",".join(p for p in POLICIES if p in pols) or "-"
+
+
+def capability_rows() -> list[dict[str, str]]:
+    """The family x impl x capability table as data rows."""
+    rows = []
+    for family in families():
+        spec = get_family(family)
+        for name in available_impls(family):
+            impl = get_impl(family, name)
+            c = impl.capabilities
+            rows.append({
+                "family": family,
+                "impl": name,
+                "role": "reference" if name == spec.reference else "kernel",
+                "policies": _fmt_policies(c.policies),
+                "fused": _fmt_policies(c.fused_policies),
+                "features": ",".join(sorted(c.features)) or "-",
+                "tiles": ",".join(c.tile_schema) or "-",
+            })
+    return rows
+
+
+_COLS = ("family", "impl", "role", "policies", "fused", "features", "tiles")
+
+
+def capability_markdown() -> str:
+    """The capability table as a markdown block (the README matrix is
+    regenerated from this; CI fails on drift)."""
+    rows = capability_rows()
+    lines = ["| " + " | ".join(_COLS) + " |",
+             "|" + "|".join("---" for _ in _COLS) + "|"]
+    for r in rows:
+        lines.append("| " + " | ".join(f"`{r[c]}`" if c in ("impl",)
+                                       else r[c] for c in _COLS) + " |")
+    return "\n".join(lines)
+
+
+def format_capability_table() -> str:
+    """Plain-text table for ``benchmarks.run --list`` / dryrun."""
+    rows = capability_rows()
+    widths = {c: max(len(c), *(len(r[c]) for r in rows)) for c in _COLS}
+    def fmt(vals):
+        return "  ".join(str(v).ljust(widths[c]) for c, v in
+                         zip(_COLS, vals))
+    out = [fmt(_COLS), fmt("-" * widths[c] for c in _COLS)]
+    out += [fmt(r[c] for c in _COLS) for r in rows]
+    return "\n".join(out)

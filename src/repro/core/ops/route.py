@@ -1,0 +1,312 @@
+"""Capability-aware routing: one ``backends: {family: impl}`` mapping.
+
+``Route`` is what one contraction carries at dispatch time — a
+precision rung plus a uniform (family -> impl) mapping, replacing the
+historical trio of per-family route fields (``backend`` / ``attn`` /
+``grouped``, still readable as properties for back-compat).
+
+``ExecutionPolicy`` is the per-model policy object: it extends
+``PrecisionPolicy`` (per-layer-family precision rungs) with the same
+uniform backends mapping plus tiles/interpret pins, and VALIDATES every
+selected impl against its declared capabilities at construction ("route
+-build time"): requesting an impl that lacks a precision rung it would
+be asked to run, or a feature listed in ``require``, fails immediately
+with an error naming the missing capability — or, with
+``fallback=True``, silently resolves to the family's reference impl.
+
+Backends-mapping keys are op-family names (``gemm``, ``attention``,
+``grouped``); a ``gemm@<layer>`` key scopes the GEMM impl to one model
+layer family (e.g. ``gemm@logits``), mirroring the historical
+per-layer-family backend overrides.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Mapping
+
+import jax
+
+from repro.core.ops import registry
+from repro.core.ops.tiles import TileConfig, default_interpret
+from repro.core.precision import PrecisionPolicy
+
+__all__ = [
+    "Route",
+    "ExecutionPolicy",
+    "as_route",
+    "normalize_backends",
+    "validate_backends",
+    "parse_backend_flags",
+]
+
+def normalize_backends(backends) -> tuple[tuple[str, str], ...]:
+    """Mapping or pair-tuple -> canonical sorted pair-tuple."""
+    if isinstance(backends, Mapping):
+        items = backends.items()
+    else:
+        items = tuple(backends)
+    return tuple(sorted((str(k), str(v)) for k, v in items))
+
+
+# Valid layer-family scopes for `family@layer` backends keys (the
+# PrecisionPolicy per-layer knobs, minus the default).
+LAYER_FAMILIES = tuple(f for f in PrecisionPolicy._PRECISION_FIELDS
+                       if f != "default")
+
+
+@dataclasses.dataclass(frozen=True)
+class Route:
+    """Everything one contraction needs: precision x impls x tiles.
+
+    ``peinsum`` / the family dispatchers accept a route anywhere a
+    policy string is accepted; a bare string means (policy, reference
+    impls everywhere).  ``backends`` maps op families to registered
+    impl names; families absent from the mapping resolve to their
+    reference impl.  Hashable and fully static, so routes cross
+    jit/custom-vjp boundaries as auxiliary data.
+    """
+
+    precision: str = "bf16"
+    backends: tuple[tuple[str, str], ...] = ()
+    tiles: TileConfig | None = None    # None -> shape-keyed tile cache
+    interpret: bool | None = None      # None -> default_interpret()
+
+    def __post_init__(self) -> None:
+        object.__setattr__(
+            self, "backends", normalize_backends(self.backends))
+
+    # ------------------------------------------------------------ lookup
+
+    def impl(self, family: str) -> str:
+        """The impl name this route selects for ``family`` (the
+        family's reference impl when unmapped)."""
+        for fam, name in self.backends:
+            if fam == family:
+                return name
+        return registry.reference_impl(family)
+
+    def uses_reference(self, family: str) -> bool:
+        return self.impl(family) == registry.reference_impl(family)
+
+    def with_impl(self, family: str, name: str) -> "Route":
+        d = dict(self.backends)
+        d[family] = name
+        return dataclasses.replace(self, backends=normalize_backends(d))
+
+    def resolved_interpret(self) -> bool:
+        """Interpret-mode resolution, hoisted out of every family."""
+        return default_interpret() if self.interpret is None else self.interpret
+
+    # Back-compat accessors for the historical per-family route fields.
+    @property
+    def backend(self) -> str:
+        return self.impl("gemm")
+
+    @property
+    def attn(self) -> str:
+        return self.impl("attention")
+
+    @property
+    def grouped(self) -> str:
+        return self.impl("grouped")
+
+
+def as_route(policy: "str | Route") -> Route:
+    """Normalize a policy argument: strings mean (rung, all-reference)."""
+    if isinstance(policy, Route):
+        return policy
+    return Route(precision=policy)
+
+
+# ============================================================== validation
+
+def validate_backends(backends, *,
+                      rungs_for=None,
+                      require: Mapping[str, tuple[str, ...]] | None = None,
+                      fallback: bool = False,
+                      ) -> tuple[tuple[str, str], ...]:
+    """Check a backends mapping against the registry's capabilities.
+
+    ``rungs_for(op_family, scoped_layer)`` returns the precision rungs
+    the impl will actually be asked to run (None = skip rung checks);
+    ``require`` maps op families to feature tags that must be present
+    (e.g. ``{"attention": ("decode",)}`` for a serve route).  Required
+    families ABSENT from the mapping resolve to their reference impl at
+    dispatch time, so that impl is validated too — a demand the
+    reference cannot meet fails here, not later.  A failed check raises
+    ``ValueError`` NAMING the missing capability — or, when
+    ``fallback`` is set, resolves that family to its reference impl
+    instead.
+    """
+    require = dict(require or {})
+
+    def check(fam, name, scoped, *, allow_fallback):
+        spec = registry.get_family(fam)
+        impl = registry.get_impl(fam, name)
+        caps = impl.capabilities
+        rungs = tuple(rungs_for(fam, scoped or None)) if rungs_for else ()
+        missing = [f"precision-policy rung {r!r}" for r in sorted(rungs)
+                   if not caps.supports_policy(r)]
+        missing += [f"capability {feat!r}" for feat in require.get(fam, ())
+                    if not caps.has(feat)]
+        if not missing:
+            return name
+        if allow_fallback and name != spec.reference:
+            warnings.warn(
+                f"{fam} impl {name!r} lacks {', '.join(missing)}; "
+                f"falling back to the reference impl "
+                f"{spec.reference!r}", RuntimeWarning, stacklevel=3)
+            return spec.reference
+        raise ValueError(
+            f"{fam} impl {name!r} does not support "
+            f"{', '.join(missing)} (policies: {sorted(caps.policies)}, "
+            f"features: {sorted(caps.features)}); pick a capable impl "
+            f"or allow fallback to the reference impl "
+            f"{spec.reference!r}")
+
+    out = []
+    unscoped = set()
+    for key, name in normalize_backends(backends):
+        fam, _, scoped = key.partition("@")
+        if scoped and scoped not in LAYER_FAMILIES:
+            raise ValueError(
+                f"unknown layer-family scope {scoped!r} in backends key "
+                f"{key!r}; valid scopes: {LAYER_FAMILIES}")
+        out.append((key, check(fam, name, scoped,
+                               allow_fallback=fallback)))
+        if not scoped:
+            unscoped.add(fam)
+    for fam in sorted(set(require) - unscoped):
+        check(fam, registry.reference_impl(fam), None,
+              allow_fallback=False)
+    return tuple(sorted(out))
+
+
+def _normalize_require(require) -> tuple[tuple[str, tuple[str, ...]], ...]:
+    if isinstance(require, Mapping):
+        items = require.items()
+    else:
+        items = tuple(require)
+    return tuple(sorted((str(k), tuple(v)) for k, v in items))
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPolicy(PrecisionPolicy):
+    """Per-layer-family precision + the uniform backends mapping.
+
+    Extends ``PrecisionPolicy`` (precision fields and their semantics
+    are inherited) with WHERE each op family runs: ``backends`` maps op
+    families (optionally layer-scoped, ``gemm@logits``) to registered
+    impl names, validated against capability metadata at construction.
+    ``for_(layer_family)`` returns the ``Route`` models thread straight
+    into ``peinsum`` / the family dispatchers.
+
+    ``require`` lists feature tags each family's impl must have (the
+    serve driver demands ``{"attention": ("decode",)}``); ``fallback``
+    turns capability misses into automatic reference-impl fallbacks
+    instead of errors.
+    """
+
+    backends: tuple[tuple[str, str], ...] = ()
+    tiles: TileConfig | None = None
+    interpret: bool | None = None
+    fallback: bool = False
+    require: tuple[tuple[str, tuple[str, ...]], ...] = ()
+
+    def __post_init__(self) -> None:
+        super().__post_init__()
+        object.__setattr__(self, "require", _normalize_require(self.require))
+        object.__setattr__(self, "backends", validate_backends(
+            self.backends, rungs_for=self._rungs_for,
+            require=dict(self.require), fallback=self.fallback))
+
+    def _rungs_for(self, op_family: str, scoped: str | None):
+        """The precision rungs impl selection ``op_family`` (possibly
+        layer-scoped) will actually execute under this policy."""
+        if scoped is not None:
+            return {PrecisionPolicy.for_(self, scoped)}
+        spec = registry.get_family(op_family)
+        if spec.layer_families:
+            return {PrecisionPolicy.for_(self, lf)
+                    for lf in spec.layer_families}
+        return {getattr(self, f) or self.default
+                for f in self._PRECISION_FIELDS}
+
+    # ------------------------------------------------------------ routes
+
+    def impl_for(self, op_family: str, layer_family: str | None = None) -> str:
+        d = dict(self.backends)
+        if layer_family is not None and f"{op_family}@{layer_family}" in d:
+            return d[f"{op_family}@{layer_family}"]
+        return d.get(op_family, registry.reference_impl(op_family))
+
+    def route(self, layer_family: str) -> Route:
+        chosen = {fam: name for fam, name in self.backends if "@" not in fam}
+        for key, name in self.backends:
+            fam, _, scoped = key.partition("@")
+            if scoped == layer_family:
+                chosen[fam] = name
+        return Route(
+            precision=PrecisionPolicy.for_(self, layer_family),
+            backends=chosen, tiles=self.tiles, interpret=self.interpret)
+
+    # Models call policy.for_(family) and hand the result to peinsum;
+    # returning a route (instead of the parent's string) switches every
+    # call site to the registry-routed path with zero model edits.
+    def for_(self, layer_family: str) -> Route:  # type: ignore[override]
+        return self.route(layer_family)
+
+    @classmethod
+    def from_precision(cls, policy: PrecisionPolicy, *,
+                       backends=None, tiles: TileConfig | None = None,
+                       **kw) -> "ExecutionPolicy":
+        """Lift a plain PrecisionPolicy onto a backends mapping."""
+        fields = {f.name: getattr(policy, f.name)
+                  for f in dataclasses.fields(PrecisionPolicy)}
+        return cls(**fields, backends=backends or (), tiles=tiles, **kw)
+
+
+# Fully static pytree: every field (precision strings included) is
+# metadata, so an ExecutionPolicy can cross jit/vmap/scan boundaries as
+# an argument, not just as a closure.
+jax.tree_util.register_dataclass(
+    ExecutionPolicy,
+    data_fields=[],
+    meta_fields=[f.name for f in dataclasses.fields(ExecutionPolicy)],
+)
+
+
+# ================================================================= CLI glue
+
+def parse_backend_flags(specs, *, attn_backend: str | None = None,
+                        grouped_backend: str | None = None,
+                        ) -> dict[str, str]:
+    """Parse repeatable ``--backend [FAMILY=]IMPL`` flags (+ the
+    deprecated ``--attn-backend`` / ``--grouped-backend`` aliases) into
+    a backends mapping, validating names against the registry.
+
+    A bare impl name (no ``family=``) is the historical single-flag
+    form and means ``gemm=IMPL`` — accepted with a DeprecationWarning.
+    """
+    backends: dict[str, str] = {}
+    for spec in specs or ():
+        fam, sep, name = spec.partition("=")
+        if not sep:
+            warnings.warn(
+                f"bare --backend {spec!r} is deprecated; use "
+                f"--backend gemm={spec}", DeprecationWarning, stacklevel=2)
+            fam, name = "gemm", spec
+        registry.get_impl(fam.partition("@")[0], name)  # fail loudly now
+        backends[fam] = name
+    for fam, name, flag in (("attention", attn_backend, "--attn-backend"),
+                            ("grouped", grouped_backend,
+                             "--grouped-backend")):
+        if name is not None:
+            warnings.warn(
+                f"{flag} is deprecated; use --backend {fam}={name}",
+                DeprecationWarning, stacklevel=2)
+            registry.get_impl(fam, name)
+            backends.setdefault(fam, name)
+    return backends

@@ -1,0 +1,271 @@
+"""Family-generic tiling layer: block shapes, padding, and the
+shape-keyed autotune cache shared by every kernel family.
+
+This module hoists what used to be private helpers of the GEMM
+dispatch path (and duplicated copies in the grouped-MoE path) into one
+place the whole ``repro.core.ops`` subsystem shares:
+
+  * ``TileConfig`` — the (bm, bn, bk) block shape every impl's
+    ``tile_schema`` capability refers to;
+  * ``round_up`` / ``pad2`` / ``align_group_counts`` — the pad-to-tile
+    helpers (``round_up`` works on ints, numpy arrays and jax arrays
+    alike, so dispatchers and benchmark layout builders share one
+    formula);
+  * the shape-keyed tile cache (``tile_for`` / ``set_tiles`` /
+    ``autotune_tiles``) with JSON persistence (``REPRO_TILE_CACHE`` /
+    ``--tile-cache``) so serve restarts skip re-tuning hot shapes;
+  * ``default_interpret`` — Pallas interpret-mode resolution, computed
+    once per process and shared by every dispatch site.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "TileConfig",
+    "round_up",
+    "pad2",
+    "align_group_counts",
+    "tile_for",
+    "set_tiles",
+    "set_default_tiles",
+    "clear_tile_cache",
+    "tile_cache_path",
+    "save_tile_cache",
+    "load_tile_cache",
+    "autotune_tiles",
+    "default_interpret",
+]
+
+
+# ================================================================ interpret
+
+_DEFAULT_INTERPRET: bool | None = None
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode unless we are actually on TPU.
+
+    Resolved once per process: backend detection is stable and every
+    dispatch site shares the answer.
+    """
+    global _DEFAULT_INTERPRET
+    if _DEFAULT_INTERPRET is None:
+        _DEFAULT_INTERPRET = jax.default_backend() != "tpu"
+    return _DEFAULT_INTERPRET
+
+
+# ============================================================= pad helpers
+
+def round_up(x, mult: int):
+    """Round ``x`` up to a multiple of ``mult``.
+
+    Works on plain ints, numpy arrays and jax arrays/tracers (only
+    ``//``/``*`` are used), so the kernel dispatchers, the MoE group
+    aligner and the benchmark layout builders share one formula.
+    """
+    return -(-x // mult) * mult
+
+
+def pad2(x: jax.Array, r: int, c: int) -> jax.Array:
+    """Zero-pad the last two dims of ``x`` up to multiples of (r, c)."""
+    pr, pc = (-x.shape[-2]) % r, (-x.shape[-1]) % c
+    if pr or pc:
+        pad = [(0, 0)] * (x.ndim - 2) + [(0, pr), (0, pc)]
+        x = jnp.pad(x, pad)
+    return x
+
+
+def align_group_counts(counts, bm: int):
+    """Per-group row counts -> row-tile-aligned region sizes.
+
+    Every group's region is padded up to a multiple of the row tile
+    ``bm`` and gets AT LEAST one tile (so empty groups still own a
+    defined weight-gradient block).  Accepts numpy or jax arrays — the
+    single formula the sorted-MoE dispatcher and the grouped benchmark
+    layout builder both use.
+    """
+    up = round_up(counts, bm)
+    if isinstance(counts, jax.Array):
+        return jnp.maximum(up, bm)
+    return np.maximum(up, bm)
+
+
+# ============================================================== tile config
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    """(bm, bn, bk) block shape for one 2-D kernel problem.
+
+    Which fields an impl actually reads is declared in its capability
+    metadata (``Capabilities.tile_schema``); e.g. the grouped family
+    reads ``bm`` as BOTH the row tile and the group alignment.
+    """
+
+    bm: int = 256
+    bn: int = 256
+    bk: int = 256
+
+    def clamp(self, m: int, n: int, k: int) -> "TileConfig":
+        """Shrink blocks to MXU-friendly sizes no larger than the
+        (sublane-/lane-rounded) problem so padding stays small."""
+        return TileConfig(
+            bm=min(self.bm, round_up(m, 8)),
+            bn=min(self.bn, round_up(n, 128)),
+            bk=min(self.bk, round_up(k, 128)),
+        )
+
+
+# Per-impl seed defaults (impl registrations install theirs via
+# ``set_default_tiles``); exact-shape overrides live in _TILE_CACHE.
+_TILE_DEFAULTS: dict[str, TileConfig] = {}
+
+# Shape-keyed overrides/autotune results: (impl, m, n, k) -> TileConfig.
+_TILE_CACHE: dict[tuple[str, int, int, int], TileConfig] = {}
+
+
+def set_default_tiles(impl: str, tiles: TileConfig) -> None:
+    """Seed the impl's default block shape (used when no exact-shape
+    cache entry exists)."""
+    _TILE_DEFAULTS[impl] = tiles
+
+
+def tile_for(impl: str, m: int, n: int, k: int) -> TileConfig:
+    """Block shapes for one (impl, problem-shape) point.
+
+    Exact-shape overrides (``set_tiles`` / ``autotune_tiles``) win;
+    otherwise the impl's seeded default, clamped to the problem.
+    """
+    hit = _TILE_CACHE.get((impl, m, n, k))
+    if hit is not None:
+        return hit
+    base = _TILE_DEFAULTS.get(impl, TileConfig())
+    return base.clamp(m, n, k)
+
+
+def set_tiles(impl: str, m: int, n: int, k: int, tiles: TileConfig) -> None:
+    """Pin the tile config for one exact problem shape."""
+    _TILE_CACHE[(impl, m, n, k)] = tiles
+
+
+def clear_tile_cache() -> None:
+    _TILE_CACHE.clear()
+
+
+# Persisted autotune results: serve restarts should not re-tune hot
+# shapes.  The cache file is plain JSON ("impl/m/n/k" -> [bm,bn,bk]);
+# the path comes from the REPRO_TILE_CACHE env var (the --tile-cache
+# launch flags set it) or an explicit argument.
+
+_TILE_CACHE_ENV = "REPRO_TILE_CACHE"
+
+
+def tile_cache_path(path: str | None = None) -> str | None:
+    return path if path is not None else os.environ.get(_TILE_CACHE_ENV)
+
+
+def save_tile_cache(path: str | None = None) -> str | None:
+    """Write the shape-keyed tile cache to JSON; no-op without a path.
+
+    Best-effort merge over any entries already on disk (this process's
+    results win per shape) so concurrent servers sharing one cache file
+    usually keep each other's autotune results — there is no file lock,
+    so simultaneous read-modify-writes can still lose an update; the
+    worst case is a redundant re-tune, never a wrong tile.  Writes are
+    atomic (tmp + rename) so a crash mid-save never corrupts the cache
+    a restarting server is about to load.
+    """
+    path = tile_cache_path(path)
+    if not path:
+        return None
+    payload: dict[str, list[int]] = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, ValueError):
+            payload = {}               # unreadable file: rewrite it
+    payload.update({f"{b}/{m}/{n}/{k}": [t.bm, t.bn, t.bk]
+                    for (b, m, n, k), t in sorted(_TILE_CACHE.items())})
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+    return path
+
+
+def load_tile_cache(path: str | None = None) -> int:
+    """Merge a saved tile cache into the process cache; returns the
+    number of entries loaded (0 when no path / no file).  A corrupt or
+    unreadable file degrades to an empty cache (re-tune) rather than
+    failing server startup — mirroring the save path's tolerance."""
+    path = tile_cache_path(path)
+    if not path or not os.path.exists(path):
+        return 0
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+        items = [(key.rsplit("/", 3), tiles)
+                 for key, tiles in payload.items()]
+    except (OSError, ValueError):
+        return 0
+    for (impl, m, n, k), (bm, bn, bk) in items:
+        _TILE_CACHE[(impl, int(m), int(n), int(k))] = TileConfig(
+            bm=int(bm), bn=int(bn), bk=int(bk))
+    return len(items)
+
+
+def autotune_tiles(impl: str, m: int, n: int, k: int, *,
+                   policy: str = "bf16",
+                   candidates: Sequence[TileConfig] | None = None,
+                   reps: int = 2, interpret: bool | None = None,
+                   persist: bool = True) -> TileConfig:
+    """Time `candidates` on the real impl's dispatch path and cache the
+    winner.
+
+    Wall-clock autotune (compile excluded via one warmup call); the
+    winning config lands in the shape-keyed cache so subsequent
+    dispatches for this exact shape pick it up automatically, and — when
+    a tile-cache file is configured (REPRO_TILE_CACHE / --tile-cache)
+    and ``persist`` is left on — is saved so restarts skip the re-tune.
+    """
+    import time
+
+    from repro.core.ops.gemm import gemm   # local: tiles must stay leaf
+
+    if candidates is None:
+        candidates = [
+            TileConfig(bm, bn, bk).clamp(m, n, k)
+            for bm in (128, 256) for bn in (128, 256) for bk in (128, 256)
+        ]
+        # dedupe post-clamp while preserving order
+        candidates = list(dict.fromkeys(candidates))
+    key = jax.random.PRNGKey(0)
+    a = jax.random.uniform(key, (m, k), jnp.float32, -1, 1)
+    b = jax.random.uniform(jax.random.fold_in(key, 1), (k, n),
+                           jnp.float32, -1, 1)
+    best, best_t = None, float("inf")
+    for cand in candidates:
+        def run(cand=cand):
+            return gemm(a, b, policy=policy, backend=impl, tiles=cand,
+                        interpret=interpret)
+        jax.block_until_ready(run())          # warmup/compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(run())
+        t = (time.perf_counter() - t0) / reps
+        if t < best_t:
+            best, best_t = cand, t
+    assert best is not None
+    set_tiles(impl, m, n, k, best)
+    if persist:
+        save_tile_cache()
+    return best

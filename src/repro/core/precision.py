@@ -116,7 +116,7 @@ class PrecisionPolicy:
     logits: str | None = None     # final vocab projection
     embed: str | None = None      # embedding lookups / patch projections
 
-    # The per-family precision knobs. Subclasses (core.matmul.MatmulPolicy)
+    # The per-family precision knobs. Subclasses (core.ops.ExecutionPolicy)
     # add non-precision fields, so validation iterates this list rather
     # than dataclasses.fields().
     _PRECISION_FIELDS = ("default", "attention", "mlp", "moe", "logits",

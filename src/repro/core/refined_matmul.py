@@ -1,19 +1,19 @@
 """Policy-routed matmuls (paper Eq. 2/3 generalized to any contraction).
 
 ``peinsum`` is the single entry point every model matmul in this
-framework goes through, and it is now a thin router over the backend
-registry in ``repro.core.matmul``: the ``policy`` argument is either a
+framework goes through, and it is a thin router over the op registry in
+``repro.core.ops``: the ``policy`` argument is either a
 precision-policy string (dispatches to the XLA vendor path, the paper's
-cuBLAS analogue — 1..6 chained narrow dots) or a ``MatmulRoute`` /
-``MatmulPolicy.for_(family)`` result that additionally selects a
-backend (``pallas`` tiled kernels, ``pallas_naive``, or anything
-registered) plus a tile config. 2-D-reducible specs lower to the chosen
-backend's GEMM kernels; everything else falls back to XLA dots, so the
-API never fails on spec structure.
+cuBLAS analogue — 1..6 chained narrow dots) or an ``ops.Route`` /
+``ExecutionPolicy.for_(family)`` result whose ``backends`` mapping
+selects a registered GEMM impl (``pallas`` tiled kernels,
+``pallas_naive``, or anything registered) plus a tile config.
+2-D-reducible specs lower to the chosen impl's kernels; everything else
+falls back to XLA dots, so the API never fails on spec structure.
 
 The *fused* single-pass variant of the refinement math lives in
-``repro.kernels.gemm_refined`` (Pallas) and is what the ``pallas``
-backend runs for refined policies; the XLA path remains the reference /
+``repro.kernels.gemm_refined`` (Pallas) and is what the ``pallas`` impl
+runs for refined policies; the XLA path remains the reference /
 distribution-friendly implementation whose HLO flop counts feed the
 roofline analysis.
 """
@@ -22,13 +22,13 @@ from __future__ import annotations
 
 import jax
 
-from repro.core import matmul as mm
+from repro.core import ops
 
 __all__ = ["peinsum", "pmatmul", "refined_matmul"]
 
 
 def peinsum(spec: str, a: jax.Array, b: jax.Array,
-            policy: "str | mm.MatmulRoute" = "bf16") -> jax.Array:
+            policy: "str | ops.Route" = "bf16") -> jax.Array:
     """Two-operand einsum computed under a precision policy / route.
 
     Returns fp32 (the accumulator type). ``spec`` is any two-operand
@@ -36,13 +36,13 @@ def peinsum(spec: str, a: jax.Array, b: jax.Array,
     is issued; otherwise operands are split per the policy and each
     (a_term, b_term) product runs as a bf16-input/fp32-accumulate
     contraction, summed smallest-first in fp32 — fused in one kernel
-    when the selected backend supports the policy natively.
+    when the selected impl supports the policy natively.
     """
-    return mm.routed_einsum(spec, a, b, policy)
+    return ops.routed_einsum(spec, a, b, policy)
 
 
 def pmatmul(a: jax.Array, b: jax.Array,
-            policy: "str | mm.MatmulRoute" = "bf16") -> jax.Array:
+            policy: "str | ops.Route" = "bf16") -> jax.Array:
     """Policy-routed ``a @ b`` (contract last dim of a with first of b)."""
     if a.ndim < 1 or b.ndim != 2:
         raise ValueError(f"pmatmul expects (..., k) x (k, n); got {a.shape} x {b.shape}")
@@ -50,15 +50,15 @@ def pmatmul(a: jax.Array, b: jax.Array,
 
 
 def refined_matmul(a: jax.Array, b: jax.Array,
-                   policy: "str | mm.MatmulRoute" = "refine_ab",
+                   policy: "str | ops.Route" = "refine_ab",
                    *, backend: str | None = None) -> jax.Array:
     """Paper-shaped 2-D GEMM under a policy (benchmarks/tests entry point).
 
-    ``backend`` overrides the route's backend (convenience for sweeping
-    the backend x policy matrix from benchmarks).
+    ``backend`` overrides the route's GEMM impl (convenience for
+    sweeping the backend x policy matrix from benchmarks).
     """
     if a.ndim != 2 or b.ndim != 2:
         raise ValueError("refined_matmul is the 2-D GEMM entry point")
     if backend is not None:
-        return mm.gemm(a, b, policy=policy, backend=backend)
+        return ops.gemm(a, b, policy=policy, backend=backend)
     return peinsum("mk,kn->mn", a, b, policy)

@@ -11,9 +11,9 @@ custom-VJP dx/dw backward). Plus the WKV6 linear-attention kernel (the
 memory fix for the rwkv6 cells, §Perf cell B). Each kernel ships with a
 pure-jnp oracle (ref.py / models.attention.reference_* / the grouped
 ``xla`` registry entry); dispatch goes through the backend registries
-in ``repro.core.matmul`` (ops.py is a thin shim over the GEMM one),
+in ``repro.core.ops`` (ops.py is a deprecated thin shim over the GEMM one),
 which is also how model matmuls reach these kernels when a
-``MatmulPolicy`` selects the ``pallas``/``pallas_naive`` GEMM backends
+``ExecutionPolicy`` selects the ``pallas``/``pallas_naive`` GEMM impls
 or the ``pallas_fused`` attention / ``pallas_grouped`` grouped
 backends. Tests sweep shapes/dtypes in interpret mode.
 """

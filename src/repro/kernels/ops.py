@@ -1,5 +1,5 @@
-"""jit'd dispatch wrappers over the Pallas kernels — now thin shims over
-the backend registry in ``repro.core.matmul``.
+"""DEPRECATED jit'd dispatch wrappers over the Pallas kernels — thin
+shims over the op registry in ``repro.core.ops``.
 
 Backends mirror the paper's three programming interfaces:
 
@@ -11,18 +11,25 @@ The same registry serves the model stack (``peinsum`` routes) and the
 benchmarks, so models and benchmarks measure the identical code path.
 On this CPU container Pallas TPU kernels execute via ``interpret=True``
 (resolved once from the default backend); on TPU they compile through
-Mosaic. Tile shapes come from the shape-keyed cache in core.matmul
-unless the caller pins them; padding to block multiples happens in the
-router so arbitrary shapes work everywhere.
+Mosaic. Tile shapes come from the shape-keyed cache in core.ops unless
+the caller pins them; padding to block multiples happens in the router
+so arbitrary shapes work everywhere.
+
+New code should call ``repro.core.ops.gemm`` directly; ``gemm`` here
+emits a ``DeprecationWarning``.  ``gemm_batched`` (the Fig.-7 packed
+many-small-GEMM path) has no registry family yet and stays the
+canonical entry point.
 """
 
 from __future__ import annotations
 
+import warnings
+
 import jax
 import jax.numpy as jnp
 
-from repro.core import matmul as mm
-from repro.core.matmul import default_interpret
+from repro.core import ops
+from repro.core.ops import default_interpret
 from repro.kernels.batched_gemm import batched_gemm, batched_gemm_naive
 
 __all__ = ["gemm", "gemm_batched", "default_interpret"]
@@ -39,23 +46,25 @@ def gemm(
     bk: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Policy-routed C = A @ B through a selectable backend.
+    """DEPRECATED: use ``repro.core.ops.gemm``.
 
-    Thin wrapper over ``repro.core.matmul.gemm``: tile shapes default to
-    the shape-keyed cache (bm/bn/bk override it — including the
-    ``pallas_naive`` K padding, which historically ignored bk), shapes
-    are padded up to block multiples and the result is sliced back;
-    fp32 out always (the accumulator type).
+    Policy-routed C = A @ B through a selectable backend; tile shapes
+    default to the shape-keyed cache (bm/bn/bk override it — including
+    the ``pallas_naive`` K padding, which historically ignored bk),
+    shapes are padded up to block multiples and the result is sliced
+    back; fp32 out always (the accumulator type).
     """
+    warnings.warn("repro.kernels.ops.gemm is deprecated; use "
+                  "repro.core.ops.gemm", DeprecationWarning, stacklevel=2)
     if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
         raise ValueError(f"gemm expects (m,k) x (k,n); got {a.shape} x {b.shape}")
     tiles = None
     if bm is not None or bn is not None or bk is not None:
-        base = mm.tile_for(backend, a.shape[0], b.shape[1], a.shape[1])
-        tiles = mm.TileConfig(bm=bm or base.bm, bn=bn or base.bn,
-                              bk=bk or base.bk)
-    return mm.gemm(a, b, policy=policy, backend=backend, tiles=tiles,
-                   interpret=interpret)
+        base = ops.tile_for(backend, a.shape[0], b.shape[1], a.shape[1])
+        tiles = ops.TileConfig(bm=bm or base.bm, bn=bn or base.bn,
+                               bk=bk or base.bk)
+    return ops.gemm(a, b, policy=policy, backend=backend, tiles=tiles,
+                    interpret=interpret)
 
 
 def gemm_batched(

@@ -239,7 +239,16 @@ def main() -> None:
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod-only", action="store_true")
     ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--list", action="store_true",
+                    help="print the op-registry family x impl x "
+                         "capability table and exit (what any cell can "
+                         "route to)")
     args = ap.parse_args()
+
+    if args.list:
+        from repro.core import ops
+        print(ops.format_capability_table())
+        return
 
     meshes = [False, True]
     if args.multi_pod_only:

@@ -33,11 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, get_config, get_smoke
-from repro.configs.base import matmul_policy_for
-from repro.core import matmul as mm
-from repro.core.matmul import (available_attention_backends,
-                               available_backends,
-                               available_grouped_backends)
+from repro.configs.base import execution_policy_for
+from repro.core import ops
 from repro.core.precision import PrecisionPolicy
 from repro.models import api
 from repro.runtime import serve_step
@@ -82,8 +79,9 @@ class ServeEngine:
     small per-tick token/finished vectors into Request objects.
 
     ``policy`` may be a plain ``PrecisionPolicy`` (XLA matmuls) or a
-    ``core.matmul.MatmulPolicy`` that additionally routes every model
-    matmul to a registered backend (pallas / pallas_naive / ...).
+    ``core.ops.ExecutionPolicy`` (or legacy ``MatmulPolicy``) whose
+    ``backends`` mapping routes every model matmul to a registered
+    op-registry impl (pallas / pallas_fused / pallas_grouped / ...).
     """
 
     def __init__(self, cfg, *, batch_size: int, max_ctx: int,
@@ -294,21 +292,19 @@ def main() -> None:
     ap.add_argument("--max-ctx", type=int, default=64)
     ap.add_argument("--policy", default="bf16",
                     help="default precision policy for every matmul")
-    ap.add_argument("--backend", default=None,
-                    choices=available_backends(),
-                    help="matmul backend (default: the arch's "
-                         "matmul_backend, usually xla)")
+    ap.add_argument("--backend", action="append", default=None,
+                    metavar="[FAMILY=]IMPL",
+                    help="op-registry routing, repeatable: "
+                         "'family=impl' per kernel family "
+                         f"(families: {', '.join(ops.families())}; "
+                         "see `python -m benchmarks.run --list`). A "
+                         "bare impl name means gemm=IMPL (deprecated). "
+                         "Defaults: the arch's backends mapping")
     ap.add_argument("--attn-backend", default=None,
-                    choices=available_attention_backends(),
-                    help="fused attention kernel family for prefill + "
-                         "per-slot decode (default: the arch's "
-                         "attn_backend, usually xla)")
+                    help="DEPRECATED: alias for --backend "
+                         "attention=IMPL")
     ap.add_argument("--grouped-backend", default=None,
-                    choices=available_grouped_backends(),
-                    help="grouped-GEMM kernel family for MoE expert "
-                         "FFNs (pallas_grouped = sort-based dropless "
-                         "dispatch; keeps decode independent of batch "
-                         "composition without worst-case capacity pads)")
+                    help="DEPRECATED: alias for --backend grouped=IMPL")
     ap.add_argument("--tile-cache", default=None, metavar="PATH",
                     help="JSON tile-autotune cache: loaded at startup "
                          "so restarts skip re-tuning hot shapes, and "
@@ -321,15 +317,20 @@ def main() -> None:
         # override any inherited REPRO_TILE_CACHE, or autotune results
         # would save to a different file than the one just loaded.
         os.environ["REPRO_TILE_CACHE"] = args.tile_cache
-    n = mm.load_tile_cache()          # flag or inherited REPRO_TILE_CACHE
+    n = ops.load_tile_cache()         # flag or inherited REPRO_TILE_CACHE
     if n:
-        print(f"tile cache: {n} shape(s) loaded from {mm.tile_cache_path()}")
+        print(f"tile cache: {n} shape(s) loaded from {ops.tile_cache_path()}")
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
-    policy = matmul_policy_for(cfg, default=args.policy,
-                               backend=args.backend,
-                               attn_backend=args.attn_backend,
-                               grouped_backend=args.grouped_backend)
+    backends = ops.parse_backend_flags(
+        args.backend, attn_backend=args.attn_backend,
+        grouped_backend=args.grouped_backend)
+    # Route-build validation: the engine tick decodes against the KV
+    # cache every step, so demand the attention impl's decode capability
+    # up front instead of failing on the first tick.
+    policy = execution_policy_for(
+        cfg, default=args.policy, backends=backends,
+        require={"attention": ("decode",)})
     eng = ServeEngine(cfg, batch_size=args.batch, max_ctx=args.max_ctx,
                       policy=policy)
     eng.load(api.init_params(jax.random.PRNGKey(0), cfg))

@@ -38,11 +38,8 @@ import jax.numpy as jnp
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import ARCHS, get_config, get_smoke
-from repro.configs.base import matmul_policy_for
-from repro.core import matmul as mm
-from repro.core.matmul import (available_attention_backends,
-                               available_backends,
-                               available_grouped_backends)
+from repro.configs.base import execution_policy_for
+from repro.core import ops
 from repro.core.precision import PrecisionPolicy
 from repro.data.pipeline import DataConfig, SyntheticLMDataset
 from repro.models import api
@@ -154,21 +151,19 @@ def main() -> None:
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--policy", default="bf16")
     ap.add_argument("--logits-policy", default=None)
-    ap.add_argument("--backend", default=None,
-                    choices=available_backends(),
-                    help="matmul backend (default: the arch's "
-                         "matmul_backend, usually xla)")
+    ap.add_argument("--backend", action="append", default=None,
+                    metavar="[FAMILY=]IMPL",
+                    help="op-registry routing, repeatable: "
+                         "'family=impl' per kernel family "
+                         f"(families: {', '.join(ops.families())}; "
+                         "see `python -m benchmarks.run --list`). A "
+                         "bare impl name means gemm=IMPL (deprecated). "
+                         "Defaults: the arch's backends mapping")
     ap.add_argument("--attn-backend", default=None,
-                    choices=available_attention_backends(),
-                    help="fused attention kernel family (default: the "
-                         "arch's attn_backend, usually xla = chunked "
-                         "two-GEMM reference)")
+                    help="DEPRECATED: alias for --backend "
+                         "attention=IMPL")
     ap.add_argument("--grouped-backend", default=None,
-                    choices=available_grouped_backends(),
-                    help="grouped-GEMM kernel family for MoE expert "
-                         "FFNs (default: the arch's grouped_backend; "
-                         "pallas_grouped = sort-based dropless dispatch "
-                         "on the ragged grouped kernel)")
+                    help="DEPRECATED: alias for --backend grouped=IMPL")
     ap.add_argument("--tile-cache", default=None, metavar="PATH",
                     help="JSON tile-autotune cache to load now and "
                          "persist autotune results to (also via the "
@@ -184,16 +179,20 @@ def main() -> None:
         # override any inherited REPRO_TILE_CACHE, or autotune results
         # would save to a different file than the one just loaded.
         os.environ["REPRO_TILE_CACHE"] = args.tile_cache
-    n = mm.load_tile_cache()          # flag or inherited REPRO_TILE_CACHE
+    n = ops.load_tile_cache()         # flag or inherited REPRO_TILE_CACHE
     if n:
-        print(f"tile cache: {n} shape(s) loaded from {mm.tile_cache_path()}")
+        print(f"tile cache: {n} shape(s) loaded from {ops.tile_cache_path()}")
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
-    policy = matmul_policy_for(cfg, default=args.policy,
-                               logits=args.logits_policy,
-                               backend=args.backend,
-                               attn_backend=args.attn_backend,
-                               grouped_backend=args.grouped_backend)
+    backends = ops.parse_backend_flags(
+        args.backend, attn_backend=args.attn_backend,
+        grouped_backend=args.grouped_backend)
+    # Route-build validation: training differentiates through every
+    # routed op, so demand the vjp capability of each family's impl.
+    policy = execution_policy_for(
+        cfg, default=args.policy, logits=args.logits_policy,
+        backends=backends,
+        require={fam: ("vjp",) for fam in ops.families()})
     data_cfg = DataConfig(
         global_batch=args.batch, seq_len=args.seq,
         vocab_size=cfg.vocab_size,

@@ -4,8 +4,10 @@ runtime/, launch/ and tests/ talk to models exclusively through this
 module, so train_step / serve_step / dryrun are arch-agnostic.
 
 ``policy`` is a ``PrecisionPolicy`` (matmuls on XLA dots) or a
-``core.matmul.MatmulPolicy`` (same precision semantics, plus per-family
-backend + tile routing onto the registered Pallas kernels).
+``core.ops.ExecutionPolicy`` (same precision semantics, plus the
+``backends: {family: impl}`` mapping + tile routing onto the
+registered Pallas kernels; the legacy ``MatmulPolicy`` subclass also
+works).
 """
 
 from __future__ import annotations
@@ -16,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.matmul import MatmulPolicy
+from repro.core.ops import ExecutionPolicy
 from repro.core.precision import PrecisionPolicy
 from repro.models import encdec as E
 from repro.models import transformer as T
@@ -25,7 +27,7 @@ from repro.models import vlm as V
 __all__ = ["init_params", "init_cache", "loss_fn", "prefill", "decode",
            "context_len"]
 
-Policy = PrecisionPolicy | MatmulPolicy
+Policy = PrecisionPolicy | ExecutionPolicy
 
 
 def init_params(key, cfg: ModelConfig) -> dict:

@@ -2,16 +2,16 @@
 backend-routed fused evaluation.
 
 The score/softmax/value pipeline dispatches through the ATTENTION
-kernel family of the ``core.matmul`` registry
-(``register_attention_backend``): the ``xla`` reference backend is the
-chunked two-GEMM path implemented here (``reference_forward`` /
-``reference_decode`` — score and value contractions via ``peinsum``,
-online softmax in jnp between them), while ``pallas_fused`` runs the
-flash-attention Pallas kernels (``kernels.attention_fused``) whose
-score tile never leaves VMEM.  Either way the contractions honor the
-precision-policy ladder (``policy`` argument = policy string or
-``core.matmul.MatmulRoute``), so the paper's refinement ladder applies
-to the attention GEMMs exactly as to the projections.
+kernel family of the op registry (``repro.core.ops``): the ``xla``
+reference impl is the chunked two-GEMM path implemented here
+(``reference_forward`` / ``reference_decode`` — score and value
+contractions via ``peinsum``, online softmax in jnp between them),
+while ``pallas_fused`` runs the flash-attention Pallas kernels
+(``kernels.attention_fused``) whose score tile never leaves VMEM.
+Either way the contractions honor the precision-policy ladder
+(``policy`` argument = policy string or ``core.ops.Route``), so the
+paper's refinement ladder applies to the attention GEMMs exactly as to
+the projections.
 
 Sliding-window ("local") layers keep a RING-BUFFER cache of `window`
 entries: slot ``t % window`` holds token ``t`` (RoPE applied at write
@@ -27,8 +27,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import matmul as mm
-from repro.core.matmul import MatmulRoute
+from repro.core import ops
+from repro.core.ops import Route
 from repro.core.refined_matmul import peinsum
 from repro.models import layers as L
 
@@ -196,7 +196,7 @@ def attention(
     num_heads: int,
     num_kv_heads: int,
     head_dim: int,
-    policy: "str | MatmulRoute",
+    policy: "str | Route",
     rope_theta: float | None = 10_000.0,   # None -> no RoPE (whisper)
     window: int | None = None,             # sliding window (local layers)
     softcap: float | None = None,
@@ -226,7 +226,7 @@ def attention(
     if cross_kv is not None:
         # Cross-attention: no RoPE, no causal mask, static cache.
         kc, vc = cross_kv.k.astype(dtype), cross_kv.v.astype(dtype)
-        out = mm.attention_forward(
+        out = ops.attention_forward(
             q, kc, vc, causal=False, window=None, softcap=softcap,
             policy=policy, kv_chunk=kv_chunk)
     elif mode in ("train", "prefill", "encode"):
@@ -239,7 +239,7 @@ def attention(
             k = apply_rope(k.astype(dtype), sin, cos)
         k, v = k.astype(dtype), v.astype(dtype)
 
-        out = mm.attention_forward(
+        out = ops.attention_forward(
             q, k, v, causal=causal, window=window, softcap=softcap,
             policy=policy, kv_chunk=kv_chunk)
 
@@ -274,7 +274,7 @@ def attention(
         cv = cache.v.at[row, slot].set(v[:, 0].astype(cache.v.dtype))
         new_cache = AttnCache(k=ck, v=cv)
 
-        out = mm.attention_decode(
+        out = ops.attention_decode(
             q, ck.astype(dtype), cv.astype(dtype), pos, window=window,
             softcap=softcap, policy=policy)
     else:

@@ -1,11 +1,11 @@
 """Common neural building blocks (pure-JAX, dict-param style).
 
 All matmuls route through ``repro.core.refined_matmul.peinsum`` so the
-paper's precision policy — and, via ``core.matmul.MatmulPolicy`` routes,
-the matmul *backend* (XLA dots or the Pallas kernels) — applies
+paper's precision policy — and, via ``core.ops.ExecutionPolicy``
+routes, the matmul *impl* (XLA dots or the Pallas kernels) — applies
 uniformly across every architecture. The ``policy`` argument below is
 whatever ``policy.for_(family)`` returned: a policy string (XLA path)
-or a ``MatmulRoute`` (backend-routed path).
+or a ``core.ops.Route`` (registry-routed path).
 Params are plain nested dicts of jnp arrays; every ``init_*`` accepts a
 ``stack`` prefix so per-layer params can be created pre-stacked for
 ``lax.scan`` execution over layer stacks.
@@ -16,10 +16,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.matmul import MatmulRoute
+from repro.core.ops import Route
 from repro.core.refined_matmul import peinsum
 
-Policy = str | MatmulRoute
+Policy = str | Route
 
 __all__ = [
     "init_linear", "linear",

@@ -7,16 +7,17 @@ paper's 'use CUDA cores for what Tensor Cores are bad at' point) picks
 top-k experts per token; what happens next depends on the GROUPED
 kernel-family backend carried by the matmul route:
 
-``grouped="xla"`` (default) — capacity-padded dispatch, the reference:
+``grouped`` = the family's reference impl (default) — capacity-padded
+  dispatch:
   position-in-expert via a (T*k, E) cumsum, a materialized (E, C, D)
   one-slot-per-capacity gather, tokens over capacity DROPPED (Switch
   semantics, ``capacity_factor``), expert GEMMs as the vmap-batched
   ``ecd,edf->ecf`` policy einsum, weighted scatter-add combine.
 
-``grouped="pallas_grouped"`` (or any registered backend) — sort-based
+``grouped="pallas_grouped"`` (or any registered impl) — sort-based
   DROPLESS dispatch: argsort tokens by expert, per-expert run lengths
   via bincount, cumsum group offsets with each run padded only to the
-  row-TILE multiple (``core.matmul.grouped_tiles(...).bm``) instead of
+  row-TILE multiple (``core.ops.grouped_tiles(...).bm``) instead of
   to worst-case capacity, then three ``grouped_matmul`` calls (wi / wg
   / wo) through the grouped kernel registry — one Pallas kernel walking
   the sorted token dim with scalar-prefetched offsets selecting each
@@ -39,8 +40,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core import matmul as mm
-from repro.core.matmul import MatmulRoute
+from repro.core import ops
+from repro.core.ops import Route
 from repro.core.refined_matmul import peinsum
 from repro.models import layers as L
 
@@ -122,13 +123,9 @@ def _capacity_ffn(p: dict, xf: jax.Array, gate_vals, expert_idx, *,
 
 # ======================================================= sorted dispatch
 
-def _round_up(x, mult: int):
-    return ((x + mult - 1) // mult) * mult
-
-
 def _sorted_ffn(p: dict, xf: jax.Array, gate_vals, expert_idx, *,
                 num_experts: int, top_k: int, mlp_kind: str,
-                route: MatmulRoute, dtype) -> jax.Array:
+                route: Route, dtype) -> jax.Array:
     """Dropless sort-based dispatch onto the grouped-GEMM registry.
 
     Assignments are argsorted by expert into a flat buffer whose
@@ -141,19 +138,19 @@ def _sorted_ffn(p: dict, xf: jax.Array, gate_vals, expert_idx, *,
     tk = t * top_k
     d_ff = p["wi"]["w"].shape[-1]
     # One tile config for dispatcher AND kernel: bm is the group align.
-    tiles = mm.grouped_tiles(route, tk, d_ff, d)
+    tiles = ops.grouped_tiles(route, tk, d_ff, d)
     route = dataclasses.replace(route, tiles=tiles)
     bm = tiles.bm
 
     flat_expert = expert_idx.reshape(-1)                          # (T*k,)
     order = jnp.argsort(flat_expert)                              # stable
     counts = jnp.bincount(flat_expert, length=num_experts)
-    aligned = jnp.maximum(_round_up(counts, bm), bm)
+    aligned = ops.align_group_counts(counts, bm)
     offsets = jnp.concatenate(
         [jnp.zeros((1,), jnp.int32),
          jnp.cumsum(aligned).astype(jnp.int32)])                  # (E+1,)
     # Static buffer bound: sum(aligned) <= round_up(T*k, bm) + E*bm.
-    n_buf = _round_up(tk, bm) + num_experts * bm
+    n_buf = ops.round_up(tk, bm) + num_experts * bm
 
     # Destination row of each sorted assignment: its group's aligned
     # start plus its rank within the group (sorted order is by expert,
@@ -166,12 +163,12 @@ def _sorted_ffn(p: dict, xf: jax.Array, gate_vals, expert_idx, *,
     tok = (order // top_k).astype(jnp.int32)                      # (T*k,)
 
     xs = jnp.zeros((n_buf, d), dtype).at[dest].set(xf[tok].astype(dtype))
-    h = mm.grouped_matmul(xs, p["wi"]["w"], offsets, policy=route)
-    g = (mm.grouped_matmul(xs, p["wg"]["w"], offsets, policy=route)
+    h = ops.grouped_matmul(xs, p["wi"]["w"], offsets, policy=route)
+    g = (ops.grouped_matmul(xs, p["wg"]["w"], offsets, policy=route)
          if mlp_kind == "swiglu" else None)
     h = _activate(h, g, mlp_kind)
-    ys = mm.grouped_matmul(h.astype(dtype), p["wo"]["w"], offsets,
-                           policy=route)                          # (N, D)
+    ys = ops.grouped_matmul(h.astype(dtype), p["wo"]["w"], offsets,
+                            policy=route)                         # (N, D)
 
     gates = gate_vals.reshape(-1)[order]                          # (T*k,)
     out = jnp.zeros((t, d), jnp.float32)
@@ -181,7 +178,7 @@ def _sorted_ffn(p: dict, xf: jax.Array, gate_vals, expert_idx, *,
 # ================================================================== FFN
 
 def moe_ffn(p: dict, x: jax.Array, *, num_experts: int, top_k: int,
-            capacity_factor: float, mlp_kind: str, policy: "str | MatmulRoute",
+            capacity_factor: float, mlp_kind: str, policy: "str | Route",
             router_policy: str = "f32", dropless: bool = False,
             ) -> tuple[jax.Array, jax.Array]:
     """x: (B, S, D) -> (out (B, S, D), aux_loss scalar).
@@ -190,9 +187,10 @@ def moe_ffn(p: dict, x: jax.Array, *, num_experts: int, top_k: int,
     practice: routing decisions are precision-sensitive, cheap, and on
     the VPU anyway).
 
-    Dispatch follows the route's grouped backend (module docstring):
-    the ``xla`` reference keeps capacity-padded Switch semantics, any
-    other registered grouped backend runs the sort-based dropless path.
+    Dispatch follows the route's grouped-family impl (module
+    docstring): the reference impl keeps capacity-padded Switch
+    semantics, any other registered impl runs the sort-based dropless
+    path.
     ``dropless=True`` lifts the reference path's capacity to the worst
     case (t * top_k) — used on the DECODE path, where capacity-based
     dropping would make generation depend on batch composition.  The
@@ -216,8 +214,8 @@ def moe_ffn(p: dict, x: jax.Array, *, num_experts: int, top_k: int,
     density_proxy = jnp.mean(probs, axis=0)
     aux_loss = num_experts * jnp.sum(density * density_proxy)
 
-    route = mm.as_route(policy)
-    if route.grouped == "xla":
+    route = ops.as_route(policy)
+    if route.uses_reference("grouped"):
         if dropless:
             capacity = t * top_k        # worst case: every slot one expert
         else:

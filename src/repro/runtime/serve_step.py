@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.matmul import MatmulPolicy
+from repro.core.ops import ExecutionPolicy
 from repro.core.precision import PrecisionPolicy
 from repro.models import api
 from repro.models.attention import AttnCache
@@ -24,16 +24,18 @@ from repro.models.attention import AttnCache
 __all__ = ["make_prefill", "make_decode", "make_engine_tick", "pad_cache",
            "abstract_cache", "abstract_params"]
 
-# Either policy flavour routes every model matmul below (MatmulPolicy
-# additionally selects the backend each family's contractions run on,
-# its attn_backend field the fused attention kernel the prefill and
-# per-slot decode paths use — "pallas_fused" reads the ring/linear KV
-# cache at the engine's per-row position vector in-kernel — and its
-# grouped_backend field the MoE expert-FFN dispatch: "pallas_grouped"
-# replaces the capacity-padded (E, C, D) gather with sort-based
-# dropless grouped GEMMs, keeping each slot's decode independent of
-# which other requests share the batch).
-Policy = PrecisionPolicy | MatmulPolicy
+# Either policy flavour routes every model matmul below (ExecutionPolicy
+# — or its legacy MatmulPolicy subclass — additionally selects the
+# registered impl each op family's contractions run on via its
+# ``backends`` mapping: ``{"attention": "pallas_fused"}`` runs prefill
+# and per-slot decode on the fused flash-attention kernels, reading the
+# ring/linear KV cache at the engine's per-row position vector
+# in-kernel — decode demands the impl's ``decode`` capability at
+# route-build time — and ``{"grouped": "pallas_grouped"}`` replaces the
+# capacity-padded (E, C, D) MoE gather with sort-based dropless grouped
+# GEMMs, keeping each slot's decode independent of which other requests
+# share the batch).
+Policy = PrecisionPolicy | ExecutionPolicy
 
 
 def _attn_capacity(kind: str, cfg: ModelConfig, s_ctx: int) -> int | None:

@@ -8,16 +8,19 @@ per-layer remat inside the model stack — together these bound
 activation memory for the 340B-class cells (see EXPERIMENTS.md §Perf).
 
 ``policy`` is a ``PrecisionPolicy`` (all matmuls on XLA dots) or a
-``core.matmul.MatmulPolicy`` (per-family backend routing: the same
-train step runs on the Pallas kernels, gradients included — the routed
+``core.ops.ExecutionPolicy`` / legacy ``MatmulPolicy`` (op-registry
+routing via the ``backends: {family: impl}`` mapping: the same train
+step runs on the Pallas kernels, gradients included — the routed
 einsum's custom VJP keeps the backward contractions on the selected
-backend, ``attn_backend="pallas_fused"`` additionally runs every
-attention sublayer forward AND backward on the fused flash-attention
-kernels of ``kernels.attention_fused``, and
-``grouped_backend="pallas_grouped"`` runs every MoE expert FFN on the
-sort-based dropless grouped kernels of ``kernels.gemm_grouped`` — the
-grouped custom VJP computes dx against transposed expert weights and dw
-by per-group accumulation, so MoE training stays fused end to end).
+impl, ``backends={"attention": "pallas_fused"}`` additionally runs
+every attention sublayer forward AND backward on the fused
+flash-attention kernels of ``kernels.attention_fused``, and
+``backends={"grouped": "pallas_grouped"}`` runs every MoE expert FFN on
+the sort-based dropless grouped kernels of ``kernels.gemm_grouped`` —
+the grouped custom VJP computes dx against transposed expert weights
+and dw by per-group accumulation, so MoE training stays fused end to
+end).  Every built-in impl declares the ``vjp`` capability; the launch
+driver demands it at route-build time.
 """
 
 from __future__ import annotations
@@ -28,16 +31,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.matmul import MatmulPolicy
+from repro.core.ops import ExecutionPolicy
 from repro.core.precision import PrecisionPolicy
 from repro.models import api
 from repro.optim import adamw
 
 __all__ = ["make_train_step", "make_loss_fn"]
 
-# Either policy flavour is accepted everywhere below (MatmulPolicy is a
-# PrecisionPolicy that additionally carries backend + tile routing).
-Policy = PrecisionPolicy | MatmulPolicy
+# Either policy flavour is accepted everywhere below (ExecutionPolicy —
+# and its legacy MatmulPolicy subclass — is a PrecisionPolicy that
+# additionally carries the backends mapping + tile routing).
+Policy = PrecisionPolicy | ExecutionPolicy
 
 
 def make_loss_fn(cfg: ModelConfig, policy: Policy, *,

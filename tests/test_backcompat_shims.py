@@ -1,0 +1,243 @@
+"""Locks the deprecated back-compat surface over the op registry.
+
+The PR that introduced ``repro.core.ops`` kept every pre-registry name
+working as a thin wrapper: the ``core.matmul`` register/get/available
+trios, ``MatmulRoute``/``MatmulPolicy`` (and their per-family fields),
+``configs.base.matmul_policy_for``, ``kernels/ops.py`` and the old
+``--backend IMPL`` / ``--attn-backend`` / ``--grouped-backend`` CLI
+spellings — each emitting ``DeprecationWarning`` where the replacement
+is the uniform ``backends: {family: impl}`` mapping.  This suite is the
+contract that the shims stay wired to the real registry.
+"""
+
+import dataclasses
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import matmul as mm
+from repro.core import ops
+from repro.configs.base import matmul_policy_for
+from tests.test_matmul_backends import _tiny_config
+
+
+def _rand(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(-1.0, 1.0, shape).astype(np.float32))
+
+
+# ================================================== legacy register trio
+
+class TestLegacyRegisterShims:
+    def test_register_backend_warns_and_routes(self):
+        def doubling(a, b, *, policy, tiles, interpret):
+            return 2.0 * jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+        with pytest.deprecated_call():
+            mm.register_backend("shim_double", doubling,
+                                fused_policies=("bf16", "f32"),
+                                pads_to_tiles=False)
+        try:
+            # lands in the REAL registry, with shimmed capabilities
+            impl = ops.get_impl("gemm", "shim_double")
+            assert impl.capabilities.has("vjp")
+            assert impl.capabilities.fused_policies == {"bf16", "f32"}
+            a, b = _rand((8, 8), 1), _rand((8, 8), 2)
+            out = mm.gemm(a, b, policy="f32", backend="shim_double")
+            np.testing.assert_allclose(
+                np.asarray(out), 2 * (np.asarray(a) @ np.asarray(b)),
+                rtol=1e-5, atol=1e-5)
+        finally:
+            mm._BACKENDS.pop("shim_double", None)
+        assert "shim_double" not in ops.available_impls("gemm")
+
+    def test_register_attention_backend_warns_and_routes(self):
+        fwd = lambda q, k, v, **kw: jnp.zeros(q.shape, jnp.float32)
+        dec = lambda q, ck, cv, pos, **kw: jnp.zeros(q.shape, jnp.float32)
+        with pytest.deprecated_call():
+            mm.register_attention_backend("shim_zero", forward=fwd,
+                                          decode=dec)
+        try:
+            q = _rand((1, 4, 1, 2, 8), 3)
+            out = mm.attention_forward(
+                q, _rand((1, 4, 1, 8), 4), _rand((1, 4, 1, 8), 5),
+                policy=mm.MatmulRoute(attn="shim_zero"))
+            assert float(jnp.abs(out).max()) == 0.0
+            # the legacy shim assumes the full feature surface
+            assert ops.get_impl("attention",
+                                "shim_zero").capabilities.has("decode")
+        finally:
+            mm._ATTN_BACKENDS.pop("shim_zero", None)
+
+    def test_register_grouped_backend_warns_and_routes(self):
+        def tripling(x, w, group_offsets, *, route):
+            return 3.0 * mm._xla_grouped_matmul(x, w, group_offsets,
+                                                route=route)
+
+        with pytest.deprecated_call():
+            mm.register_grouped_backend("shim_triple", tripling)
+        try:
+            x = _rand((8, 4), 6)
+            w = _rand((2, 4, 4), 7)
+            offs = jnp.asarray([0, 8, 8], jnp.int32)
+            route = mm.MatmulRoute(precision="f32", grouped="shim_triple")
+            out = mm.grouped_matmul(x, w, offs, policy=route)
+            ref = np.asarray(x, np.float64) @ np.asarray(w, np.float64)[0]
+            np.testing.assert_allclose(np.asarray(out, np.float64),
+                                       3.0 * ref, rtol=1e-5, atol=1e-5)
+        finally:
+            mm._GROUPED_BACKENDS.pop("shim_triple", None)
+
+    def test_registry_dict_views_are_live(self):
+        """mm._BACKENDS/_ATTN_BACKENDS/_GROUPED_BACKENDS alias the real
+        per-family registries (pop cleans up for real)."""
+        assert mm._BACKENDS is ops.registry._IMPLS["gemm"]
+        assert mm._ATTN_BACKENDS is ops.registry._IMPLS["attention"]
+        assert mm._GROUPED_BACKENDS is ops.registry._IMPLS["grouped"]
+
+    def test_legacy_error_wordings_preserved(self):
+        with pytest.raises(ValueError, match="unknown backend"):
+            mm.get_backend("cutlass")
+        with pytest.raises(ValueError, match="unknown attention backend"):
+            mm.get_attention_backend("flashinfer")
+        with pytest.raises(ValueError, match="unknown grouped backend"):
+            mm.get_grouped_backend("megablocks")
+
+    def test_available_trios_delegate_sorted(self):
+        assert mm.available_backends() == ops.available_impls("gemm")
+        assert mm.available_attention_backends() == \
+            ops.available_impls("attention")
+        assert mm.available_grouped_backends() == \
+            ops.available_impls("grouped")
+
+
+# ================================================= legacy route / policy
+
+class TestLegacyRouteAndPolicy:
+    def test_matmul_route_is_an_ops_route(self):
+        r = mm.MatmulRoute(precision="bf16", backend="pallas",
+                           attn="pallas_fused", grouped="pallas_grouped")
+        assert isinstance(r, ops.Route)
+        assert r.impl("gemm") == "pallas"
+        assert r.impl("attention") == "pallas_fused"
+        assert r.impl("grouped") == "pallas_grouped"
+        assert dict(r.backends) == {"gemm": "pallas",
+                                    "attention": "pallas_fused",
+                                    "grouped": "pallas_grouped"}
+
+    def test_matmul_route_replace_keeps_fields_authoritative(self):
+        r = mm.MatmulRoute(backend="pallas")
+        r2 = dataclasses.replace(r, grouped="pallas_grouped")
+        assert r2.backend == "pallas" and r2.grouped == "pallas_grouped"
+        assert r2.impl("grouped") == "pallas_grouped"
+
+    def test_matmul_route_explicit_reset_to_reference_wins(self):
+        """Setting a legacy field back to 'xla' is an explicit choice
+        (e.g. forcing the reference path for a parity check) and must
+        beat a stale mapping entry — None is the unset sentinel."""
+        r = mm.MatmulRoute(grouped="pallas_grouped")
+        r2 = dataclasses.replace(r, grouped="xla")
+        assert r2.grouped == "xla" and r2.impl("grouped") == "xla"
+        r3 = mm.MatmulRoute(backend="pallas").with_impl("gemm", "xla")
+        assert r3.backend == "xla" and r3.impl("gemm") == "xla"
+        a, b = _rand((8, 8), 20), _rand((8, 8), 21)
+        out = mm.gemm(a, b, policy=mm.MatmulRoute(backend="pallas"),
+                      backend="xla")          # override forces reference
+        want = mm.gemm(a, b, policy="bf16", backend="xla")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want))
+
+    def test_matmul_policy_route_threads_other_families(self):
+        """A fourth-family mapping entry survives MatmulPolicy.for_'s
+        legacy MatmulRoute (half-migrated downstream registration)."""
+        fn = lambda x, **kw: x
+        ops.register_family(ops.OpSpec(family="scan", contract="t",
+                                       reference="ref"))
+        ops.register_impl("scan", "ref", features=("vjp",))(fn)
+        ops.register_impl("scan", "pallas_scan", features=("vjp",))(fn)
+        try:
+            with pytest.deprecated_call():
+                p = mm.MatmulPolicy(default="bf16",
+                                    backends={"scan": "pallas_scan"})
+            assert p.for_("mlp").impl("scan") == "pallas_scan"
+        finally:
+            ops.registry._IMPLS.pop("scan", None)
+            ops.registry._FAMILIES.pop("scan", None)
+
+    def test_matmul_route_honors_explicit_backends_mapping(self):
+        """A half-migrated caller passing the NEW mapping to the legacy
+        class must be routed, not silently reset to the defaults."""
+        r = mm.MatmulRoute(backends={"gemm": "pallas"})
+        assert r.impl("gemm") == "pallas"
+        assert r.backend == "pallas"       # field synced to the mapping
+        with pytest.deprecated_call():
+            p = mm.MatmulPolicy(default="bf16",
+                                backends={"attention": "pallas_fused"})
+        assert p.for_("mlp").attn == "pallas_fused"
+        assert p.attn_backend == "pallas_fused"
+
+    def test_matmul_policy_warns_and_merges_fields(self):
+        with pytest.deprecated_call():
+            p = mm.MatmulPolicy(default="bf16", backend="pallas",
+                                mlp_backend="xla",
+                                attn_backend="pallas_fused",
+                                grouped_backend="pallas_grouped")
+        assert isinstance(p, ops.ExecutionPolicy)
+        assert dict(p.backends)["gemm"] == "pallas"
+        assert dict(p.backends)["gemm@mlp"] == "xla"
+        r = p.for_("mlp")
+        assert isinstance(r, mm.MatmulRoute)
+        assert r.backend == "xla" and r.attn == "pallas_fused" \
+            and r.grouped == "pallas_grouped"
+        assert p.for_("attention").backend == "pallas"
+
+    def test_matmul_policy_validates_against_registry(self):
+        """The legacy surface still goes through route-build capability
+        validation (unknown impls fail at construction)."""
+        with pytest.raises(ValueError, match="unknown attention backend"):
+            mm.MatmulPolicy(default="bf16", attn_backend="flashinfer")
+
+    def test_matmul_policy_for_warns_and_uses_arch_defaults(self):
+        cfg = _tiny_config()
+        with pytest.deprecated_call():
+            p = matmul_policy_for(cfg, attn_backend="pallas_fused")
+        assert p.backend == cfg.matmul_backend
+        assert p.for_("attention").attn == "pallas_fused"
+
+
+# ==================================================== kernels/ops + CLI
+
+class TestKernelsOpsAndFlags:
+    def test_kernels_ops_gemm_warns_and_works(self):
+        from repro.kernels import ops as kops
+        a, b = _rand((16, 20), 8), _rand((20, 12), 9)
+        with pytest.deprecated_call():
+            out = kops.gemm(a, b, policy="bf16", backend="pallas",
+                            interpret=True)
+        ref = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+        assert np.abs(np.asarray(out, np.float64) - ref).max() < 2e-1
+
+    def test_backend_flag_family_form(self):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")       # no deprecation expected
+            got = ops.parse_backend_flags(
+                ["gemm=pallas", "attention=pallas_fused"])
+        assert got == {"gemm": "pallas", "attention": "pallas_fused"}
+
+    def test_bare_backend_flag_deprecated_means_gemm(self):
+        with pytest.deprecated_call():
+            got = ops.parse_backend_flags(["pallas"])
+        assert got == {"gemm": "pallas"}
+
+    def test_legacy_attn_grouped_flags_deprecated(self):
+        with pytest.deprecated_call():
+            got = ops.parse_backend_flags(
+                None, attn_backend="pallas_fused",
+                grouped_backend="pallas_grouped")
+        assert got == {"attention": "pallas_fused",
+                       "grouped": "pallas_grouped"}
+
+    def test_flag_validation_names_registry(self):
+        with pytest.raises(ValueError, match="unknown attention backend"):
+            ops.parse_backend_flags(["attention=flashinfer"])
