@@ -81,6 +81,9 @@ def write_bench_json(matrix: dict) -> str:
         "schema": "bench_gemm/v1",
         "n": matrix["n"],
         "interpret": matrix["interpret"],
+        # Mesh attribution (additive): "none" = single-device rows, else
+        # the MeshSpec grammar string the sweep routed through.
+        "mesh": matrix.get("mesh", "none"),
         "points": [
             {"backend": v["backend"], "policy": v["policy"],
              "tflops": v["tflops"], "max_abs_error": v["max_abs_error"],
@@ -99,6 +102,7 @@ def write_attention_json(matrix: dict) -> str:
         "schema": "bench_attention/v1",
         "s": matrix["s"],
         "interpret": matrix["interpret"],
+        "mesh": matrix.get("mesh", "none"),
         "points": [
             {"backend": v["backend"], "policy": v["policy"],
              "mask": v["mask"], "tflops": v["tflops"],
@@ -119,6 +123,7 @@ def write_moe_json(matrix: dict) -> str:
         "t": matrix["t"],
         "e": matrix["e"],
         "interpret": matrix["interpret"],
+        "mesh": matrix.get("mesh", "none"),
         "points": [
             {"backend": v["backend"], "policy": v["policy"],
              "profile": v["profile"], "tflops": v["tflops"],

@@ -138,17 +138,19 @@ def execution_policy_for(cfg: ModelConfig, *, default: str = "bf16",
                          backends=None,
                          tiles: TileConfig | None = None,
                          fallback: bool = False,
-                         require=None) -> ExecutionPolicy:
+                         require=None, mesh=None) -> ExecutionPolicy:
     """The launch-script policy constructor: precision knobs from CLI
     flags, the op-family ``backends`` mapping from the repeatable
     ``--backend family=impl`` CLI overrides layered over the arch's
     defaults — validated against capability metadata at build time
-    (``require`` adds feature demands, e.g. serve's attention decode)."""
+    (``require`` adds feature demands, e.g. serve's attention decode;
+    a non-identity ``mesh`` additionally demands Partitioning of every
+    routed impl, so ``--mesh`` composes with ``--backend``)."""
     merged = _arch_backends(cfg)
     merged.update(dict(normalize_backends(backends or ())))
     return ExecutionPolicy(default=default, logits=logits, backends=merged,
                            tiles=tiles, fallback=fallback,
-                           require=require or ())
+                           require=require or (), mesh=mesh)
 
 
 def matmul_policy_for(cfg: ModelConfig, *, default: str = "bf16",

@@ -57,6 +57,7 @@ from repro.core.ops.registry import (
     KernelImpl,
     LADDER_BOUNDS,
     OpSpec,
+    Partitioning,
     available_impls,
     capability_markdown,
     capability_rows,
@@ -70,12 +71,14 @@ from repro.core.ops.registry import (
 )
 from repro.core.ops.route import (
     ExecutionPolicy,
+    MeshSpec,
     Route,
     as_route,
     normalize_backends,
     parse_backend_flags,
     validate_backends,
 )
+from repro.core.ops.shard import active_mesh, unsharded_route
 from repro.core.ops.tiles import (
     TileConfig,
     align_group_counts,
@@ -104,12 +107,14 @@ from repro.core.ops.grouped import grouped_matmul, grouped_tiles
 __all__ = [
     # registry
     "Capabilities", "KernelImpl", "LADDER_BOUNDS", "OpSpec",
+    "Partitioning",
     "available_impls", "capability_markdown", "capability_rows",
     "families", "format_capability_table", "get_family", "get_impl",
     "reference_impl", "register_family", "register_impl", "registry",
-    # routing
-    "ExecutionPolicy", "Route", "as_route", "normalize_backends",
-    "parse_backend_flags", "validate_backends",
+    # routing / mesh
+    "ExecutionPolicy", "MeshSpec", "Route", "active_mesh", "as_route",
+    "normalize_backends", "parse_backend_flags", "unsharded_route",
+    "validate_backends",
     # tiles
     "TileConfig", "align_group_counts", "autotune_tiles",
     "clear_tile_cache", "default_interpret", "load_tile_cache", "pad2",

@@ -31,9 +31,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.ops import registry
-from repro.core.ops.registry import (LADDER_BOUNDS, OpSpec, register_family,
-                                     register_impl)
+from repro.core.ops import registry, shard
+from repro.core.ops.registry import (LADDER_BOUNDS, OpSpec, Partitioning,
+                                     register_family, register_impl)
 from repro.core.ops.route import Route, as_route
 
 __all__ = ["AttentionOps", "attention_forward", "attention_decode"]
@@ -136,13 +136,33 @@ def _fused_decode(q, k_cache, v_cache, pos, *, window, softcap, route):
         precision=route.precision, interpret=route.resolved_interpret())
 
 
+# Batch shards over dp and KV heads over tp for any impl (independent
+# slices — exact).  Only the reference impl additionally sequence-shards
+# (sp): its chunked online-softmax walk accepts an offset mask, so KV
+# all-gather + local q rows reproduces the single-device arithmetic.
+_ATTN_PARTITIONING_SP = Partitioning(
+    specs=(("q", ("dp", "sp", "tp", None, None)),
+           ("k", ("dp", None, "tp", None)),
+           ("v", ("dp", None, "tp", None)),
+           ("out", ("dp", "sp", "tp", None, None))),
+    collectives=("all_gather_kv:sp",),
+)
+_ATTN_PARTITIONING = Partitioning(
+    specs=(("q", ("dp", None, "tp", None, None)),
+           ("k", ("dp", None, "tp", None)),
+           ("v", ("dp", None, "tp", None)),
+           ("out", ("dp", None, "tp", None, None))),
+)
+
 register_impl("attention", "xla", fused_policies=(),
-              features=FULL_FEATURES)(
+              features=FULL_FEATURES,
+              partitioning=_ATTN_PARTITIONING_SP)(
     AttentionOps(forward=_xla_forward, decode=_xla_decode))
 
 register_impl("attention", "pallas_fused",
               fused_policies=registry.ALL_POLICIES,
-              features=FULL_FEATURES)(
+              features=FULL_FEATURES,
+              partitioning=_ATTN_PARTITIONING)(
     AttentionOps(forward=_fused_forward, decode=_fused_decode))
 
 
@@ -160,8 +180,14 @@ def attention_forward(q: jax.Array, k: jax.Array, v: jax.Array, *,
     """
     route = as_route(policy)
     impl = registry.get_impl("attention", route.impl("attention"))
+    if (shard.active_mesh(route.mesh) is not None
+            and impl.capabilities.partitioning is not None):
+        return shard.sharded_attention_forward(
+            impl, q, k, v, causal=causal, window=window, softcap=softcap,
+            route=route, kv_chunk=kv_chunk)
     return impl.fn.forward(q, k, v, causal=causal, window=window,
-                           softcap=softcap, route=route, kv_chunk=kv_chunk)
+                           softcap=softcap, route=shard.unsharded_route(route),
+                           kv_chunk=kv_chunk)
 
 
 def attention_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
@@ -182,5 +208,10 @@ def attention_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
             f"'decode' (features: {sorted(impl.capabilities.features)}); "
             f"route decode to a decode-capable impl, e.g. "
             f"{registry.reference_impl('attention')!r}")
+    if (shard.active_mesh(route.mesh) is not None
+            and impl.capabilities.partitioning is not None):
+        return shard.sharded_attention_decode(
+            impl, q, k_cache, v_cache, pos, window=window, softcap=softcap,
+            route=route)
     return impl.fn.decode(q, k_cache, v_cache, pos, window=window,
-                          softcap=softcap, route=route)
+                          softcap=softcap, route=shard.unsharded_route(route))

@@ -38,9 +38,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import precision as prec
-from repro.core.ops import registry
-from repro.core.ops.registry import (LADDER_BOUNDS, OpSpec, register_family,
-                                     register_impl)
+from repro.core.ops import registry, shard
+from repro.core.ops.registry import (LADDER_BOUNDS, OpSpec, Partitioning,
+                                     register_family, register_impl)
 from repro.core.ops.route import Route, as_route
 from repro.core.ops.tiles import TileConfig, pad2, tile_for
 
@@ -110,8 +110,18 @@ def xla_policy_einsum(spec: str, a: jax.Array, b: jax.Array,
     return out
 
 
+# Canonical TP scheme: column-parallel (b's n dim sharded; each output
+# column whole on one device — bit-exact); the shard builder switches
+# to row-parallel (k split + f32 psum) when only k divides.
+_GEMM_PARTITIONING = Partitioning(
+    specs=(("a", ("dp", None)), ("b", (None, "tp")),
+           ("out", ("dp", "tp"))),
+    collectives=("psum_f32:tp",),
+)
+
+
 @register_impl("gemm", "xla", fused_policies=prec.POLICIES,
-               features=("vjp",))
+               features=("vjp",), partitioning=_GEMM_PARTITIONING)
 def _xla_gemm(a, b, *, policy, tiles, interpret):
     del tiles, interpret
     return xla_policy_einsum("mk,kn->mn", a, b, policy)
@@ -125,7 +135,8 @@ def _xla_gemm(a, b, *, policy, tiles, interpret):
 @register_impl("gemm", "pallas",
                fused_policies=("bf16", "refine_a", "bf16x3", "refine_ab"),
                features=("vjp",), pads_to_tiles=True,
-               tile_schema=("bm", "bn", "bk"))
+               tile_schema=("bm", "bn", "bk"),
+               partitioning=_GEMM_PARTITIONING)
 def _pallas_gemm(a, b, *, policy, tiles, interpret):
     if policy == "bf16":
         from repro.kernels.gemm_tiled import gemm_tiled
@@ -283,14 +294,21 @@ def _execute_plan(plan: _Plan, a: jax.Array, b: jax.Array,
     at = jnp.transpose(a, plan.a_perm)
     bt = jnp.transpose(b, plan.b_perm)
     if plan.batch:
+        # shard_map can't nest under vmap; batched contractions run the
+        # single-device path (the big weight matmuls are unbatched).
+        inner = shard.unsharded_route(route)
         at = at.reshape(plan.batch, plan.m, plan.k)
         bt = bt.reshape(plan.batch, plan.k, plan.n)
         out = jax.vmap(
-            lambda x, y: _impl_gemm_2d(impl, x, y, route))(at, bt)
+            lambda x, y: _impl_gemm_2d(impl, x, y, inner))(at, bt)
     else:
         at = at.reshape(plan.m, plan.k)
         bt = bt.reshape(plan.k, plan.n)
-        out = _impl_gemm_2d(impl, at, bt, route)
+        if (shard.active_mesh(route.mesh) is not None
+                and impl.capabilities.partitioning is not None):
+            out = shard.sharded_gemm_2d(impl, at, bt, route)
+        else:
+            out = _impl_gemm_2d(impl, at, bt, route)
     out = out.reshape(plan.out_shape)
     return jnp.transpose(out, plan.out_perm)
 
@@ -336,7 +354,7 @@ def routed_einsum(spec: str, a: jax.Array, b: jax.Array,
     """
     route = as_route(policy)
     name = route.impl("gemm")
-    if name == "xla":
+    if name == "xla" and shard.active_mesh(route.mesh) is None:
         return xla_policy_einsum(spec, a, b, route.precision)
     registry.get_impl("gemm", name)      # unknown impls fail loudly
     plan = _plan_2d(spec, a.shape, b.shape)

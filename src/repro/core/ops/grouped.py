@@ -36,9 +36,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.ops import registry
-from repro.core.ops.registry import (LADDER_BOUNDS, OpSpec, register_family,
-                                     register_impl)
+from repro.core.ops import registry, shard
+from repro.core.ops.registry import (LADDER_BOUNDS, OpSpec, Partitioning,
+                                     register_family, register_impl)
 from repro.core.ops.route import Route, as_route
 from repro.core.ops.tiles import TileConfig, align_group_counts, tile_for
 
@@ -118,8 +118,20 @@ def grouped_tiles(policy: "str | Route", m: int, n: int,
     return tiles.clamp(m, n, k)
 
 
+# Expert parallel: weights shard the E dim; each device runs its window
+# of the sorted buffer against its local experts (zero-weight sentinel
+# groups absorb off-window rows) and an f32 psum over the expert axis
+# reassembles the disjoint regions — the sorted all-to-all.  tp
+# additionally column-shards F.
+_GROUPED_PARTITIONING = Partitioning(
+    specs=(("x", (None, None)), ("w", ("ep", None, "tp")),
+           ("out", (None, "tp"))),
+    collectives=("psum_f32:ep",),
+)
+
+
 @register_impl("grouped", "xla", fused_policies=registry.ALL_POLICIES,
-               features=("vjp",))
+               features=("vjp",), partitioning=_GROUPED_PARTITIONING)
 def _xla_grouped_matmul(x, w, group_offsets, *, route: Route):
     """Reference: strided gather to the worst-case-capacity (E, C, D)
     dispatch tensor + the pre-grouped vmap path's ``ecd,edf->ecf``
@@ -142,7 +154,8 @@ def _xla_grouped_matmul(x, w, group_offsets, *, route: Route):
 @register_impl("grouped", "pallas_grouped",
                fused_policies=registry.ALL_POLICIES, features=("vjp",),
                tile_schema=("bm", "bn", "bk"),
-               default_tiles=TileConfig(128, 256, 256))
+               default_tiles=TileConfig(128, 256, 256),
+               partitioning=_GROUPED_PARTITIONING)
 def _pallas_grouped_matmul(x, w, group_offsets, *, route: Route):
     from repro.kernels.gemm_grouped import grouped_gemm
     n, d = x.shape
@@ -164,4 +177,7 @@ def grouped_matmul(x: jax.Array, w: jax.Array, group_offsets: jax.Array,
     """
     route = as_route(policy)
     impl = registry.get_impl("grouped", route.impl("grouped"))
-    return impl.fn(x, w, group_offsets, route=route)
+    if (shard.active_mesh(route.mesh) is not None
+            and impl.capabilities.partitioning is not None):
+        return shard.sharded_grouped_matmul(impl, x, w, group_offsets, route)
+    return impl.fn(x, w, group_offsets, route=shard.unsharded_route(route))

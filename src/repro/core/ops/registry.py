@@ -38,6 +38,7 @@ from repro.core.precision import POLICIES
 
 __all__ = [
     "Capabilities",
+    "Partitioning",
     "OpSpec",
     "KernelImpl",
     "register_family",
@@ -70,6 +71,37 @@ LADDER_BOUNDS = {
 
 
 @dataclasses.dataclass(frozen=True)
+class Partitioning:
+    """How one impl shards under a device mesh (``core.ops.shard``).
+
+    ``specs`` maps each contract operand (plus ``out``) to a per-dim
+    template of mesh ROLES — ``dp`` (batch/data), ``tp`` (tensor
+    parallel), ``ep`` (expert parallel), ``sp`` (sequence parallel) —
+    or None (replicated).  Templates are the impl's CANONICAL scheme;
+    the shard builder binds roles to concrete mesh axes at dispatch
+    time with divisibility guards and may pick an alternate
+    role-compatible scheme (e.g. row-parallel GEMM when only the k dim
+    divides).  ``collectives`` names the reductions the sharded body
+    applies (``psum_f32:tp`` = fp32 partial-sum epilogue over the tp
+    axis; ``all_gather_kv:sp`` = KV gather for the causal walk).
+
+    ``roles`` (derived) is what route-build validation checks: a
+    non-identity mesh demands the routed impl declare a Partitioning at
+    all, exactly like a precision rung or feature tag.
+    """
+
+    specs: tuple[tuple[str, tuple[str | None, ...]], ...] = ()
+    collectives: tuple[str, ...] = ()
+
+    @property
+    def roles(self) -> frozenset[str]:
+        out = {r for _, dims in self.specs for r in dims if r}
+        out |= {c.partition(":")[2] for c in self.collectives
+                if ":" in c}
+        return frozenset(out)
+
+
+@dataclasses.dataclass(frozen=True)
 class Capabilities:
     """Declarative metadata for one registered impl.
 
@@ -81,6 +113,9 @@ class Capabilities:
     conventional tags are ``vjp`` (differentiable), ``decode``
     (single-token cache decode), ``gqa``, ``softcap`` and
     ``masks:causal`` / ``masks:sliding`` / ``masks:full``.
+    ``partitioning`` (None = single-device only) declares how the impl
+    shards under a mesh; routes carrying a non-identity mesh validate
+    against it like any other capability.
     """
 
     policies: frozenset[str] = ALL_POLICIES
@@ -89,6 +124,7 @@ class Capabilities:
     pads_to_tiles: bool = False
     tile_schema: tuple[str, ...] = ()
     interpret: bool = True
+    partitioning: Partitioning | None = None
 
     def has(self, feature: str) -> bool:
         return feature in self.features
@@ -170,6 +206,7 @@ def register_impl(family: str, name: str, *,
                   pads_to_tiles: bool = False,
                   tile_schema: tuple[str, ...] = (),
                   interpret: bool = True,
+                  partitioning: Partitioning | None = None,
                   default_tiles=None):
     """Decorator registering ``fn`` as impl ``name`` of ``family``.
 
@@ -194,6 +231,7 @@ def register_impl(family: str, name: str, *,
         pads_to_tiles=pads_to_tiles,
         tile_schema=tuple(tile_schema),
         interpret=interpret,
+        partitioning=partitioning,
     )
 
     def wrap(fn):
@@ -278,11 +316,14 @@ def capability_rows() -> list[dict[str, str]]:
                 "fused": _fmt_policies(c.fused_policies),
                 "features": ",".join(sorted(c.features)) or "-",
                 "tiles": ",".join(c.tile_schema) or "-",
+                "shardable": (",".join(sorted(c.partitioning.roles))
+                              if c.partitioning else "-"),
             })
     return rows
 
 
-_COLS = ("family", "impl", "role", "policies", "fused", "features", "tiles")
+_COLS = ("family", "impl", "role", "policies", "fused", "features", "tiles",
+         "shardable")
 
 
 def capability_markdown() -> str:

@@ -29,12 +29,14 @@ from typing import Mapping
 import jax
 
 from repro.core.ops import registry
+from repro.core.ops.shard import MeshSpec, active_mesh
 from repro.core.ops.tiles import TileConfig, default_interpret
 from repro.core.precision import PrecisionPolicy
 
 __all__ = [
     "Route",
     "ExecutionPolicy",
+    "MeshSpec",
     "as_route",
     "normalize_backends",
     "validate_backends",
@@ -72,6 +74,7 @@ class Route:
     backends: tuple[tuple[str, str], ...] = ()
     tiles: TileConfig | None = None    # None -> shape-keyed tile cache
     interpret: bool | None = None      # None -> default_interpret()
+    mesh: MeshSpec | None = None       # None/identity -> single-device
 
     def __post_init__(self) -> None:
         object.__setattr__(
@@ -126,6 +129,7 @@ def validate_backends(backends, *,
                       rungs_for=None,
                       require: Mapping[str, tuple[str, ...]] | None = None,
                       fallback: bool = False,
+                      mesh: MeshSpec | None = None,
                       ) -> tuple[tuple[str, str], ...]:
     """Check a backends mapping against the registry's capabilities.
 
@@ -135,12 +139,16 @@ def validate_backends(backends, *,
     (e.g. ``{"attention": ("decode",)}`` for a serve route).  Required
     families ABSENT from the mapping resolve to their reference impl at
     dispatch time, so that impl is validated too — a demand the
-    reference cannot meet fails here, not later.  A failed check raises
-    ``ValueError`` NAMING the missing capability — or, when
-    ``fallback`` is set, resolves that family to its reference impl
-    instead.
+    reference cannot meet fails here, not later.  A non-identity
+    ``mesh`` additionally demands every resolved impl declare a
+    ``Partitioning`` capability (every family's ops run under the mesh,
+    so families absent from the mapping are checked via their reference
+    impl).  A failed check raises ``ValueError`` NAMING the missing
+    capability — or, when ``fallback`` is set, resolves that family to
+    its reference impl instead.
     """
     require = dict(require or {})
+    mesh = active_mesh(mesh)
 
     def check(fam, name, scoped, *, allow_fallback):
         spec = registry.get_family(fam)
@@ -151,6 +159,9 @@ def validate_backends(backends, *,
                    if not caps.supports_policy(r)]
         missing += [f"capability {feat!r}" for feat in require.get(fam, ())
                     if not caps.has(feat)]
+        if mesh is not None and caps.partitioning is None:
+            missing += [f"capability 'partitioning' "
+                        f"(mesh {mesh.describe()})"]
         if not missing:
             return name
         if allow_fallback and name != spec.reference:
@@ -178,7 +189,10 @@ def validate_backends(backends, *,
                                allow_fallback=fallback)))
         if not scoped:
             unscoped.add(fam)
-    for fam in sorted(set(require) - unscoped):
+    implied = set(require)
+    if mesh is not None:
+        implied |= set(registry.families())
+    for fam in sorted(implied - unscoped):
         check(fam, registry.reference_impl(fam), None,
               allow_fallback=False)
     return tuple(sorted(out))
@@ -206,7 +220,10 @@ class ExecutionPolicy(PrecisionPolicy):
     ``require`` lists feature tags each family's impl must have (the
     serve driver demands ``{"attention": ("decode",)}``); ``fallback``
     turns capability misses into automatic reference-impl fallbacks
-    instead of errors.
+    instead of errors.  ``mesh`` (a static ``MeshSpec``) distributes
+    every routed op over the device mesh via ``core.ops.shard`` — a
+    non-identity mesh is validated against each impl's ``Partitioning``
+    capability here, exactly like rungs and features.
     """
 
     backends: tuple[tuple[str, str], ...] = ()
@@ -214,13 +231,15 @@ class ExecutionPolicy(PrecisionPolicy):
     interpret: bool | None = None
     fallback: bool = False
     require: tuple[tuple[str, tuple[str, ...]], ...] = ()
+    mesh: MeshSpec | None = None
 
     def __post_init__(self) -> None:
         super().__post_init__()
         object.__setattr__(self, "require", _normalize_require(self.require))
         object.__setattr__(self, "backends", validate_backends(
             self.backends, rungs_for=self._rungs_for,
-            require=dict(self.require), fallback=self.fallback))
+            require=dict(self.require), fallback=self.fallback,
+            mesh=self.mesh))
 
     def _rungs_for(self, op_family: str, scoped: str | None):
         """The precision rungs impl selection ``op_family`` (possibly
@@ -250,7 +269,8 @@ class ExecutionPolicy(PrecisionPolicy):
                 chosen[fam] = name
         return Route(
             precision=PrecisionPolicy.for_(self, layer_family),
-            backends=chosen, tiles=self.tiles, interpret=self.interpret)
+            backends=chosen, tiles=self.tiles, interpret=self.interpret,
+            mesh=self.mesh)
 
     # Models call policy.for_(family) and hand the result to peinsum;
     # returning a route (instead of the parent's string) switches every

@@ -32,9 +32,10 @@ import jax.numpy as jnp
 
 from repro.analysis.hlo_cost import analyze_hlo, compiled_cost
 from repro.configs import ARCHS, LM_SHAPES, get_config, input_specs
-from repro.configs.base import ModelConfig, ShapeSpec
+from repro.configs.base import ModelConfig, ShapeSpec, execution_policy_for
 from repro.core.precision import PrecisionPolicy
-from repro.launch.mesh import make_production_mesh
+from repro.runtime.mesh import (_mesh_for_spec, make_production_mesh,
+                                resolve_mesh_spec)
 from repro.models import api
 from repro.optim import adamw
 from repro.runtime import serve_step as serve
@@ -127,9 +128,12 @@ def _with_act_constraints(fn, sharder):
 
 def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, policy=None):
     """Returns (fn, args, in_shardings, meta) for one cell."""
+    from repro.core.ops import ExecutionPolicy
     policy = policy or PrecisionPolicy.uniform("bf16")
     sh = Sharder(cfg, mesh,
-                 mode="train" if shape.mode == "train" else "serve")
+                 mode="train" if shape.mode == "train" else "serve",
+                 policy=policy if isinstance(policy, ExecutionPolicy)
+                 else None)
     specs = input_specs(cfg, shape)
     batch_shardings = sh.batch_specs(specs)
     aparams = serve.abstract_params(cfg)
@@ -175,7 +179,8 @@ def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, policy=None):
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              policy: PrecisionPolicy | None = None,
-             save: bool = True, tag: str = "") -> dict:
+             save: bool = True, tag: str = "",
+             mesh_spec=None, backends=None) -> dict:
     cfg = get_config(arch)
     shape = LM_SHAPES[shape_name]
     cell = f"{arch}__{shape_name}__{'pod2' if multi_pod else 'pod1'}{tag}"
@@ -186,7 +191,18 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         _save(rec, cell, save)
         return rec
 
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    if policy is None and (mesh_spec is not None or backends):
+        # --mesh / --backend composition: the cell's step routes
+        # through the registry under the requested mesh, validated
+        # against each impl's Partitioning at policy build time.
+        policy = execution_policy_for(cfg, backends=backends,
+                                      mesh=mesh_spec)
+    if mesh_spec is not None and not mesh_spec.is_identity:
+        # One mesh object end to end: the cell's in_shardings and the
+        # routed ops' shard_map variants must not disagree on axes.
+        mesh = _mesh_for_spec(mesh_spec)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
     try:
         fn, args, shardings, meta = build_cell(cfg, shape, mesh, policy)
@@ -243,12 +259,24 @@ def main() -> None:
                     help="print the op-registry family x impl x "
                          "capability table and exit (what any cell can "
                          "route to)")
+    ap.add_argument("--backend", action="append", default=None,
+                    metavar="[FAMILY=]IMPL",
+                    help="op-registry routing for every cell, "
+                         "repeatable: 'family=impl' per kernel family")
+    ap.add_argument("--mesh", default=None, metavar="SPEC",
+                    help="override the production mesh: 'dp=2,tp=2,ep=2' "
+                         "(any subset) or 'auto'; cells then compile on "
+                         "that mesh with registry-routed sharded ops. "
+                         "Composes with --backend")
     args = ap.parse_args()
 
     if args.list:
         from repro.core import ops
         print(ops.format_capability_table())
         return
+
+    from repro.core import ops
+    backends = ops.parse_backend_flags(args.backend)
 
     meshes = [False, True]
     if args.multi_pod_only:
@@ -266,7 +294,9 @@ def main() -> None:
 
     n_ok = n_err = n_skip = 0
     for arch, shape, mp in cells:
-        rec = run_cell(arch, shape, mp)
+        mesh_spec = resolve_mesh_spec(args.mesh, get_config(arch))
+        rec = run_cell(arch, shape, mp, mesh_spec=mesh_spec,
+                       backends=backends)
         status = rec["status"]
         n_ok += status == "ok"
         n_err += status == "error"

@@ -1,32 +1,17 @@
-"""Production mesh construction.
+"""DEPRECATED shim: mesh construction moved to ``runtime.mesh``.
 
-A FUNCTION, not a module-level constant: importing this module never
-touches jax device state (the dry-run sets XLA_FLAGS before any jax
-initialization; tests import this module under a 1-device runtime).
-
-Single pod: (data=16, model=16) = 256 chips (v5e pod).
-Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the `pod` axis
-carries only data-parallel gradient reductions (DESIGN.md §5), so it
-maps onto the slower inter-pod fabric.
+``make_production_mesh`` / ``make_test_mesh`` now live in
+``repro.runtime.mesh`` (one mesh module shared by both launchers and
+the elastic path); this module re-exports them so pre-unification
+imports keep working.
 """
 
 from __future__ import annotations
 
-import jax
+from repro.runtime.mesh import (  # noqa: F401
+    MeshSpec,
+    make_production_mesh,
+    make_test_mesh,
+)
 
-__all__ = ["make_production_mesh", "make_test_mesh"]
-
-
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    n = 1
-    for s in shape:
-        n *= s
-    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
-
-
-def make_test_mesh(data: int = 2, model: int = 2):
-    """Small mesh for CPU distribution tests (subprocess sets device count)."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         devices=jax.devices()[: data * model])
+__all__ = ["MeshSpec", "make_production_mesh", "make_test_mesh"]

@@ -305,6 +305,12 @@ def main() -> None:
                          "attention=IMPL")
     ap.add_argument("--grouped-backend", default=None,
                     help="DEPRECATED: alias for --backend grouped=IMPL")
+    ap.add_argument("--mesh", default=None, metavar="SPEC",
+                    help="device mesh: 'dp=2,tp=2,ep=2' (any subset), "
+                         "'auto' (fit the visible device count), or "
+                         "'none' (default, single-device). Composes "
+                         "with --backend: every routed impl must "
+                         "declare a Partitioning capability")
     ap.add_argument("--tile-cache", default=None, metavar="PATH",
                     help="JSON tile-autotune cache: loaded at startup "
                          "so restarts skip re-tuning hot shapes, and "
@@ -325,12 +331,16 @@ def main() -> None:
     backends = ops.parse_backend_flags(
         args.backend, attn_backend=args.attn_backend,
         grouped_backend=args.grouped_backend)
+    from repro.runtime import mesh as meshlib
+    from repro.runtime.monitor import run_header
+    mesh_spec = meshlib.resolve_mesh_spec(args.mesh, cfg)
     # Route-build validation: the engine tick decodes against the KV
     # cache every step, so demand the attention impl's decode capability
     # up front instead of failing on the first tick.
     policy = execution_policy_for(
         cfg, default=args.policy, backends=backends,
-        require={"attention": ("decode",)})
+        require={"attention": ("decode",)}, mesh=mesh_spec)
+    print(run_header(args.arch, policy=policy, mesh=policy.mesh), flush=True)
     eng = ServeEngine(cfg, batch_size=args.batch, max_ctx=args.max_ctx,
                       policy=policy)
     eng.load(api.init_params(jax.random.PRNGKey(0), cfg))

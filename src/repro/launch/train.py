@@ -8,8 +8,9 @@ by examples/ and tests/):
     resumes from the latest COMPLETE step on any restart — node failure
     and planned restart are the same code path;
   * the mesh is chosen from the SURVIVING device count
-    (runtime/elastic.py) so a restart on fewer hosts reshards the same
-    checkpoint onto the smaller mesh;
+    (runtime/mesh.py) so a restart on fewer hosts reshards the same
+    checkpoint onto the smaller mesh — and re-resolves the op route
+    under the new TP/EP degrees;
   * the data pipeline is stateless-resumable: batch i is a pure function
     of (seed, i), so only the step counter is checkpointed;
   * per-step wall-time telemetry flags stragglers (runtime/monitor.py);
@@ -30,6 +31,7 @@ Usage (CPU-scale example):
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import os
 import time
 
@@ -44,8 +46,9 @@ from repro.core.precision import PrecisionPolicy
 from repro.data.pipeline import DataConfig, SyntheticLMDataset
 from repro.models import api
 from repro.optim import adamw
-from repro.runtime.elastic import resharder_for
-from repro.runtime.monitor import StepMonitor
+from repro.runtime import mesh as meshlib
+from repro.runtime.monitor import StepMonitor, run_header
+from repro.runtime.sharding import Sharder
 from repro.runtime.train_step import make_train_step
 
 __all__ = ["TrainLoop", "main"]
@@ -58,28 +61,50 @@ class TrainLoop:
                  opt_cfg: adamw.AdamWConfig, data_cfg: DataConfig,
                  ckpt_dir: str | None = None, microbatches: int = 1,
                  remat: bool = True, ckpt_every: int = 25,
-                 use_mesh: bool = False):
+                 use_mesh: bool = False,
+                 mesh: "meshlib.MeshSpec | None" = None):
         self.cfg = cfg
-        self.policy = policy
         self.opt_cfg = opt_cfg
         self.data_cfg = data_cfg
         self.ckpt_every = ckpt_every
         self.mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
         self.monitor = StepMonitor()
 
+        # `mesh` is the explicit MeshSpec (--mesh dp=2,tp=2,...);
+        # `use_mesh` is the legacy boolean and means --mesh auto.
+        spec = mesh
+        if spec is None and use_mesh and jax.device_count() > 1:
+            spec = meshlib.mesh_spec_for(jax.device_count(), cfg)
         self.mesh = self.sharder = None
+        if spec is not None and not spec.is_identity:
+            self.mesh = meshlib._mesh_for_spec(spec)
+            if isinstance(policy, ops.ExecutionPolicy):
+                # Thread the mesh through the policy: routed ops run
+                # their shard_map variants, re-validated against each
+                # impl's Partitioning capability.
+                if policy.mesh != spec:
+                    policy = dataclasses.replace(policy, mesh=spec)
+                self.sharder = Sharder(cfg, self.mesh, policy=policy)
+            else:
+                self.sharder = Sharder(cfg, self.mesh)
+        self.policy = policy
+
         step_fn = make_train_step(cfg, opt_cfg, policy,
                                   microbatches=microbatches, remat=remat)
-        if use_mesh and jax.device_count() > 1:
-            self.mesh, self.sharder = resharder_for(cfg)
+        if self.sharder is not None:
             aparams = jax.eval_shape(
                 lambda: api.init_params(jax.random.PRNGKey(0), cfg))
             pspecs = self.sharder.param_specs(aparams)
             ospecs = adamw.AdamWState(
                 step=self.sharder.ns(jax.sharding.PartitionSpec()),
                 m=pspecs, v=pspecs)
-            self.step_fn = jax.jit(step_fn, in_shardings=(
-                pspecs, ospecs, None), donate_argnums=(0, 1))
+            # out_shardings pinned to the in_shardings: shard_map'd ops
+            # may bias XLA toward a different inferred output layout,
+            # which trips the donation sharding check on step 2.
+            self.step_fn = jax.jit(
+                step_fn, in_shardings=(pspecs, ospecs, None),
+                out_shardings=(pspecs, ospecs, None),
+                donate_argnums=(0, 1))
         else:
             self.step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
 
@@ -171,7 +196,15 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--lr", type=float, default=3e-4)
-    ap.add_argument("--use-mesh", action="store_true")
+    ap.add_argument("--mesh", default=None, metavar="SPEC",
+                    help="device mesh: 'dp=2,tp=2,ep=2' (any subset), "
+                         "'auto' (fit the visible device count, capped "
+                         "at the arch's divisible TP/EP degrees), or "
+                         "'none' (default, single-device). Composes "
+                         "with --backend: every routed impl must "
+                         "declare a Partitioning capability")
+    ap.add_argument("--use-mesh", action="store_true",
+                    help="DEPRECATED: alias for --mesh auto")
     args = ap.parse_args()
 
     if args.tile_cache:
@@ -187,12 +220,16 @@ def main() -> None:
     backends = ops.parse_backend_flags(
         args.backend, attn_backend=args.attn_backend,
         grouped_backend=args.grouped_backend)
+    mesh_spec = meshlib.resolve_mesh_spec(
+        meshlib.resolve_mesh_flag(args.mesh, args.use_mesh), cfg)
     # Route-build validation: training differentiates through every
     # routed op, so demand the vjp capability of each family's impl.
     policy = execution_policy_for(
         cfg, default=args.policy, logits=args.logits_policy,
         backends=backends,
-        require={fam: ("vjp",) for fam in ops.families()})
+        require={fam: ("vjp",) for fam in ops.families()},
+        mesh=mesh_spec)
+    print(run_header(args.arch, policy=policy, mesh=policy.mesh), flush=True)
     data_cfg = DataConfig(
         global_batch=args.batch, seq_len=args.seq,
         vocab_size=cfg.vocab_size,
@@ -205,7 +242,7 @@ def main() -> None:
         opt_cfg=adamw.AdamWConfig(lr=args.lr, total_steps=args.steps),
         data_cfg=data_cfg, ckpt_dir=args.ckpt_dir,
         microbatches=args.microbatches, ckpt_every=args.ckpt_every,
-        use_mesh=args.use_mesh)
+        mesh=mesh_spec)
     t0 = time.time()
     _, _, hist = loop.run(args.steps)
     print(f"\ntrained {len(hist)} steps in {time.time()-t0:.1f}s; "

@@ -40,7 +40,12 @@ def use_constrainer(fn: Callable):
 
 
 def make_constrainer(sharder) -> Callable:
-    """Standard constrainer from a Sharder: logits (B: dp, S: -, V: tp)."""
+    """Standard constrainer from a Sharder: logits (B: dp, S: -, V: tp).
+
+    The vocab-axis pin is derived from the ROUTED ``gemm@logits``
+    impl's Partitioning (via ``Sharder.shardable``), not from shape
+    heuristics alone: an impl that cannot vocab-TP must not have its
+    activations pinned to a sharding its weights will never carry."""
     from jax.sharding import PartitionSpec as P
 
     dp = sharder.dp_axes if len(sharder.dp_axes) > 1 else (
@@ -49,7 +54,9 @@ def make_constrainer(sharder) -> Callable:
     def fn(x, kind):
         if kind == "logits" and x.ndim == 3:
             v = x.shape[-1]   # global vocab dim of the traced array
-            spec = P(dp, None, "model" if v % sharder.d_model == 0 else None)
+            vocab_tp = (v % sharder.d_model == 0
+                        and sharder.shardable("gemm", "tp", "logits"))
+            spec = P(dp, None, "model" if vocab_tp else None)
         elif kind == "residual" and x.ndim == 3:
             # The residual stream is (B: dp, S, D: replicated). Without
             # this pin, the FSDP dout:'data' sharding of output

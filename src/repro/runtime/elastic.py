@@ -1,45 +1,20 @@
-"""Elastic rescale: resume a run on a different mesh shape.
+"""DEPRECATED shim: elastic mesh selection moved to ``runtime.mesh``.
 
-Checkpoints store GLOBAL indices per shard (checkpoint/manager.py), so
-restore simply targets the new mesh's shardings — no reshard pass. The
-policy layer here decides the new mesh from the surviving host count
-and rebuilds shardings; launch/train.py calls `resume()` after any
-restart, making node failure and planned rescale the same code path.
-
-1000+-node posture: the `pod` axis is the elastic unit (pods join/leave
-whole); within a pod the (data, model) shape is fixed by the slice
-topology. Losing a non-pod-aligned set of hosts means restarting the
-job on the largest rectangular sub-mesh — the checkpoint restores onto
-it unchanged.
+The elastic-rescale machinery (config-aware ``choose_mesh_shape``, the
+policy-re-routing ``resharder_for``) now lives in ``repro.runtime.mesh``
+alongside the mesh constructors it used to duplicate; this module
+re-exports the historical names so pre-unification imports keep
+working.
 """
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import Mesh
+from repro.runtime.mesh import (  # noqa: F401
+    choose_mesh_shape,
+    max_parallel_degree,
+    mesh_spec_for,
+    resharder_for,
+)
 
-from repro.configs.base import ModelConfig
-from repro.runtime.sharding import Sharder
-
-__all__ = ["choose_mesh_shape", "resharder_for"]
-
-
-def choose_mesh_shape(n_devices: int, model_parallel: int = 16,
-                      pod_size: int = 256) -> tuple[tuple[int, ...], tuple[str, ...]]:
-    """Largest supported mesh for the surviving device count."""
-    if n_devices >= 2 * pod_size and n_devices % pod_size == 0:
-        pods = n_devices // pod_size
-        return ((pods, pod_size // model_parallel, model_parallel),
-                ("pod", "data", "model"))
-    model_parallel = min(model_parallel, n_devices)
-    while n_devices % model_parallel:
-        model_parallel //= 2
-    return ((n_devices // model_parallel, model_parallel),
-            ("data", "model"))
-
-
-def resharder_for(cfg: ModelConfig, devices=None) -> tuple[Mesh, Sharder]:
-    devices = devices if devices is not None else jax.devices()
-    shape, axes = choose_mesh_shape(len(devices))
-    mesh = jax.make_mesh(shape, axes, devices=devices)
-    return mesh, Sharder(cfg, mesh)
+__all__ = ["choose_mesh_shape", "max_parallel_degree", "mesh_spec_for",
+           "resharder_for"]

@@ -14,7 +14,26 @@ import collections
 import dataclasses
 import time
 
-__all__ = ["StepMonitor"]
+__all__ = ["StepMonitor", "run_header"]
+
+
+def run_header(arch: str, *, policy=None, mesh=None) -> str:
+    """One attributable run-header line: arch, mesh topology, and the
+    per-family routed impl.  Launchers print it and bench writers embed
+    the same mesh string, so a sharded row in a BENCH_*.json is
+    traceable to the exact (mesh, route) that produced it."""
+    parts = [f"run: {arch}"]
+    if mesh is not None and not mesh.is_identity:
+        parts.append(f"mesh {mesh.describe()} ({mesh.size} devices)")
+    else:
+        parts.append("mesh none (single-device)")
+    if policy is not None:
+        from repro.core.ops import registry
+        routed = " ".join(
+            f"{fam}={policy.impl_for(fam)}"
+            for fam in sorted(registry.families()))
+        parts.append(routed)
+    return " | ".join(parts)
 
 
 @dataclasses.dataclass

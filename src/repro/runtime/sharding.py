@@ -1,8 +1,10 @@
 """Logical -> mesh-axis sharding rules (DP / FSDP / TP / EP / SP).
 
-Mesh axes: ``data`` (FSDP + batch), ``model`` (TP / EP), optional
-``pod`` (pure DP across pods — reduction-only traffic, so it tolerates
-the slower inter-pod fabric; parameters are NOT sharded across pods).
+Mesh axes: ``data`` (FSDP + batch), ``model`` (TP), optional ``expert``
+(true EP when the mesh carries one; otherwise EP rides the model axis)
+and ``pod`` (pure DP across pods — reduction-only traffic, so it
+tolerates the slower inter-pod fabric; parameters are NOT sharded
+across pods).
 
 Every rule is DIVISIBILITY-GUARDED: an axis is sharded only when its
 size divides evenly into the mesh axis, so the same rule set compiles
@@ -10,6 +12,15 @@ for all 10 architectures (e.g. gemma3's 4 attention heads stay
 replicated on a 16-way model axis while its 6912-wide FFN takes TP;
 mixtral's 8 experts fall back to TP-in-expert while dbrx's 16 experts
 take true EP).
+
+Every model-axis rule is additionally CAPABILITY-GATED: given the
+run's ``ExecutionPolicy``, a dim only shards when the ROUTED impl of
+the op family that consumes it declares the matching role in its
+``Partitioning`` capability (weights gate on the gemm impl's ``tp``,
+the logits table on ``gemm@logits``, KV caches on the attention impl,
+expert stacks on the grouped impl's ``ep``) — the registry's metadata
+replaces the old path-matching-only heuristics.  Without a policy the
+rules stay purely divisibility-guarded (the pre-registry behavior).
 
 Batch sharding: global batch over (pod, data) when divisible; the
 ``long_500k`` B=1 cells switch to SEQUENCE sharding (SP) over ``data``
@@ -60,12 +71,14 @@ class Sharder:
     SERVE_REPLICATE_BUDGET = 8 * 2 ** 30
 
     def __init__(self, cfg: ModelConfig, mesh: Mesh, mode: str = "train",
-                 param_bytes: int | None = None):
+                 param_bytes: int | None = None, policy=None):
         self.cfg = cfg
         self.mesh = mesh
         self.mode = mode
+        self.policy = policy            # ExecutionPolicy or None (legacy)
         self.d_model = _axis_size(mesh, "model")
         self.d_data = _axis_size(mesh, "data")
+        self.d_expert = _axis_size(mesh, "expert")
         self.d_pod = _axis_size(mesh, "pod")
         self.dp_axes: tuple[str, ...] = tuple(
             a for a in ("pod", "data") if a in mesh.axis_names)
@@ -81,6 +94,36 @@ class Sharder:
     def _m(self, dim: int) -> str | None:
         """'model' if dim divides the model axis, else replicate."""
         return "model" if dim % self.d_model == 0 else None
+
+    def shardable(self, family: str, role: str,
+                  layer: str | None = None) -> bool:
+        """Does the policy's routed impl for ``family`` (optionally
+        layer-scoped) declare ``role`` in its Partitioning?  True when
+        no policy is attached — the legacy divisibility-only rules."""
+        if self.policy is None:
+            return True
+        from repro.core.ops import registry
+        caps = registry.get_impl(
+            family, self.policy.impl_for(family, layer)).capabilities
+        return (caps.partitioning is not None
+                and role in caps.partitioning.roles)
+
+    def _tp(self, dim: int, family: str = "gemm",
+            layer: str | None = None) -> str | None:
+        """'model' when dim divides AND the routed impl shards it."""
+        if self.shardable(family, "tp", layer):
+            return self._m(dim)
+        return None
+
+    def _e(self, e: int) -> str | None:
+        """The axis the expert stack dim shards over: the dedicated
+        'expert' axis when the mesh has one, else the legacy
+        EP-on-model placement; None when EP is not routable."""
+        if not self.shardable("grouped", "ep"):
+            return None
+        if self.d_expert > 1:
+            return "expert" if e % self.d_expert == 0 else None
+        return self._m(e)
 
     def _f(self, dim: int) -> str | None:
         """FSDP: 'data' if dim divides the data axis, else replicate."""
@@ -112,7 +155,7 @@ class Sharder:
         # Measured in EXPERIMENTS.md §Perf iteration A1.
         if path.endswith(("embed/table", "unembed/table")):
             v, d = shape
-            return P(self._m(v), None)
+            return P(self._tp(v, "gemm", "logits"), None)
         if "pos_embed" in path:
             return P(None, self._f(shape[-1]))
 
@@ -120,14 +163,20 @@ class Sharder:
         # model axis (dbrx); otherwise TP on the ffn dim (mixtral).
         if cfg.num_experts and len(shape) == 4:  # (count, E, din, dout)
             _, e, din, dout = shape
-            if e % self.d_model == 0:
-                return P(None, "model", self._f(din), None)
-            return P(None, None, self._f(din), self._m(dout))
+            ep = self._e(e)
+            if ep == "expert":   # true EP axis: F can still take TP
+                return P(None, ep, self._f(din), self._tp(dout, "grouped"))
+            if ep is not None:
+                return P(None, ep, self._f(din), None)
+            return P(None, None, self._f(din), self._tp(dout, "grouped"))
         if cfg.num_experts and len(shape) == 3 and shape[0] == cfg.num_experts:
             e, din, dout = shape
-            if e % self.d_model == 0:
-                return P("model", self._f(din), None)
-            return P(None, self._f(din), self._m(dout))
+            ep = self._e(e)
+            if ep == "expert":
+                return P(ep, self._f(din), self._tp(dout, "grouped"))
+            if ep is not None:
+                return P(ep, self._f(din), None)
+            return P(None, self._f(din), self._tp(dout, "grouped"))
 
         # Stacked / unstacked weight matrices: (…, d_in, d_out).
         if path.endswith("/w") and len(shape) >= 2:
@@ -136,8 +185,8 @@ class Sharder:
             # Output-projection style (wo/out_proj/ffn_v/b-of-lora): the
             # CONTRACTING dim is the sharded 'model' one.
             if any(t in path for t in ("wo/", "out_proj", "ffn_v", "/b/")):
-                return P(*lead, self._m(din), self._f(dout))
-            return P(*lead, self._f(din), self._m(dout))
+                return P(*lead, self._tp(din), self._f(dout))
+            return P(*lead, self._f(din), self._tp(dout))
 
         # Everything else (norm scales, biases, decay vectors, conv
         # kernels, u/w0/mu, dt_bias, ...) is small: replicate.
@@ -183,11 +232,12 @@ class Sharder:
         # Stacked attn caches: (count, B, S, Kv, hd)
         if len(shape) == 5:
             _, b, s, kv, _ = shape
+            kv_ax = self._tp(kv, "attention")
             dp = self._dp(b)
             if dp is None:  # B=1 long-context: sequence-shard the cache
                 return P(None, None, "data" if s % self.d_data == 0 else None,
-                         self._m(kv), None)
-            return P(None, dp, None, self._m(kv), None)
+                         kv_ax, None)
+            return P(None, dp, None, kv_ax, None)
         if len(shape) == 4:  # (count, B, W-1, conv_dim) mamba conv
             _, b, _, c = shape
             return P(None, self._dp(b), None, self._m(c))

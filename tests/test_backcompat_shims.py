@@ -241,3 +241,45 @@ class TestKernelsOpsAndFlags:
     def test_flag_validation_names_registry(self):
         with pytest.raises(ValueError, match="unknown attention backend"):
             ops.parse_backend_flags(["attention=flashinfer"])
+
+
+# ================================================= legacy mesh surface
+
+class TestLegacyMeshShims:
+    def test_use_mesh_flag_is_deprecated_alias_for_auto(self):
+        from repro.runtime.mesh import resolve_mesh_flag
+        with pytest.deprecated_call():
+            assert resolve_mesh_flag(None, use_mesh=True) == "auto"
+        # an explicit --mesh wins over the legacy boolean
+        with pytest.deprecated_call():
+            assert resolve_mesh_flag("dp=2,tp=2", use_mesh=True) == \
+                "dp=2,tp=2"
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")       # no warning without it
+            assert resolve_mesh_flag(None) is None
+            assert resolve_mesh_flag("auto") == "auto"
+
+    def test_launch_mesh_module_is_a_shim(self):
+        """launch/mesh.py collapsed into runtime/mesh.py; the old
+        import path keeps working and returns the SAME functions."""
+        from repro.launch import mesh as legacy
+        from repro.runtime import mesh as new
+        assert legacy.make_test_mesh is new.make_test_mesh
+        assert legacy.make_production_mesh is new.make_production_mesh
+        assert legacy.MeshSpec is new.MeshSpec
+
+    def test_runtime_elastic_module_is_a_shim(self):
+        """runtime/elastic.py collapsed into runtime/mesh.py ditto."""
+        from repro.runtime import elastic as legacy
+        from repro.runtime import mesh as new
+        assert legacy.choose_mesh_shape is new.choose_mesh_shape
+        assert legacy.max_parallel_degree is new.max_parallel_degree
+        assert legacy.resharder_for is new.resharder_for
+
+    def test_make_test_mesh_legacy_signature_unchanged(self):
+        mesh = new_mesh = None
+        from repro.runtime.mesh import make_test_mesh
+        mesh = make_test_mesh(data=1, model=1)
+        assert mesh.axis_names[-1] == "model"
+        new_mesh = make_test_mesh(data=1, model=1, expert=1)
+        assert mesh.axis_names == new_mesh.axis_names

@@ -1,0 +1,355 @@
+"""Mesh-aware op-registry tests: MeshSpec grammar, Partitioning-gated
+route validation, identity-mesh jaxpr equality, sharded-vs-single-device
+parity for all three kernel families, and a slow subprocess test that
+drives the train CLI through a mesh and an elastic 8->4 resume.
+
+The parity classes need >= 8 devices; per tests/conftest.py the main
+pytest process sees the real single CPU device, so they skip locally
+and run in the CI ``distributed`` lane (which forces 8 host devices via
+XLA_FLAGS before pytest starts).
+"""
+
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ops
+from repro.core.ops import shard
+from repro.core.ops.shard import MeshSpec
+from repro.runtime.monitor import run_header
+
+needs8 = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs 8 devices (CI distributed lane forces "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+def _rand(shape, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(-1.0, 1.0, shape).astype(dtype))
+
+
+def _route(mesh=None, precision="f32", **backends):
+    return ops.Route(precision=precision, backends=backends, mesh=mesh)
+
+
+# ================================================== MeshSpec grammar
+
+class TestMeshSpec:
+    def test_parse_round_trips_describe(self):
+        spec = MeshSpec.parse("dp=2,tp=2,ep=2")
+        assert spec == MeshSpec(dp=2, tp=2, ep=2)
+        assert MeshSpec.parse(spec.describe()) == spec
+        assert spec.describe() == "dp=2,tp=2,ep=2"
+        assert spec.size == 8 and not spec.is_identity
+
+    def test_missing_roles_default_to_one(self):
+        assert MeshSpec.parse("tp=4") == MeshSpec(tp=4)
+        assert MeshSpec.parse("dp=8").describe() == "dp=8,tp=1,ep=1"
+
+    def test_pod_only_spelled_when_nontrivial(self):
+        assert "pod" not in MeshSpec(dp=2).describe()
+        assert MeshSpec(dp=2, pod=2).describe() == "dp=2,tp=1,ep=1,pod=2"
+
+    def test_identity_spellings(self):
+        for text in ("none", "", "1", "identity", "NONE"):
+            assert MeshSpec.parse(text).is_identity
+
+    def test_bad_tokens_fail_loudly(self):
+        with pytest.raises(ValueError, match="bad --mesh token"):
+            MeshSpec.parse("dp=2,fsdp=4")
+        with pytest.raises(ValueError, match="bad --mesh token"):
+            MeshSpec.parse("dp2")
+        with pytest.raises(ValueError, match="positive int"):
+            MeshSpec(dp=0)
+
+    def test_from_shape_lifts_choose_mesh_shape(self):
+        """The historical (shape, axes) tuples map onto roles."""
+        assert MeshSpec.from_shape((16, 16), ("data", "model")) == \
+            MeshSpec(dp=16, tp=16)
+        assert MeshSpec.from_shape((2, 16, 16),
+                                   ("pod", "data", "model")) == \
+            MeshSpec(pod=2, dp=16, tp=16)
+
+    def test_spec_is_static_policy_metadata(self):
+        """A MeshSpec rides inside ExecutionPolicy as hashable static
+        metadata (jit static args / custom-vjp aux data)."""
+        p = ops.ExecutionPolicy(default="bf16", mesh=MeshSpec(dp=2, tp=2))
+        assert hash(p) == hash(
+            ops.ExecutionPolicy(default="bf16", mesh=MeshSpec(dp=2, tp=2)))
+        assert p.mesh.describe() == "dp=2,tp=2,ep=1"
+
+    def test_active_mesh_identity_is_none(self):
+        assert shard.active_mesh(None) is None
+        assert shard.active_mesh(MeshSpec()) is None
+        assert shard.active_mesh(MeshSpec(dp=2)) == MeshSpec(dp=2)
+
+    def test_unsharded_route_strips_only_mesh(self):
+        r = _route(mesh=MeshSpec(dp=2), gemm="pallas")
+        inner = shard.unsharded_route(r)
+        assert inner.mesh is None
+        assert inner.impl("gemm") == "pallas"
+        assert inner.precision == r.precision
+
+
+# ===================================== Partitioning-gated validation
+
+class TestMeshValidation:
+    def test_unshardable_impl_rejected_naming_capability(self):
+        """pallas_naive declares no Partitioning: building a policy
+        that routes it under a non-identity mesh must fail at build
+        time, naming the capability AND the mesh."""
+        with pytest.raises(ValueError) as ei:
+            ops.ExecutionPolicy(default="bf16",
+                                backends={"gemm": "pallas_naive"},
+                                mesh=MeshSpec(dp=2, tp=2))
+        msg = str(ei.value)
+        assert "capability 'partitioning'" in msg
+        assert "mesh dp=2,tp=2,ep=1" in msg
+
+    def test_identity_mesh_skips_partitioning_demand(self):
+        p = ops.ExecutionPolicy(default="bf16",
+                                backends={"gemm": "pallas_naive"},
+                                mesh=MeshSpec())
+        assert p.impl_for("gemm") == "pallas_naive"
+
+    def test_fallback_resolves_unshardable_to_reference(self):
+        with pytest.warns(RuntimeWarning, match="falling back"):
+            p = ops.ExecutionPolicy(default="bf16",
+                                    backends={"gemm": "pallas_naive"},
+                                    mesh=MeshSpec(dp=2, tp=2),
+                                    fallback=True)
+        assert dict(p.backends)["gemm"] == ops.reference_impl("gemm")
+
+    def test_mesh_demands_partitioning_of_unmapped_families(self):
+        """Families ABSENT from the backends mapping resolve to their
+        reference impls — all of which declare Partitioning, so an
+        empty mapping builds under any mesh."""
+        p = ops.ExecutionPolicy(default="bf16", backends={},
+                                mesh=MeshSpec(dp=2, ep=2, tp=2))
+        for fam in ops.families():
+            assert ops.get_impl(
+                fam, p.impl_for(fam)).capabilities.partitioning is not None
+
+    def test_shardable_column_in_capability_table(self):
+        """Satellite: the registry table (and hence the README matrix)
+        carries the shardable column derived from Partitioning."""
+        rows = ops.capability_rows()
+        by_impl = {(r["family"], r["impl"]): r for r in rows}
+        assert by_impl[("gemm", "xla")]["shardable"] != "-"
+        assert by_impl[("gemm", "pallas_naive")]["shardable"] == "-"
+        assert "shardable" in ops.capability_markdown()
+
+    def test_run_header_attributes_mesh_and_route(self):
+        p = ops.ExecutionPolicy(default="bf16",
+                                backends={"attention": "pallas_fused"},
+                                mesh=MeshSpec(dp=2, tp=2))
+        line = run_header("gemma3-1b", policy=p, mesh=p.mesh)
+        assert line.startswith("run: gemma3-1b | mesh dp=2,tp=2,ep=1 "
+                               "(4 devices) | ")
+        assert "attention=pallas_fused" in line and "gemm=xla" in line
+        assert "mesh none (single-device)" in run_header("gemma3-1b")
+
+
+# ==================================== identity mesh: byte-identical IR
+
+class TestIdentityMeshJaxpr:
+    def test_gemm_jaxpr_identical(self):
+        a, b = _rand((8, 16), 1), _rand((16, 8), 2)
+        fn = lambda route: jax.make_jaxpr(
+            lambda x, y: ops.gemm(x, y, policy=route))(a, b)
+        assert str(fn(_route())) == str(fn(_route(mesh=MeshSpec())))
+
+    def test_attention_jaxpr_identical(self):
+        q = _rand((2, 8, 1, 2, 8), 3)
+        k = _rand((2, 8, 1, 8), 4)
+        v = _rand((2, 8, 1, 8), 5)
+        fn = lambda route: jax.make_jaxpr(
+            lambda q, k, v: ops.attention_forward(q, k, v, policy=route))(
+                q, k, v)
+        assert str(fn(_route())) == str(fn(_route(mesh=MeshSpec())))
+
+    def test_grouped_jaxpr_identical(self):
+        x = _rand((16, 8), 6)
+        w = _rand((2, 8, 8), 7)
+        offs = jnp.asarray([0, 8, 16], jnp.int32)
+        fn = lambda route: jax.make_jaxpr(
+            lambda x, w: ops.grouped_matmul(x, w, offs, policy=route))(x, w)
+        assert str(fn(_route())) == str(fn(_route(mesh=MeshSpec())))
+
+
+# ============================= sharded vs single-device parity (8 dev)
+
+@needs8
+class TestShardedGemmParity:
+    def _check(self, m, k, n, mesh, precision="f32", impl="xla",
+               atol=0.0, interpret=None):
+        a, b = _rand((m, k), 11), _rand((k, n), 12)
+        route = dict(precision=precision, backends={"gemm": impl},
+                     interpret=interpret)
+        got = ops.gemm(a, b, policy=ops.Route(mesh=mesh, **route))
+        want = ops.gemm(a, b, policy=ops.Route(**route))
+        if atol == 0.0:
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        else:
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=0, atol=atol)
+
+    def test_column_parallel_bit_exact_all_rungs(self):
+        """n % tp == 0 -> column-parallel: each output column computed
+        whole on one device, every precision rung bit-exact."""
+        for precision in ("f32", "bf16", "refine_ab"):
+            self._check(16, 24, 32, MeshSpec(dp=2, tp=2),
+                        precision=precision)
+
+    def test_row_parallel_f32_within_psum_reorder(self):
+        """n indivisible, k % tp == 0 -> row-parallel with the f32 psum
+        epilogue: exact up to summation reordering."""
+        self._check(16, 24, 31, MeshSpec(dp=2, tp=2), atol=1e-5)
+
+    def test_pallas_impl_shards_too(self):
+        """The collectives are jnp-level, outside the kernel: the
+        Pallas GEMM shards without kernel changes."""
+        self._check(16, 32, 32, MeshSpec(dp=2, tp=2), impl="pallas",
+                    interpret=True)
+
+    def test_vocab_tp_logits_path(self):
+        """gemm@logits vocab-TP: (tokens, d) x (d, vocab) with the
+        vocab dim sharded over tp — the column-parallel scheme."""
+        self._check(8, 16, 64, MeshSpec(tp=4))
+
+    def test_grads_exact_f32(self):
+        a, b = _rand((16, 24), 13), _rand((24, 32), 14)
+        mesh = MeshSpec(dp=2, tp=2)
+
+        def loss(route):
+            return jax.grad(
+                lambda a, b: ops.gemm(a, b, policy=route).sum(),
+                argnums=(0, 1))(a, b)
+
+        ga, gb = loss(_route(mesh=mesh))
+        ra, rb = loss(_route())
+        np.testing.assert_array_equal(np.asarray(ga), np.asarray(ra))
+        np.testing.assert_array_equal(np.asarray(gb), np.asarray(rb))
+
+
+@needs8
+class TestShardedAttentionParity:
+    def _qkv(self, b=4, s=8, kv=2, g=2, d=8):
+        return (_rand((b, s, kv, g, d), 21), _rand((b, s, kv, d), 22),
+                _rand((b, s, kv, d), 23))
+
+    def _check(self, mesh, *, b=4, s=8, kv=2, window=None,
+               precision="f32"):
+        q, k, v = self._qkv(b=b, s=s, kv=kv)
+        kw = dict(causal=True, window=window)
+        got = ops.attention_forward(
+            q, k, v, policy=ops.Route(precision=precision, mesh=mesh), **kw)
+        want = ops.attention_forward(
+            q, k, v, policy=ops.Route(precision=precision), **kw)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_dp_tp_exact(self):
+        """Batch over data, KV heads over model: independent work,
+        bit-exact (f32 and bf16)."""
+        self._check(MeshSpec(dp=2, tp=2))
+        self._check(MeshSpec(dp=2, tp=2), precision="bf16")
+
+    def test_sequence_parallel_exact(self):
+        """Batch of 1 can't shard over dp -> the sequence shards: KV
+        all-gather + q-offset causal mask, same online-softmax walk."""
+        self._check(MeshSpec(dp=2), b=1)
+
+    def test_sequence_parallel_sliding_window(self):
+        self._check(MeshSpec(dp=2), b=1, window=4)
+
+    def test_decode_exact(self):
+        q = _rand((4, 1, 2, 2, 8), 24)
+        cache_k = _rand((4, 16, 2, 8), 25)
+        cache_v = _rand((4, 16, 2, 8), 26)
+        pos = jnp.asarray([3, 7, 11, 15], jnp.int32)
+        got = ops.attention_decode(
+            q, cache_k, cache_v, pos,
+            policy=ops.Route(precision="f32", mesh=MeshSpec(dp=2, tp=2)))
+        want = ops.attention_decode(q, cache_k, cache_v, pos,
+                                    policy=ops.Route(precision="f32"))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@needs8
+class TestShardedGroupedParity:
+    def _problem(self, n=16, d=8, e=4, f=12):
+        x = _rand((n, d), 31)
+        w = _rand((e, d, f), 32)
+        offs = jnp.asarray([0, 4, 8, 12, n], jnp.int32)
+        return x, w, offs
+
+    def _check(self, mesh, precision="f32", impl="xla", interpret=None,
+               atol=0.0):
+        x, w, offs = self._problem()
+        kw = dict(precision=precision, backends={"grouped": impl},
+                  interpret=interpret)
+        got = ops.grouped_matmul(x, w, offs,
+                                 policy=ops.Route(mesh=mesh, **kw))
+        want = ops.grouped_matmul(x, w, offs, policy=ops.Route(**kw))
+        if atol == 0.0:
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        else:
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=0, atol=atol)
+
+    def test_expert_parallel_exact(self):
+        """Each device runs ITS window of the global offsets with
+        zero-weight sentinel groups; the psum adds exact zeros off
+        region -> bit-exact (f32 and bf16)."""
+        self._check(MeshSpec(ep=2))
+        self._check(MeshSpec(ep=2), precision="bf16")
+
+    def test_expert_parallel_with_tp(self):
+        self._check(MeshSpec(ep=2, tp=2))
+
+    def test_composed_three_axis_mesh(self):
+        """The full dp=2,ep=2,tp=2 composition (8 devices)."""
+        self._check(MeshSpec(dp=2, ep=2, tp=2))
+
+    def test_pallas_grouped_shards(self):
+        self._check(MeshSpec(ep=2), impl="pallas_grouped", interpret=True,
+                    atol=1e-5)
+
+
+# =============================== train CLI: mesh + elastic 8->4 resume
+
+@pytest.mark.slow
+def test_train_cli_mesh_then_elastic_resume(tmp_path):
+    """Subprocess twin of the acceptance run: train 3 steps on a forced
+    8-device dp=2,tp=2 mesh, then resume THE SAME checkpoint dir on 4
+    devices with --mesh auto — the route re-resolves for the surviving
+    device count and training continues from the checkpointed step."""
+    ckpt = str(tmp_path / "ckpt")
+
+    def run(n_devices, mesh_flag, steps):
+        env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+               "JAX_PLATFORMS": "cpu",
+               "XLA_FLAGS":
+                   f"--xla_force_host_platform_device_count={n_devices}"}
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.train",
+             "--arch", "gemma3-1b", "--smoke", "--steps", str(steps),
+             "--batch", "8", "--seq", "32", "--mesh", mesh_flag,
+             "--ckpt-dir", ckpt, "--ckpt-every", "1"],
+            capture_output=True, text=True, timeout=600, env=env)
+        assert r.returncode == 0, f"stdout:{r.stdout}\nstderr:{r.stderr[-4000:]}"
+        return r.stdout
+
+    out8 = run(8, "dp=2,tp=2", steps=3)
+    assert "mesh dp=2,tp=2,ep=1 (4 devices)" in out8
+    assert "trained 3 steps" in out8
+
+    out4 = run(4, "auto", steps=5)
+    assert "mesh dp=4,tp=1,ep=1 (4 devices)" in out4
+    # resumed from step 3, so only 2 more steps ran
+    assert "trained 2 steps" in out4

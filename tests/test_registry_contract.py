@@ -92,6 +92,46 @@ def test_grad_parity_vs_reference_autodiff(family, impl):
     np.testing.assert_allclose(g, g_ref, rtol=1e-3, atol=1e-4)
 
 
+# ==================================== sharded parity matrix (>= 8 devices)
+
+PARTITIONED = [(family, name) for family in ops.families()
+               for name in ops.available_impls(family)
+               if ops.get_family(family).make_problem is not None
+               and ops.get_impl(family,
+                                name).capabilities.partitioning is not None]
+
+MESHES = (ops.MeshSpec(dp=4, tp=2), ops.MeshSpec(dp=2, ep=2, tp=2))
+
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs 8 devices (CI distributed lane)")
+@pytest.mark.parametrize("mesh", MESHES, ids=lambda m: m.describe())
+@pytest.mark.parametrize("family,impl", PARTITIONED)
+def test_sharded_parity_vs_f64_oracle(family, impl, mesh):
+    """Every impl declaring the Partitioning capability — read from the
+    registry, not hardcoded — runs its shard_map variant on every mesh
+    composition and stays inside the family's error ladder.  A future
+    ``register_impl(..., partitioning=...)`` is sharding-tested for
+    free."""
+    spec = ops.get_family(family)
+    caps = ops.get_impl(family, impl).capabilities
+    problem = spec.make_problem(0)
+    oracle = np.asarray(spec.oracle(problem))
+    for policy in ("f32", "bf16"):
+        if policy not in caps.policies:
+            continue
+        route = ops.Route(precision=policy, backends={family: impl},
+                          interpret=True, mesh=mesh)
+        out = np.asarray(spec.run(problem, route), np.float64)
+        assert out.shape == oracle.shape
+        err = np.abs(out - oracle)
+        if spec.valid_mask is not None:
+            err = err[np.asarray(spec.valid_mask(problem))]
+        bound = spec.error_bound(policy)
+        assert float(err.max()) < bound, \
+            (family, impl, policy, mesh.describe(), float(err.max()))
+
+
 # ============================================= route-build capability gate
 
 @pytest.fixture

@@ -118,6 +118,29 @@ class TestElastic:
         shape, _ = choose_mesh_shape(1)
         assert shape == (1, 1)
 
+    def test_cfg_caps_model_axis_at_divisible_degree(self):
+        """Satellite: with a config, the model axis never exceeds the
+        largest degree dividing the arch's shardable dims (kv heads,
+        d_ff, experts) — gemma3-1b has a single KV head, so TP=1."""
+        from repro.configs import get_config
+        from repro.runtime.mesh import max_parallel_degree
+        gemma = get_config("gemma3-1b")        # num_kv_heads=1
+        mixtral = get_config("mixtral-8x7b")   # 8 kv heads / 8 experts
+        assert max_parallel_degree(gemma, 16) == 1
+        assert max_parallel_degree(mixtral, 16) == 8
+        assert choose_mesh_shape(256, gemma) == \
+            ((256, 1), ("data", "model"))
+        assert choose_mesh_shape(256, mixtral) == \
+            ((32, 8), ("data", "model"))
+        # multi-pod keeps the pod axis, caps only the model axis
+        assert choose_mesh_shape(512, mixtral) == \
+            ((2, 32, 8), ("pod", "data", "model"))
+
+    def test_cfg_none_preserves_legacy_shapes(self):
+        """The no-config path is byte-identical to the pre-dedupe
+        elastic.choose_mesh_shape (locked above); cfg=None is explicit."""
+        assert choose_mesh_shape(256, None) == choose_mesh_shape(256)
+
 
 class TestMonitor:
     def test_straggler_flagging(self):
