@@ -25,10 +25,20 @@ Usage (CI bench-smoke, after ``python -m benchmarks.run --point 128``):
 
     PYTHONPATH=src python -m benchmarks.check_regress
 
+The serving SLO matrix (``BENCH_serve.json``, from
+``repro.serve.loadgen``'s deterministic virtual-time sweeps) rides the
+same machinery with its own gates — p50/p99 TTFT and end-to-end
+latency in ticks, goodput in tokens/tick, rejection rate — selected
+explicitly (the CI serve-slo lane):
+
+    PYTHONPATH=src python -m repro.serve.loadgen --smoke ...
+    PYTHONPATH=src python -m benchmarks.check_regress --files BENCH_serve.json
+
 Refreshing baselines after an INTENTIONAL numeric change:
 
     PYTHONPATH=src python -m benchmarks.run --point 128
     PYTHONPATH=src python -m benchmarks.check_regress --update
+    PYTHONPATH=src python -m benchmarks.check_regress --update --files BENCH_serve.json
 """
 
 from __future__ import annotations
@@ -51,6 +61,12 @@ BASELINE_DIR = os.path.join(_ROOT, "benchmarks", "baselines")
 ABS_FLOOR = 2e-7
 
 FILES = ("BENCH_gemm.json", "BENCH_attention.json", "BENCH_moe.json")
+
+# The serving SLO matrix (repro.serve.loadgen) is gated on different
+# axes — latency/goodput, not numeric error — and is produced by a
+# different CI lane (serve-slo), so it is selected via --files rather
+# than added to the default kernel set.
+SERVE_FILE = "BENCH_serve.json"
 
 # Per-matrix extra point axes beyond backend x policy (attention masks,
 # MoE group-imbalance profiles).
@@ -122,9 +138,67 @@ def check_file(name: str, *, tol: float, baseline_dir: str,
     return failures
 
 
-def update_baselines(*, baseline_dir: str, result_dir: str) -> None:
+# Serving SLO gates, per arrival-rate point. Virtual-tick metrics are
+# deterministic (seeded workload, budget-only termination), so the
+# tolerance only needs to absorb INTENTIONAL small shifts — a behavior
+# change that costs p99 TTFT or goodput turns CI red.
+_SERVE_LOWER_BETTER = ("p50_ttft_ticks", "p99_ttft_ticks",
+                       "p50_e2e_ticks", "p99_e2e_ticks")
+_SERVE_TICK_FLOOR = 1.0          # one tick of absolute slack
+_SERVE_RATE_FLOOR = 0.02         # rejection-rate absolute slack
+
+
+def _serve_key(p: dict) -> str:
+    return f"rate={p['arrival_rate']}"
+
+
+def check_serve_file(name: str, *, tol: float, baseline_dir: str,
+                     result_dir: str) -> list[str]:
+    base_path = os.path.join(baseline_dir, name)
+    new_path = os.path.join(result_dir, name)
+    if not os.path.exists(base_path):
+        return [f"{name}: no committed baseline at {base_path}"]
+    if not os.path.exists(new_path):
+        return [f"{name}: missing result {new_path} — did "
+                f"`python -m repro.serve.loadgen` run?"]
+    with open(base_path) as f:
+        base = {_serve_key(p): p for p in json.load(f)["points"]}
+    with open(new_path) as f:
+        new = {_serve_key(p): p for p in json.load(f)["points"]}
+    failures = []
+    for key, bp in base.items():
+        np_ = new.get(key)
+        if np_ is None:
+            failures.append(f"{name}: point {key} dropped from the sweep")
+            continue
+        for field in _SERVE_LOWER_BETTER:
+            bound = bp[field] * (1.0 + tol) + _SERVE_TICK_FLOOR
+            if np_[field] > bound:
+                failures.append(
+                    f"{name}: {key} {field} {np_[field]:.2f} worsened "
+                    f"past baseline {bp[field]:.2f} "
+                    f"(+{tol:.0%} gate: {bound:.2f})")
+        gp_bound = bp["goodput_tok_per_tick"] * (1.0 - tol) - 0.01
+        if np_["goodput_tok_per_tick"] < gp_bound:
+            failures.append(
+                f"{name}: {key} goodput {np_['goodput_tok_per_tick']:.3f} "
+                f"tok/tick dropped below baseline "
+                f"{bp['goodput_tok_per_tick']:.3f} "
+                f"(-{tol:.0%} gate: {gp_bound:.3f})")
+        rj_bound = bp["rejection_rate"] + max(
+            bp["rejection_rate"] * tol, _SERVE_RATE_FLOOR)
+        if np_["rejection_rate"] > rj_bound:
+            failures.append(
+                f"{name}: {key} rejection rate "
+                f"{np_['rejection_rate']:.3f} grew past baseline "
+                f"{bp['rejection_rate']:.3f} (gate: {rj_bound:.3f})")
+    return failures
+
+
+def update_baselines(*, baseline_dir: str, result_dir: str,
+                     files=FILES) -> None:
     os.makedirs(baseline_dir, exist_ok=True)
-    for name in FILES:
+    for name in files:
         src = os.path.join(result_dir, name)
         if not os.path.exists(src):
             raise SystemExit(f"cannot update: {src} not found")
@@ -142,25 +216,36 @@ def main(argv=None) -> int:
     ap.add_argument("--update", action="store_true",
                     help="refresh the committed baselines from the "
                          "current results instead of gating")
+    ap.add_argument("--files", nargs="+", default=list(FILES),
+                    choices=list(FILES) + [SERVE_FILE],
+                    help="matrices to gate/update (default: the kernel "
+                         "matrices; the serve-slo lane passes "
+                         f"{SERVE_FILE})")
     args = ap.parse_args(argv)
 
     if args.update:
         update_baselines(baseline_dir=args.baseline_dir,
-                         result_dir=args.result_dir)
+                         result_dir=args.result_dir,
+                         files=args.files)
         return 0
 
     failures = []
-    for name in FILES:
-        failures += check_file(name, tol=args.tol,
-                               baseline_dir=args.baseline_dir,
-                               result_dir=args.result_dir)
+    for name in args.files:
+        checker = check_serve_file if name == SERVE_FILE else check_file
+        failures += checker(name, tol=args.tol,
+                            baseline_dir=args.baseline_dir,
+                            result_dir=args.result_dir)
     if failures:
         print(f"bench regression gate: {len(failures)} failure(s)")
         for f in failures:
             print(f"  FAIL {f}")
         return 1
-    n_pts = sum(len(_load(os.path.join(args.baseline_dir, n)))
-                for n in FILES)
+
+    def _n_points(name):
+        with open(os.path.join(args.baseline_dir, name)) as f:
+            return len(json.load(f)["points"])
+
+    n_pts = sum(_n_points(n) for n in args.files)
     print(f"bench regression gate: OK ({n_pts} baseline points held "
           f"within {args.tol:.0%})")
     return 0

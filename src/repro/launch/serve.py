@@ -39,7 +39,22 @@ from repro.core.precision import PrecisionPolicy
 from repro.models import api
 from repro.runtime import serve_step
 
-__all__ = ["ServeEngine", "Request", "main"]
+__all__ = ["ServeEngine", "Request", "QueueFull", "main"]
+
+
+class QueueFull(RuntimeError):
+    """Admission queue at capacity: the engine refuses the request
+    instead of buffering unbounded work.  The gateway maps this to
+    backpressure (HTTP 429 + Retry-After); batch drivers either retry
+    or count the rejection."""
+
+    def __init__(self, rid: int, depth: int, max_queue: int):
+        super().__init__(
+            f"request {rid}: admission queue full "
+            f"({depth}/{max_queue} queued)")
+        self.rid = rid
+        self.depth = depth
+        self.max_queue = max_queue
 
 
 @dataclasses.dataclass
@@ -47,12 +62,17 @@ class Request:
     rid: int
     prompt: np.ndarray           # (S,) int32
     max_new_tokens: int = 16
+    session: str | None = None   # pool-level affinity key (multi-turn)
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
-    # latency accounting (engine-relative wall clock, seconds)
+    # latency accounting — MONOTONIC clock, seconds (a wall-clock step
+    # under NTP would corrupt latency_s/queue_s); wall_time is the one
+    # wall timestamp, kept for log attribution only.
     t_submit: float | None = None
     t_admit: float | None = None
+    t_first: float | None = None   # first token emitted (TTFT end)
     t_done: float | None = None
+    wall_time: float | None = None
 
     @property
     def latency_s(self) -> float | None:
@@ -67,6 +87,14 @@ class Request:
         if self.t_submit is None or self.t_admit is None:
             return None
         return self.t_admit - self.t_submit
+
+    @property
+    def ttft_s(self) -> float | None:
+        """Submit-to-first-token latency (None until the prefill's
+        sampled token lands)."""
+        if self.t_submit is None or self.t_first is None:
+            return None
+        return self.t_first - self.t_submit
 
 
 class ServeEngine:
@@ -85,12 +113,21 @@ class ServeEngine:
     """
 
     def __init__(self, cfg, *, batch_size: int, max_ctx: int,
-                 policy: PrecisionPolicy | None = None, eos_id: int = 1):
+                 policy: PrecisionPolicy | None = None, eos_id: int = 1,
+                 max_queue: int | None = None, metrics=None,
+                 replica: str = "0"):
         self.cfg = cfg
         self.batch = batch_size
         self.max_ctx = max_ctx
         self.policy = policy or PrecisionPolicy.uniform("bf16")
         self.eos_id = eos_id
+        # None = unbounded (legacy batch drivers); serving fronts set a
+        # watermark so a stalled engine rejects instead of OOMing.
+        self.max_queue = max_queue
+        # duck-typed MetricsRegistry (counter/gauge/histogram methods);
+        # None keeps the hot path metrics-free.
+        self.metrics = metrics
+        self.replica = replica
         self.params = None
         self._tick = jax.jit(serve_step.make_engine_tick(
             cfg, self.policy, eos_id=eos_id, max_ctx=max_ctx))
@@ -134,16 +171,54 @@ class ServeEngine:
                 f"{f' (+{n_img} image tokens)' if n_img else ''} does not "
                 f"fit the engine context (max_ctx={self.max_ctx})")
 
+    # -------------------------------------------------------- metrics
+    # All no-ops when self.metrics is None: the registry is duck-typed
+    # so launch/ never imports the serve package (pool/gateway import
+    # THIS module).
+
+    def _m_queue_depth(self) -> None:
+        if self.metrics is not None:
+            self.metrics.gauge(
+                "serve_queue_depth",
+                "requests awaiting a free slot").set(
+                    len(self.queue), replica=self.replica)
+
+    def _m_occupancy(self) -> None:
+        if self.metrics is not None:
+            occupied = sum(r is not None for r in self.slot_req)
+            self.metrics.gauge(
+                "serve_slot_occupancy",
+                "fraction of decode slots holding a request").set(
+                    occupied / self.batch, replica=self.replica)
+
     def submit(self, req: Request) -> None:
         """Queue a request for admission at the next free slot.
 
         Raises ValueError up front for prompts that cannot fit the
-        engine context, so an oversized request never poisons the queue.
+        engine context (so an oversized request never poisons the
+        queue) and QueueFull when the admission queue is at its
+        ``max_queue`` watermark — bounded admission is what lets the
+        gateway translate overload into backpressure instead of
+        unbounded memory growth.
         """
         self._validate(req)
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            if self.metrics is not None:
+                self.metrics.counter(
+                    "serve_requests_rejected",
+                    "submissions refused at the queue watermark").inc(
+                        replica=self.replica)
+            raise QueueFull(req.rid, len(self.queue), self.max_queue)
         if req.t_submit is None:
-            req.t_submit = time.time()
+            req.t_submit = time.monotonic()
+            req.wall_time = time.time()
         self.queue.append(req)
+        if self.metrics is not None:
+            self.metrics.counter(
+                "serve_requests_submitted",
+                "requests accepted into the admission queue").inc(
+                    replica=self.replica)
+            self._m_queue_depth()
 
     def admit(self, req: Request) -> bool:
         """Prefill `req` into a free slot. Returns False if none free.
@@ -160,7 +235,8 @@ class ServeEngine:
             return False
         self._validate(req)
         if req.t_submit is None:
-            req.t_submit = time.time()
+            req.t_submit = time.monotonic()
+            req.wall_time = time.time()
         n_img = (self.cfg.num_image_tokens
                  if self.cfg.family == "vlm" else 0)
         prompt = jnp.asarray(req.prompt)[None]              # (1, S)
@@ -182,15 +258,30 @@ class ServeEngine:
                 full, one[:, 0].astype(full.dtype), slot, axis=1)
 
         self.cache = jax.tree.map(splice, self.cache, cache1)
-        req.t_admit = time.time()
+        req.t_admit = time.monotonic()
         first = int(jnp.argmax(logits[0, -1]))
         req.out_tokens.append(first)
+        req.t_first = time.monotonic()
         self.tokens_generated += 1
+        if self.metrics is not None:
+            self.metrics.histogram(
+                "serve_queue_wait_seconds",
+                "submit-to-admission wait").observe(
+                    req.queue_s, replica=self.replica)
+            self.metrics.histogram(
+                "serve_ttft_seconds",
+                "submit-to-first-token latency").observe(
+                    req.ttft_s, replica=self.replica)
+            # the prefill-sampled first token is generated HERE, before
+            # the slot ever ticks — count it where it happens
+            self.metrics.counter(
+                "serve_tokens", "decoded tokens").inc(
+                    1, replica=self.replica)
         if first == self.eos_id or req.max_new_tokens <= 1:
             # EOS (or a 1-token budget) straight out of prefill: the
             # request is done; the slot stays free for the next one.
             req.done = True
-            req.t_done = time.time()
+            req.t_done = time.monotonic()
             return True
         self.slot_req[slot] = req
         self.last_tok = self.last_tok.at[slot].set(first)
@@ -212,14 +303,16 @@ class ServeEngine:
         active_before = np.asarray(self.active)
         n_active = int(active_before.sum())
         if n_active == 0:
+            self._m_occupancy()
             return 0
+        t0 = time.monotonic()
         (self.cache, self.last_tok, self.pos, self.remaining,
          self.active, finished) = self._tick(
             self.params, self.cache, self.last_tok, self.pos,
             self.active, self.remaining)
         nxt = np.asarray(self.last_tok)
         fin = np.asarray(finished)
-        now = time.time()
+        now = time.monotonic()
         for i in np.flatnonzero(active_before):
             r = self.slot_req[i]
             r.out_tokens.append(int(nxt[i]))
@@ -229,12 +322,33 @@ class ServeEngine:
                 self.slot_req[i] = None
         self.ticks += 1
         self.tokens_generated += n_active
+        if self.metrics is not None:
+            dt = now - t0
+            self.metrics.histogram(
+                "serve_tick_seconds",
+                "one engine decode tick (all active slots)").observe(
+                    dt, replica=self.replica)
+            # one tick = one token per active slot, so per-slot
+            # inter-token latency IS the tick duration
+            self.metrics.histogram(
+                "serve_inter_token_seconds",
+                "per-slot inter-token latency").observe(
+                    dt, replica=self.replica)
+            self.metrics.counter(
+                "serve_tokens", "decoded tokens").inc(
+                    n_active, replica=self.replica)
+            self.metrics.gauge(
+                "serve_tokens_per_s",
+                "decode throughput over the last tick").set(
+                    n_active / max(dt, 1e-9), replica=self.replica)
+            self._m_occupancy()
         return n_active
 
     def step(self) -> int:
         """Admit as many queued requests as slots allow, then tick."""
         while self.queue and self.admit(self.queue[0]):
             self.queue.popleft()
+        self._m_queue_depth()
         return self.tick()
 
     @property
@@ -263,7 +377,7 @@ class ServeEngine:
         token of every request (and the prefill-sampled first token) is
         included.
         """
-        t0 = time.time()
+        t0 = time.monotonic()
         ticks0, tokens0 = self.ticks, self.tokens_generated
         for req in requests:
             self.submit(req)
@@ -273,7 +387,7 @@ class ServeEngine:
             guard += 1
             if guard > 10_000:
                 raise RuntimeError("serve loop did not converge")
-        stats = self.stats(requests, time.time() - t0)
+        stats = self.stats(requests, time.monotonic() - t0)
         # per-RUN deltas: the engine counters are lifetime-cumulative
         stats["ticks"] -= ticks0
         stats["tokens"] -= tokens0
@@ -292,6 +406,19 @@ def main() -> None:
     ap.add_argument("--max-ctx", type=int, default=64)
     ap.add_argument("--policy", default="bf16",
                     help="default precision policy for every matmul")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind a least-loaded router "
+                         "with session affinity (repro.serve.pool); 1 "
+                         "= the single in-process engine")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="per-replica admission-queue watermark; past "
+                         "it submissions raise QueueFull (the gateway "
+                         "maps this to HTTP 429 + Retry-After). "
+                         "Default: unbounded")
+    ap.add_argument("--gateway-port", type=int, default=None,
+                    help="serve an asyncio HTTP/JSON gateway (token "
+                         "streaming, /metrics, backpressure) on this "
+                         "port instead of running the synthetic batch")
     ap.add_argument("--backend", action="append", default=None,
                     metavar="[FAMILY=]IMPL",
                     help="op-registry routing, repeatable: "
@@ -341,9 +468,49 @@ def main() -> None:
         cfg, default=args.policy, backends=backends,
         require={"attention": ("decode",)}, mesh=mesh_spec)
     print(run_header(args.arch, policy=policy, mesh=policy.mesh), flush=True)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+
+    if args.replicas > 1 or args.gateway_port is not None:
+        # serve-stack path: replica pool (least-loaded routing, session
+        # affinity), optionally fronted by the HTTP gateway. Imported
+        # lazily — repro.serve imports THIS module.
+        from repro.serve.metrics import MetricsRegistry
+        from repro.serve.pool import ReplicaPool
+        registry = MetricsRegistry()
+        pool = ReplicaPool(cfg, params, replicas=args.replicas,
+                           batch_size=args.batch, max_ctx=args.max_ctx,
+                           policy=policy, max_queue=args.max_queue,
+                           metrics=registry)
+        if args.gateway_port is not None:
+            import asyncio
+
+            from repro.serve.gateway import Gateway
+            gw = Gateway(pool, host="0.0.0.0", port=args.gateway_port,
+                         metrics=registry)
+            print(f"gateway: listening on :{args.gateway_port} "
+                  f"({args.replicas} replica(s), "
+                  f"max_queue={args.max_queue})", flush=True)
+            asyncio.run(gw.serve_forever())
+            return
+        rng = np.random.default_rng(0)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(
+                            2, cfg.vocab_size,
+                            args.prompt_len).astype(np.int32),
+                        max_new_tokens=args.max_new)
+                for i in range(args.requests)]
+        stats = pool.run(reqs)
+        print(f"pool served {stats['requests']} requests across "
+              f"{stats['replicas']} replicas ({stats['wall_s']:.2f}s, "
+              f"{stats['tok_per_s']:.1f} tok/s)")
+        for r in reqs[:3]:
+            print(f"  req {r.rid}: {len(r.out_tokens)} tokens "
+                  f"{r.out_tokens[:8]}...")
+        return
+
     eng = ServeEngine(cfg, batch_size=args.batch, max_ctx=args.max_ctx,
-                      policy=policy)
-    eng.load(api.init_params(jax.random.PRNGKey(0), cfg))
+                      policy=policy, max_queue=args.max_queue)
+    eng.load(params)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(2, cfg.vocab_size,

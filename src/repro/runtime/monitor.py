@@ -36,6 +36,18 @@ def run_header(arch: str, *, policy=None, mesh=None) -> str:
     return " | ".join(parts)
 
 
+def _median(sorted_xs) -> float:
+    """Two-point median of an already-sorted sequence.  ``xs[n // 2]``
+    is biased high for even lengths (it picks the upper of the middle
+    pair), which inflated both the median and — worse — the MAD scale
+    the straggler z-score divides by."""
+    n = len(sorted_xs)
+    mid = n // 2
+    if n % 2:
+        return sorted_xs[mid]
+    return 0.5 * (sorted_xs[mid - 1] + sorted_xs[mid])
+
+
 @dataclasses.dataclass
 class StepStats:
     mean_s: float
@@ -47,12 +59,26 @@ class StepStats:
 
 
 class StepMonitor:
+    """Rolling robust step-time stats + optional metrics publishing.
+
+    ``metrics`` is duck-typed (any object with ``histogram`` /
+    ``gauge`` / ``counter`` get-or-create methods, e.g.
+    ``repro.serve.metrics.MetricsRegistry``): every ``stop()`` then
+    also observes ``<name>_time_seconds``, sets
+    ``<name>_achieved_tflops`` and counts ``<name>_straggler_flags`` —
+    the serve stack's scrape surface grows out of the same window the
+    straggler detector already keeps.
+    """
+
     def __init__(self, window: int = 50, z_threshold: float = 4.0,
-                 model_flops_per_step: float = 0.0):
+                 model_flops_per_step: float = 0.0,
+                 metrics=None, name: str = "step"):
         self.times: collections.deque = collections.deque(maxlen=window)
         self.z = z_threshold
         self.flops = model_flops_per_step
         self._t0: float | None = None
+        self._metrics = metrics
+        self._name = name
 
     def start(self) -> None:
         self._t0 = time.perf_counter()
@@ -61,13 +87,33 @@ class StepMonitor:
         assert self._t0 is not None, "start() not called"
         dt = time.perf_counter() - self._t0
         self._t0 = None
+        return self.observe(dt)
+
+    def observe(self, dt: float) -> StepStats:
+        """Fold one step duration (seconds) into the window; ``stop()``
+        routes through here, and externally-timed paths (the serve
+        engine's jit'd tick) call it directly."""
         self.times.append(dt)
         ts = sorted(self.times)
         n = len(ts)
-        med = ts[n // 2]
-        mad = sorted(abs(t - med) for t in ts)[n // 2]
+        med = _median(ts)
+        mad = _median(sorted(abs(t - med) for t in ts))
         straggler = n >= 10 and mad > 0 and (dt - med) / (1.4826 * mad) > self.z
-        return StepStats(
+        stats = StepStats(
             mean_s=sum(ts) / n, median_s=med, mad_s=mad, last_s=dt,
             straggler=straggler,
             achieved_tflops=self.flops / dt / 1e12 if self.flops else 0.0)
+        if self._metrics is not None:
+            self._metrics.histogram(
+                f"{self._name}_time_seconds",
+                "per-step wall time").observe(dt)
+            if self.flops:
+                self._metrics.gauge(
+                    f"{self._name}_achieved_tflops",
+                    "model FLOPs / step wall time").set(
+                        stats.achieved_tflops)
+            if straggler:
+                self._metrics.counter(
+                    f"{self._name}_straggler_flags",
+                    "robust-z outlier steps").inc()
+        return stats

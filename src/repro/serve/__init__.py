@@ -1,0 +1,57 @@
+"""Production serve stack above the continuous-batching engine.
+
+Layering (each module imports only downward):
+
+    gateway.py    asyncio HTTP/JSON front: token streaming, bounded
+                  admission, 429 + Retry-After backpressure, /metrics
+    autoscale.py  queue-depth + tokens/s driven replica-set resizing,
+                  re-resolving per-replica meshes on scale events
+    pool.py       N in-process ServeEngine replicas: least-loaded
+                  routing, session affinity, bounded queues, drains
+    metrics.py    Prometheus-style counters/gauges/histograms + text
+                  exposition (no serve/launch imports — shared by the
+                  engine and runtime/monitor.py via duck typing)
+    loadgen.py    open-loop Poisson load sweeps in virtual tick time,
+                  emitting the CI-gated BENCH_serve.json SLO matrix
+
+Attribute access is lazy: ``repro.launch.serve`` (the engine) is
+imported by ``pool``/``gateway``, and itself imports
+``repro.serve.metrics`` inside ``main()`` — keeping this package's
+import side-effect free avoids the cycle in both directions.
+"""
+
+from __future__ import annotations
+
+_LAZY = {
+    "Counter": ("repro.serve.metrics", "Counter"),
+    "Gauge": ("repro.serve.metrics", "Gauge"),
+    "Histogram": ("repro.serve.metrics", "Histogram"),
+    "MetricsRegistry": ("repro.serve.metrics", "MetricsRegistry"),
+    "Replica": ("repro.serve.pool", "Replica"),
+    "ReplicaPool": ("repro.serve.pool", "ReplicaPool"),
+    "ScaleEvent": ("repro.serve.pool", "ScaleEvent"),
+    "AutoscalePolicy": ("repro.serve.autoscale", "AutoscalePolicy"),
+    "Autoscaler": ("repro.serve.autoscale", "Autoscaler"),
+    "Gateway": ("repro.serve.gateway", "Gateway"),
+    "LoadSpec": ("repro.serve.loadgen", "LoadSpec"),
+    "run_sweep": ("repro.serve.loadgen", "run_sweep"),
+    "QueueFull": ("repro.launch.serve", "QueueFull"),
+    "Request": ("repro.launch.serve", "Request"),
+    "ServeEngine": ("repro.launch.serve", "ServeEngine"),
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name: str):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    import importlib
+    return getattr(importlib.import_module(mod_name), attr)
+
+
+def __dir__():
+    return __all__

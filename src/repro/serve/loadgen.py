@@ -1,0 +1,266 @@
+"""Synthetic open-loop load generator -> ``BENCH_serve.json``.
+
+The paper's throughput tables are steady-state numbers; serving only
+inherits them if the layer above the kernels keeps the batch full
+under bursty, heavy-tailed traffic.  This harness measures exactly
+that, following the measured-table methodology of the kernel matrices
+(Sun et al.: behavior is regression-TESTED, not assumed): each
+arrival-rate point drives a fresh replica pool with
+
+  * **Poisson arrivals** (open loop: arrivals do not wait for
+    completions — overload shows up as queueing and rejection, not as
+    a politely self-throttling client), and
+  * **heavy-tailed lognormal prompt and output lengths**,
+
+and reports p50/p99 TTFT, p50/p99 end-to-end latency, goodput and
+rejection rate per point.
+
+Time is VIRTUAL: one engine tick is the unit.  Latencies in ticks,
+goodput in tokens/tick.  With greedy decode on fixed params, a fixed
+seed and ``eos_id=-1`` (termination purely by token budget), every
+point is bit-deterministic across machines — which is what lets
+``benchmarks/check_regress.py`` gate the serving SLO matrix in CI the
+same way it gates the kernel matrices, with zero timing flake.
+Wall-clock throughput is recorded alongside as an ungated info field.
+
+CLI (the CI ``serve-slo`` lane and the nightly job):
+
+    PYTHONPATH=src python -m repro.serve.loadgen --arch gemma3-1b \\
+        --smoke --replicas 2 --rates 0.1,0.3,0.6 --requests 30
+    PYTHONPATH=src python -m benchmarks.check_regress --files BENCH_serve.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import os
+import time
+
+import numpy as np
+
+from repro.launch.serve import QueueFull, Request
+
+__all__ = ["LoadSpec", "sample_workload", "run_point", "run_sweep", "main"]
+
+# Tick budget per point: open-loop queues drain in bounded time because
+# rejection bounds backlog, but a mis-sized sweep should fail loudly.
+_MAX_TICKS = 50_000
+
+
+@dataclasses.dataclass(frozen=True)
+class LoadSpec:
+    """Workload shape for one sweep (lengths in tokens, rates per
+    tick).  Lognormal medians/sigmas give the heavy right tail real
+    prompt traffic has."""
+    n_requests: int = 30
+    prompt_median: float = 8.0
+    prompt_sigma: float = 0.6
+    max_prompt: int = 24
+    out_median: float = 6.0
+    out_sigma: float = 0.5
+    max_out: int = 16
+    seed: int = 0
+
+    def lengths(self, rng: np.random.Generator,
+                ) -> tuple[np.ndarray, np.ndarray]:
+        def logn(median, sigma, hi):
+            x = rng.lognormal(math.log(median), sigma, self.n_requests)
+            return np.clip(np.round(x), 1, hi).astype(np.int64)
+        return (logn(self.prompt_median, self.prompt_sigma,
+                     self.max_prompt),
+                logn(self.out_median, self.out_sigma, self.max_out))
+
+
+def sample_workload(spec: LoadSpec, rate: float, vocab: int,
+                    ) -> list[tuple[int, Request]]:
+    """(arrival_tick, Request) list for one open-loop Poisson run at
+    ``rate`` requests/tick.  One seeded generator drives arrivals,
+    lengths and prompt tokens, so a point is a pure function of
+    (spec, rate, vocab)."""
+    rng = np.random.default_rng(
+        np.random.SeedSequence([spec.seed, int(rate * 1e6)]))
+    inter = rng.exponential(1.0 / rate, spec.n_requests)
+    arrivals = np.floor(np.cumsum(inter)).astype(np.int64)
+    prompts, outs = spec.lengths(rng)
+    reqs = []
+    for i in range(spec.n_requests):
+        prompt = rng.integers(2, vocab, prompts[i]).astype(np.int32)
+        reqs.append((int(arrivals[i]),
+                     Request(rid=i, prompt=prompt,
+                             max_new_tokens=int(outs[i]))))
+    return reqs
+
+
+def run_point(pool, spec: LoadSpec, rate: float, *, vocab: int,
+              autoscaler=None) -> dict:
+    """Drive one arrival-rate point through ``pool`` in virtual time.
+
+    Arrivals scheduled at tick t are submitted before step t runs; a
+    token first observed after step t counts latency ``t + 1 -
+    arrival``.  Rejected submissions (QueueFull anywhere in the
+    admission path) are dropped and counted — open loop, no retry.
+    """
+    work = sample_workload(spec, rate, vocab)
+    pending = list(work)
+    arrival = {req.rid: t for t, req in work}
+    ttft: dict[int, int] = {}
+    e2e: dict[int, int] = {}
+    inflight: list[Request] = []
+    rejected = 0
+    tick0 = pool.ticks
+    t_wall = time.monotonic()
+    tok0 = pool.tokens_generated
+    while pending or not pool.idle:
+        now = pool.ticks - tick0
+        while pending and pending[0][0] <= now:
+            _, req = pending.pop(0)
+            try:
+                pool.submit(req)
+                inflight.append(req)
+            except QueueFull:
+                rejected += 1
+        tokens = pool.step()
+        if autoscaler is not None:
+            autoscaler.observe(tokens)
+        now = pool.ticks - tick0
+        for req in inflight:
+            if req.out_tokens and req.rid not in ttft:
+                ttft[req.rid] = now - arrival[req.rid]
+            if req.done and req.rid not in e2e:
+                e2e[req.rid] = now - arrival[req.rid]
+        inflight = [r for r in inflight if not r.done]
+        if now > _MAX_TICKS:
+            raise RuntimeError(
+                f"loadgen point rate={rate} exceeded {_MAX_TICKS} ticks")
+    wall_s = time.monotonic() - t_wall
+    total_ticks = pool.ticks - tick0
+    done = sorted(e2e)
+    lat = np.array([e2e[r] for r in done], np.float64)
+    fst = np.array([ttft[r] for r in done], np.float64)
+    tokens = pool.tokens_generated - tok0
+    good_tokens = sum(
+        len(req.out_tokens) for _, req in work if req.done)
+
+    def pct(xs, q):
+        return float(np.percentile(xs, q)) if len(xs) else 0.0
+
+    return {
+        "arrival_rate": rate,
+        "requests": spec.n_requests,
+        "completed": len(done),
+        "rejected": rejected,
+        "rejection_rate": round(rejected / spec.n_requests, 6),
+        "p50_ttft_ticks": round(pct(fst, 50), 4),
+        "p99_ttft_ticks": round(pct(fst, 99), 4),
+        "p50_e2e_ticks": round(pct(lat, 50), 4),
+        "p99_e2e_ticks": round(pct(lat, 99), 4),
+        "goodput_tok_per_tick": round(
+            good_tokens / max(total_ticks, 1), 6),
+        "total_ticks": total_ticks,
+        "tokens": tokens,
+        # wall-clock throughput: machine-dependent, NOT gated
+        "wall_s": round(wall_s, 4),
+        "tok_per_s_wall": round(tokens / max(wall_s, 1e-9), 2),
+    }
+
+
+def run_sweep(cfg, params, *, rates, spec: LoadSpec, replicas: int = 2,
+              batch_size: int = 4, max_ctx: int = 64, policy=None,
+              max_queue: int | None = 8, autoscale=None,
+              metrics=None) -> dict:
+    """One pool per rate point (points stay independent; engines share
+    the params tree), swept lowest rate first."""
+    from repro.serve.pool import ReplicaPool
+    points = []
+    for rate in sorted(rates):
+        pool = ReplicaPool(
+            cfg, params, replicas=replicas, batch_size=batch_size,
+            max_ctx=max_ctx, policy=policy, max_queue=max_queue,
+            eos_id=-1,  # budget-only termination => deterministic ticks
+            metrics=metrics)
+        scaler = None
+        if autoscale is not None:
+            from repro.serve.autoscale import Autoscaler
+            scaler = Autoscaler(pool, autoscale, cfg=cfg,
+                                metrics=metrics)
+        point = run_point(pool, spec, rate,
+                          vocab=cfg.vocab_size, autoscaler=scaler)
+        if scaler is not None:
+            point["replicas_final"] = pool.n_active
+            point["scale_events"] = len(pool.scale_events)
+        points.append(point)
+    return {
+        "bench": "serve",
+        "replicas": replicas,
+        "batch_size": batch_size,
+        "max_ctx": max_ctx,
+        "max_queue": max_queue,
+        "seed": spec.seed,
+        "n_requests": spec.n_requests,
+        "units": "virtual engine ticks (deterministic; wall fields "
+                 "are info-only)",
+        "points": points,
+    }
+
+
+def main(argv=None) -> None:
+    from repro.configs import ARCHS, get_config, get_smoke
+    from repro.core.precision import PrecisionPolicy
+    from repro.models import api
+    from repro.serve.autoscale import AutoscalePolicy
+
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--arch", choices=ARCHS, default="gemma3-1b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-ctx", type=int, default=64)
+    ap.add_argument("--max-queue", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=30)
+    ap.add_argument("--rates", default="0.1,0.3,0.6",
+                    help="comma-separated arrival rates (requests/tick)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--policy", default="bf16")
+    ap.add_argument("--autoscale", default=None, metavar="MIN:MAX",
+                    help="enable the autoscaler over [MIN, MAX] "
+                         "replicas instead of a fixed pool")
+    ap.add_argument("--out", default="BENCH_serve.json",
+                    help="output path for the serve SLO matrix")
+    args = ap.parse_args(argv)
+
+    import jax
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    rates = [float(r) for r in args.rates.split(",") if r]
+    spec = LoadSpec(n_requests=args.requests, seed=args.seed,
+                    max_prompt=max(4, args.max_ctx - 24))
+    autoscale = None
+    if args.autoscale:
+        lo, hi = (int(x) for x in args.autoscale.split(":"))
+        autoscale = AutoscalePolicy(min_replicas=lo, max_replicas=hi)
+    payload = run_sweep(
+        cfg, params, rates=rates, spec=spec, replicas=args.replicas,
+        batch_size=args.batch, max_ctx=args.max_ctx,
+        policy=PrecisionPolicy.uniform(args.policy),
+        max_queue=args.max_queue, autoscale=autoscale)
+    payload["arch"] = args.arch
+    payload["smoke"] = bool(args.smoke)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"loadgen: {len(rates)} rate point(s) -> "
+          f"{os.path.abspath(args.out)}")
+    for p in payload["points"]:
+        print(f"  rate={p['arrival_rate']:.2f}: "
+              f"ttft p50/p99 {p['p50_ttft_ticks']:.1f}/"
+              f"{p['p99_ttft_ticks']:.1f} ticks, "
+              f"e2e p99 {p['p99_e2e_ticks']:.1f}, "
+              f"goodput {p['goodput_tok_per_tick']:.2f} tok/tick, "
+              f"rejected {p['rejected']}/{p['requests']}")
+
+
+if __name__ == "__main__":
+    main()

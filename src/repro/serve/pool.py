@@ -1,0 +1,280 @@
+"""Replica pool: N in-process ``ServeEngine`` workers behind one
+router.
+
+The engine is one continuous-batching process; the pool is the layer
+that keeps MANY of them fed under bursty traffic:
+
+  * **least-loaded routing** — a request lands on the active replica
+    with the fewest in-flight requests (queued + occupied slots), so a
+    replica stalled on long generations stops accumulating queue;
+  * **session affinity** — requests carrying a ``session`` key pin to
+    the replica that served the session before, so multi-turn traffic
+    re-uses that replica's KV slots instead of re-prefilling elsewhere;
+  * **bounded admission** — every engine carries the ``max_queue``
+    watermark; when the routed replica (affinity) or every candidate
+    replica (load routing) is at watermark, ``submit`` raises
+    ``QueueFull`` for the gateway to map to backpressure;
+  * **elastic active set** — ``scale_to`` grows/shrinks the set of
+    replicas taking NEW work (the autoscaler drives it); deactivated
+    replicas keep ticking until their in-flight work drains, mirroring
+    ``runtime/mesh.resharder_for``'s drain-and-reshape posture.
+
+Replica engines are built lazily on first activation and share one
+params tree (read-only), so a ``max_replicas=8`` pool costs nothing
+until load actually arrives.
+
+Token outputs are replica-count independent: every engine runs the
+same greedy decode on the same params, and PR 1/4 made engine outputs
+batch-composition independent — so 1-replica and 3-replica serving of
+the same request stream are token-identical
+(tests/test_serve_consistency.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.launch.serve import QueueFull, Request, ServeEngine
+
+__all__ = ["ReplicaPool", "Replica", "ScaleEvent"]
+
+
+@dataclasses.dataclass
+class Replica:
+    idx: int
+    engine: ServeEngine
+    active: bool = True          # takes NEW work; inactive drains only
+
+    @property
+    def load(self) -> int:
+        """In-flight request count: queued + occupied decode slots."""
+        eng = self.engine
+        return len(eng.queue) + sum(r is not None for r in eng.slot_req)
+
+    @property
+    def queue_space(self) -> bool:
+        eng = self.engine
+        return eng.max_queue is None or len(eng.queue) < eng.max_queue
+
+
+@dataclasses.dataclass
+class ScaleEvent:
+    """One autoscaler/operator scale action, as applied by the pool."""
+    tick: int
+    old_n: int
+    new_n: int
+    reason: str = ""
+    mesh: object | None = None   # per-replica MeshSpec after the event
+
+    def describe(self) -> str:
+        arrow = "grow" if self.new_n > self.old_n else "shrink"
+        mesh = f", mesh {self.mesh.describe()}" if self.mesh is not None \
+            else ""
+        return (f"scale {arrow} {self.old_n}->{self.new_n} replicas "
+                f"@tick {self.tick}{mesh}"
+                + (f" ({self.reason})" if self.reason else ""))
+
+
+class ReplicaPool:
+    """Routes requests across N lazily-built engine replicas.
+
+    ``policy`` is shared by default; a scale event may hand
+    ``scale_to`` a re-resolved per-replica mesh (see
+    ``serve.autoscale``), which is applied to replicas built AFTER the
+    event — existing replicas keep their compiled tick, exactly like
+    ``resharder_for`` re-resolves routes only at reshape points.
+    """
+
+    def __init__(self, cfg, params, *, replicas: int = 2,
+                 batch_size: int = 4, max_ctx: int = 64, policy=None,
+                 eos_id: int = 1, max_queue: int | None = None,
+                 routing: str = "least_loaded", max_replicas: int | None = None,
+                 metrics=None, engine_factory=None):
+        if replicas < 1:
+            raise ValueError(f"need at least 1 replica, got {replicas}")
+        if routing not in ("least_loaded", "round_robin"):
+            raise ValueError(f"unknown routing policy {routing!r}")
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch_size
+        self.max_ctx = max_ctx
+        self.policy = policy
+        self.eos_id = eos_id
+        self.max_queue = max_queue
+        self.routing = routing
+        self.max_replicas = max(max_replicas or replicas, replicas)
+        self.metrics = metrics
+        self._engine_factory = engine_factory or self._default_factory
+        self.replicas: list[Replica] = []
+        self._affinity: dict[str, int] = {}
+        self._rr = 0                      # round-robin cursor
+        self.ticks = 0
+        self.scale_events: list[ScaleEvent] = []
+        for _ in range(replicas):
+            self._activate_one()
+
+    # ------------------------------------------------------- lifecycle
+
+    def _default_factory(self, idx: int, policy) -> ServeEngine:
+        eng = ServeEngine(self.cfg, batch_size=self.batch,
+                          max_ctx=self.max_ctx, policy=policy,
+                          eos_id=self.eos_id, max_queue=self.max_queue,
+                          metrics=self.metrics, replica=str(idx))
+        eng.load(self.params)
+        return eng
+
+    def _activate_one(self, policy=None) -> Replica:
+        for rep in self.replicas:
+            if not rep.active:
+                rep.active = True
+                return rep
+        idx = len(self.replicas)
+        rep = Replica(idx, self._engine_factory(
+            idx, policy if policy is not None else self.policy))
+        self.replicas.append(rep)
+        return rep
+
+    @property
+    def active_replicas(self) -> list[Replica]:
+        return [r for r in self.replicas if r.active]
+
+    @property
+    def n_active(self) -> int:
+        return sum(r.active for r in self.replicas)
+
+    def scale_to(self, n: int, *, mesh=None, reason: str = "",
+                 ) -> ScaleEvent | None:
+        """Resize the ACTIVE set to ``n`` (clamped to
+        [1, max_replicas]).  Growth builds/reactivates replicas — newly
+        BUILT ones under ``mesh``-re-resolved policy when given;
+        shrink deactivates the highest-index active replicas, which
+        keep draining (step() still ticks them) but receive no new
+        work.  Session pins onto a deactivated replica are dropped so
+        follow-up turns re-route."""
+        n = max(1, min(n, self.max_replicas))
+        old_n = self.n_active
+        if n == old_n:
+            return None
+        policy = self.policy
+        if mesh is not None and policy is not None \
+                and hasattr(policy, "mesh"):
+            # resharder_for semantics: replacing the policy's mesh
+            # re-runs capability validation for the new degrees
+            policy = dataclasses.replace(policy, mesh=mesh)
+        while self.n_active < n:
+            self._activate_one(policy)
+        if n < old_n:
+            for rep in reversed(self.active_replicas):
+                if self.n_active <= n:
+                    break
+                rep.active = False
+                self._affinity = {s: i for s, i in self._affinity.items()
+                                  if i != rep.idx}
+        ev = ScaleEvent(tick=self.ticks, old_n=old_n, new_n=n,
+                        reason=reason, mesh=mesh)
+        self.scale_events.append(ev)
+        if self.metrics is not None:
+            self.metrics.counter(
+                "serve_scale_events",
+                "autoscaler/operator resize actions").inc()
+            self.metrics.gauge(
+                "serve_active_replicas",
+                "replicas accepting new work").set(n)
+        return ev
+
+    # --------------------------------------------------------- routing
+
+    def _pick(self, req: Request) -> Replica:
+        active = self.active_replicas
+        if req.session is not None:
+            idx = self._affinity.get(req.session)
+            if idx is not None and self.replicas[idx].active:
+                rep = self.replicas[idx]
+                if not rep.queue_space:
+                    # Affinity is strict: rehoming the session would
+                    # forfeit the KV locality it exists for, so an
+                    # overloaded pinned replica means backpressure.
+                    raise QueueFull(req.rid, len(rep.engine.queue),
+                                    rep.engine.max_queue)
+                return rep
+        if self.routing == "round_robin":
+            order = [active[(self._rr + k) % len(active)]
+                     for k in range(len(active))]
+            for rep in order:
+                if rep.queue_space:
+                    self._rr = (self._rr + order.index(rep) + 1) \
+                        % len(active)
+                    return rep
+        else:
+            for rep in sorted(active, key=lambda r: (r.load, r.idx)):
+                if rep.queue_space:
+                    return rep
+        depth = min(len(r.engine.queue) for r in active)
+        raise QueueFull(req.rid, depth, self.max_queue)
+
+    def submit(self, req: Request) -> int:
+        """Route + enqueue; returns the replica index serving ``req``.
+        Raises QueueFull when the routed replica (session affinity) or
+        all candidates (load routing) are at watermark."""
+        rep = self._pick(req)
+        rep.engine.submit(req)      # may itself raise QueueFull
+        if req.session is not None:
+            self._affinity[req.session] = rep.idx
+        return rep.idx
+
+    def replica_for_session(self, session: str) -> int | None:
+        return self._affinity.get(session)
+
+    # ------------------------------------------------------------ step
+
+    def step(self) -> int:
+        """One pool step: every replica with work admits + ticks
+        (inactive replicas too — they are draining, not dead).
+        Returns tokens decoded across the pool."""
+        total = 0
+        for rep in self.replicas:
+            if not rep.engine.idle:
+                total += rep.engine.step()
+        self.ticks += 1
+        return total
+
+    def total_queued(self) -> int:
+        return sum(len(r.engine.queue) for r in self.replicas)
+
+    def total_inflight(self) -> int:
+        return sum(r.load for r in self.replicas)
+
+    @property
+    def idle(self) -> bool:
+        return all(r.engine.idle for r in self.replicas)
+
+    @property
+    def tokens_generated(self) -> int:
+        return sum(r.engine.tokens_generated for r in self.replicas)
+
+    def run(self, requests: list[Request]) -> dict:
+        """Serve all requests to completion (batch-driver twin of
+        ``ServeEngine.run``); rejections propagate as QueueFull."""
+        t0 = time.monotonic()
+        tokens0 = self.tokens_generated
+        for req in requests:
+            self.submit(req)
+        guard = 0
+        while not self.idle:
+            self.step()
+            guard += 1
+            if guard > 10_000:
+                raise RuntimeError("pool serve loop did not converge")
+        wall = time.monotonic() - t0
+        tokens = self.tokens_generated - tokens0
+        lat = [r.latency_s for r in requests if r.latency_s is not None]
+        return {
+            "requests": len(requests),
+            "replicas": self.n_active,
+            "tokens": tokens,
+            "wall_s": wall,
+            "tok_per_s": tokens / max(wall, 1e-9),
+            "latency_mean_s": sum(lat) / len(lat) if lat else 0.0,
+            "latency_max_s": max(lat) if lat else 0.0,
+        }

@@ -1,0 +1,97 @@
+"""Shared serve-stack test helper: a model-free engine implementing
+the exact ``ServeEngine`` surface the pool/gateway/autoscaler drive
+(submit / step / idle / queue / slot_req / batch / max_queue /
+tokens_generated / ticks), so routing, backpressure, scaling and
+streaming mechanics are tested in milliseconds.  Token values are a
+pure function of (rid, index), which makes stream ordering and
+replica-independence assertable.  Real-model token parity through the
+pool lives in tests/test_serve_consistency.py."""
+
+import collections
+import time
+
+from repro.launch.serve import QueueFull, Request
+
+
+def fake_token(rid: int, index: int) -> int:
+    return rid * 1000 + index
+
+
+class FakeEngine:
+    """Deterministic stand-in: admission fills free slots in queue
+    order, every tick appends one token per occupied slot, a request
+    completes after ``max_new_tokens`` tokens."""
+
+    def __init__(self, cfg=None, *, batch_size=2, max_queue=None,
+                 metrics=None, replica="0", **_):
+        self.cfg = cfg
+        self.batch = batch_size
+        self.max_queue = max_queue
+        self.metrics = metrics
+        self.replica = replica
+        self.queue: collections.deque[Request] = collections.deque()
+        self.slot_req: list[Request | None] = [None] * batch_size
+        self.ticks = 0
+        self.tokens_generated = 0
+
+    def submit(self, req: Request) -> None:
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            raise QueueFull(req.rid, len(self.queue), self.max_queue)
+        if req.t_submit is None:
+            req.t_submit = time.monotonic()
+            req.wall_time = time.time()
+        self.queue.append(req)
+
+    def _admit_all(self) -> None:
+        for i, r in enumerate(self.slot_req):
+            if r is None and self.queue:
+                req = self.queue.popleft()
+                req.t_admit = time.monotonic()
+                req.out_tokens.append(fake_token(req.rid, 0))
+                req.t_first = time.monotonic()
+                self.tokens_generated += 1
+                if req.max_new_tokens <= 1:
+                    req.done = True
+                    req.t_done = time.monotonic()
+                else:
+                    self.slot_req[i] = req
+
+    def step(self) -> int:
+        self._admit_all()
+        n = 0
+        for i, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            req.out_tokens.append(
+                fake_token(req.rid, len(req.out_tokens)))
+            self.tokens_generated += 1
+            n += 1
+            if len(req.out_tokens) >= req.max_new_tokens:
+                req.done = True
+                req.t_done = time.monotonic()
+                self.slot_req[i] = None
+        self.ticks += 1
+        return n
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and all(r is None for r in self.slot_req)
+
+
+def fake_factory(batch_size=2, max_queue=None):
+    """engine_factory for ReplicaPool(..., engine_factory=...)."""
+    def make(idx, policy):
+        return FakeEngine(batch_size=batch_size, max_queue=max_queue,
+                          replica=str(idx))
+    return make
+
+
+def make_fake_pool(replicas=2, *, batch_size=2, max_queue=None,
+                   metrics=None, routing="least_loaded",
+                   max_replicas=None):
+    from repro.serve.pool import ReplicaPool
+    return ReplicaPool(
+        None, None, replicas=replicas, batch_size=batch_size,
+        max_queue=max_queue, routing=routing, metrics=metrics,
+        max_replicas=max_replicas,
+        engine_factory=fake_factory(batch_size, max_queue))

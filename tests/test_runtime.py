@@ -162,6 +162,21 @@ class TestMonitor:
         s = mon.stop()
         assert s.achieved_tflops == pytest.approx(1.0, rel=0.05)
 
+    def test_even_window_median_is_two_point(self):
+        """Regression: stop() used ts[n // 2], the UPPER of the middle
+        pair, for even windows — inflating the median and the MAD scale
+        the z-score divides by. [1, 2, 3, 10] ms must give median
+        2.5 ms (not 3) and MAD 1.0 ms (not 2)."""
+        mon = StepMonitor(window=8)
+        for dt in (0.001, 0.002, 0.003, 0.010):
+            s = mon.observe(dt)
+        assert s.median_s == pytest.approx(0.0025)
+        # |t - 2.5| sorted = [0.5, 0.5, 1.5, 7.5] -> two-point 1.0
+        assert s.mad_s == pytest.approx(0.001)
+        # odd window: plain middle element
+        s = mon.observe(0.004)
+        assert s.median_s == pytest.approx(0.003)
+
 
 MESH_PROG = textwrap.dedent("""
     import os

@@ -1,0 +1,210 @@
+"""Gateway protocol tests over real localhost connections: token
+streaming order, 429 + Retry-After backpressure, session affinity
+through the HTTP surface, /metrics and /healthz.  Engines are the
+model-free FakeEngine — the protocol layer is what's under test here;
+real-model parity lives in test_serve_consistency.py."""
+
+import asyncio
+import json
+import re
+
+from repro.serve.gateway import Gateway
+from repro.serve.metrics import MetricsRegistry
+from serve_testlib import fake_token, make_fake_pool
+
+
+async def _http(port, method, path, body=None):
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    data = json.dumps(body).encode() if body is not None else b""
+    head = (f"{method} {path} HTTP/1.1\r\nHost: t\r\n"
+            f"Content-Length: {len(data)}\r\n\r\n")
+    writer.write(head.encode() + data)
+    await writer.drain()
+    raw = await asyncio.wait_for(reader.read(-1), timeout=30)
+    writer.close()
+    return raw.decode()
+
+
+def _status(resp: str) -> int:
+    return int(resp.split(" ", 2)[1])
+
+
+def _ndjson(resp: str) -> list[dict]:
+    return [json.loads(ln) for ln in resp.splitlines()
+            if ln.startswith("{")]
+
+
+def _run(coro):
+    return asyncio.run(asyncio.wait_for(coro, timeout=60))
+
+
+def _gateway(**pool_kw):
+    reg = MetricsRegistry()
+    pool = make_fake_pool(metrics=reg, **pool_kw)
+    return Gateway(pool, port=0, metrics=reg), pool, reg
+
+
+class TestStreaming:
+    def test_tokens_stream_in_generation_order(self):
+        async def scenario():
+            gw, _, _ = _gateway(replicas=1)
+            await gw.start()
+            resp = await _http(gw.port, "POST", "/v1/generate",
+                               {"prompt": [3, 4, 5],
+                                "max_new_tokens": 5, "stream": True})
+            await gw.stop()
+            return resp
+
+        resp = _run(scenario())
+        assert _status(resp) == 200
+        assert "Transfer-Encoding: chunked" in resp
+        assert "application/x-ndjson" in resp
+        lines = _ndjson(resp)
+        body, tail = lines[:-1], lines[-1]
+        rid = body[0]["rid"]
+        # strict generation order, token values the engine's pure fn
+        assert [ln["index"] for ln in body] == list(range(5))
+        assert [ln["token"] for ln in body] == \
+            [fake_token(rid, j) for j in range(5)]
+        assert tail["done"] is True and tail["n_tokens"] == 5
+        assert tail["latency_s"] >= tail["ttft_s"] >= 0
+
+    def test_concurrent_streams_interleave_consistently(self):
+        async def scenario():
+            gw, _, _ = _gateway(replicas=2)
+            await gw.start()
+            resps = await asyncio.gather(*[
+                _http(gw.port, "POST", "/v1/generate",
+                      {"prompt": [3, 4], "max_new_tokens": 4,
+                       "stream": True})
+                for _ in range(4)])
+            await gw.stop()
+            return resps
+
+        for resp in _run(scenario()):
+            lines = _ndjson(resp)
+            rid = lines[0]["rid"]
+            assert [ln["token"] for ln in lines[:-1]] == \
+                [fake_token(rid, j) for j in range(4)]
+
+    def test_unary_response(self):
+        async def scenario():
+            gw, _, _ = _gateway(replicas=1)
+            await gw.start()
+            resp = await _http(gw.port, "POST", "/v1/generate",
+                               {"prompt": [7, 8], "max_new_tokens": 3,
+                                "stream": False})
+            await gw.stop()
+            return resp
+
+        resp = _run(scenario())
+        assert _status(resp) == 200
+        payload = json.loads(resp.split("\r\n\r\n", 1)[1])
+        assert payload["tokens"] == \
+            [fake_token(payload["rid"], j) for j in range(3)]
+
+
+class TestBackpressure:
+    def test_429_with_retry_after_past_watermark(self):
+        async def scenario():
+            # tiny capacity: 1 replica, 1 slot, queue watermark 1,
+            # gateway watermark right above it
+            gw, pool, reg = _gateway(replicas=1, batch_size=1,
+                                     max_queue=1)
+            gw.max_inflight = 2
+            await gw.start()
+            resps = await asyncio.gather(*[
+                _http(gw.port, "POST", "/v1/generate",
+                      {"prompt": [3], "max_new_tokens": 40,
+                       "stream": False})
+                for _ in range(8)])
+            await gw.stop()
+            return resps, reg
+
+        resps, reg = _run(scenario())
+        codes = sorted(_status(r) for r in resps)
+        assert 429 in codes, codes
+        assert codes.count(200) <= 2      # watermark held
+        rejected = [r for r in resps if _status(r) == 429]
+        for r in rejected:
+            assert re.search(r"Retry-After: \d+", r)
+            body = json.loads(r.split("\r\n\r\n", 1)[1])
+            assert body["error"] == "queue full"
+            assert body["retry_after_s"] > 0
+        assert reg.counter("gateway_rejected").value() == len(rejected)
+
+    def test_oversized_and_malformed_requests(self):
+        async def scenario():
+            gw, _, _ = _gateway(replicas=1)
+            await gw.start()
+            bad = await _http(gw.port, "POST", "/v1/generate",
+                              {"prompt": []})
+            missing = await _http(gw.port, "POST", "/v1/generate",
+                                  {"max_new_tokens": 4})
+            nowhere = await _http(gw.port, "GET", "/nope")
+            await gw.stop()
+            return bad, missing, nowhere
+
+        bad, missing, nowhere = _run(scenario())
+        assert _status(bad) == 400
+        assert _status(missing) == 400
+        assert _status(nowhere) == 404
+
+
+class TestAffinityAndOps:
+    def test_session_affinity_via_http(self):
+        async def scenario():
+            gw, pool, _ = _gateway(replicas=3)
+            await gw.start()
+            # interleave two sessions; replicas are reported in the
+            # unary payload
+            reps = {}
+            for sess in ("alice", "bob", "alice", "bob", "alice"):
+                resp = await _http(
+                    gw.port, "POST", "/v1/generate",
+                    {"prompt": [3, 4], "max_new_tokens": 2,
+                     "session": sess, "stream": False})
+                payload = json.loads(resp.split("\r\n\r\n", 1)[1])
+                reps.setdefault(sess, []).append(payload["replica"])
+            await gw.stop()
+            return reps, pool
+
+        reps, pool = _run(scenario())
+        assert len(set(reps["alice"])) == 1     # pinned
+        assert len(set(reps["bob"])) == 1
+        assert pool.replica_for_session("alice") == reps["alice"][0]
+
+    def test_streaming_reports_replica_header(self):
+        async def scenario():
+            gw, _, _ = _gateway(replicas=2)
+            await gw.start()
+            resp = await _http(gw.port, "POST", "/v1/generate",
+                               {"prompt": [5], "max_new_tokens": 2,
+                                "session": "s1", "stream": True})
+            await gw.stop()
+            return resp
+
+        resp = _run(scenario())
+        assert re.search(r"X-Replica: \d+", resp)
+
+    def test_metrics_and_healthz(self):
+        async def scenario():
+            gw, _, _ = _gateway(replicas=2)
+            await gw.start()
+            await _http(gw.port, "POST", "/v1/generate",
+                        {"prompt": [3], "max_new_tokens": 2,
+                         "stream": False})
+            metrics = await _http(gw.port, "GET", "/metrics")
+            health = await _http(gw.port, "GET", "/healthz")
+            await gw.stop()
+            return metrics, health
+
+        metrics, health = _run(scenario())
+        assert _status(metrics) == 200
+        assert "text/plain" in metrics
+        # gateway series are exposed through the scrape endpoint
+        assert "# TYPE gateway_requests counter" in metrics
+        assert "gateway_requests_total 1" in metrics
+        assert _status(health) == 200
+        h = json.loads(health.split("\r\n\r\n", 1)[1])
+        assert h["ok"] is True and h["replicas"] == 2

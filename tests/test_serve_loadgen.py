@@ -1,0 +1,210 @@
+"""Load generator + serve SLO gate: workload determinism, open-loop
+rejection accounting, the BENCH_serve.json point schema, and
+benchmarks.check_regress's serve-file gating (pass / latency regression
+/ goodput drop / rejection growth / dropped point)."""
+
+import copy
+import json
+
+import numpy as np
+import pytest
+
+from benchmarks import check_regress
+from repro.serve.loadgen import LoadSpec, run_point, sample_workload
+from serve_testlib import make_fake_pool
+
+VOCAB = 256
+
+GATED_FIELDS = ("arrival_rate", "requests", "completed", "rejected",
+                "rejection_rate", "p50_ttft_ticks", "p99_ttft_ticks",
+                "p50_e2e_ticks", "p99_e2e_ticks", "goodput_tok_per_tick")
+
+
+def _point(rate, *, replicas=2, batch_size=2, max_queue=4,
+           spec=None):
+    pool = make_fake_pool(replicas=replicas, batch_size=batch_size,
+                          max_queue=max_queue)
+    return run_point(pool, spec or LoadSpec(n_requests=20, seed=3),
+                     rate, vocab=VOCAB)
+
+
+def _strip_wall(p):
+    return {k: v for k, v in p.items()
+            if k not in ("wall_s", "tok_per_s_wall")}
+
+
+class TestWorkload:
+    def test_same_seed_same_workload(self):
+        spec = LoadSpec(n_requests=12, seed=7)
+        a = sample_workload(spec, 0.5, VOCAB)
+        b = sample_workload(spec, 0.5, VOCAB)
+        assert [t for t, _ in a] == [t for t, _ in b]
+        for (_, ra), (_, rb) in zip(a, b):
+            np.testing.assert_array_equal(ra.prompt, rb.prompt)
+            assert ra.max_new_tokens == rb.max_new_tokens
+
+    def test_rate_and_seed_change_workload(self):
+        spec = LoadSpec(n_requests=12, seed=7)
+        a = sample_workload(spec, 0.5, VOCAB)
+        b = sample_workload(spec, 2.0, VOCAB)
+        c = sample_workload(LoadSpec(n_requests=12, seed=8), 0.5, VOCAB)
+        assert [t for t, _ in a] != [t for t, _ in b]
+        assert any(not np.array_equal(ra.prompt, rc.prompt)
+                   for (_, ra), (_, rc) in zip(a, c))
+
+    def test_lengths_respect_bounds(self):
+        spec = LoadSpec(n_requests=200, max_prompt=10, max_out=5)
+        for t, req in sample_workload(spec, 1.0, VOCAB):
+            assert t >= 0
+            assert 1 <= len(req.prompt) <= 10
+            assert 1 <= req.max_new_tokens <= 5
+            assert req.prompt.min() >= 2 and req.prompt.max() < VOCAB
+
+    def test_arrivals_are_open_loop_monotone(self):
+        arrivals = [t for t, _ in
+                    sample_workload(LoadSpec(n_requests=50), 0.7, VOCAB)]
+        assert arrivals == sorted(arrivals)
+
+
+class TestRunPoint:
+    def test_point_is_deterministic(self):
+        a = _strip_wall(_point(1.0))
+        b = _strip_wall(_point(1.0))
+        assert a == b
+
+    def test_schema_has_all_gated_fields(self):
+        p = _point(0.5)
+        for field in GATED_FIELDS:
+            assert field in p, field
+        assert p["completed"] + p["rejected"] == p["requests"]
+        assert p["total_ticks"] > 0
+        assert p["p99_e2e_ticks"] >= p["p50_e2e_ticks"]
+        assert p["p99_e2e_ticks"] >= p["p99_ttft_ticks"]
+
+    def test_overload_rejects_and_bounds_latency(self):
+        """Past saturation the open loop converts backlog into
+        rejections — latency of ADMITTED work stays bounded by the
+        queue watermark instead of growing with offered load."""
+        spec = LoadSpec(n_requests=40, seed=1)
+        calm = _point(0.05, replicas=1, batch_size=1, max_queue=2,
+                      spec=spec)
+        storm = _point(8.0, replicas=1, batch_size=1, max_queue=2,
+                       spec=spec)
+        assert calm["rejected"] == 0
+        assert storm["rejected"] > 0
+        assert storm["rejection_rate"] == \
+            pytest.approx(storm["rejected"] / 40)
+        # bounded queue => bounded TTFT even at 40x the arrival rate
+        assert storm["p99_ttft_ticks"] <= \
+            calm["p99_ttft_ticks"] + 3 * 2 + 4
+
+    def test_more_replicas_help_under_load(self):
+        spec = LoadSpec(n_requests=30, seed=5)
+        one = _point(2.0, replicas=1, max_queue=6, spec=spec)
+        three = _point(2.0, replicas=3, max_queue=6, spec=spec)
+        assert three["rejected"] <= one["rejected"]
+        assert three["goodput_tok_per_tick"] >= \
+            one["goodput_tok_per_tick"]
+
+
+def _payload(points):
+    return {"bench": "serve", "points": points}
+
+
+@pytest.fixture
+def gate_dirs(tmp_path):
+    base = tmp_path / "baselines"
+    res = tmp_path / "results"
+    base.mkdir()
+    res.mkdir()
+    points = [_strip_wall(_point(r)) for r in (0.3, 1.0)]
+    for d in (base, res):
+        (d / check_regress.SERVE_FILE).write_text(
+            json.dumps(_payload(points)))
+    return base, res, points
+
+
+class TestServeGate:
+    def _check(self, base, res, tol=0.10):
+        return check_regress.check_serve_file(
+            check_regress.SERVE_FILE, tol=tol,
+            baseline_dir=str(base), result_dir=str(res))
+
+    def _rewrite(self, res, points):
+        (res / check_regress.SERVE_FILE).write_text(
+            json.dumps(_payload(points)))
+
+    def test_identical_results_pass(self, gate_dirs):
+        base, res, _ = gate_dirs
+        assert self._check(base, res) == []
+
+    def test_one_tick_floor_absorbs_jitter(self, gate_dirs):
+        base, res, points = gate_dirs
+        pts = copy.deepcopy(points)
+        pts[0]["p50_ttft_ticks"] += 0.9      # < 1-tick absolute floor
+        self._rewrite(res, pts)
+        assert self._check(base, res) == []
+
+    def test_latency_regression_fails(self, gate_dirs):
+        base, res, points = gate_dirs
+        pts = copy.deepcopy(points)
+        pts[1]["p99_ttft_ticks"] = pts[1]["p99_ttft_ticks"] * 1.2 + 2
+        self._rewrite(res, pts)
+        fails = self._check(base, res)
+        assert len(fails) == 1 and "p99_ttft_ticks" in fails[0]
+
+    def test_goodput_drop_fails(self, gate_dirs):
+        base, res, points = gate_dirs
+        pts = copy.deepcopy(points)
+        pts[0]["goodput_tok_per_tick"] *= 0.5
+        self._rewrite(res, pts)
+        fails = self._check(base, res)
+        assert fails and "goodput" in fails[0]
+
+    def test_rejection_growth_fails(self, gate_dirs):
+        base, res, points = gate_dirs
+        pts = copy.deepcopy(points)
+        pts[1]["rejection_rate"] = pts[1]["rejection_rate"] + 0.2
+        self._rewrite(res, pts)
+        fails = self._check(base, res)
+        assert fails and "rejection rate" in fails[0]
+
+    def test_dropped_point_fails_coverage(self, gate_dirs):
+        base, res, points = gate_dirs
+        self._rewrite(res, points[:1])
+        fails = self._check(base, res)
+        assert fails and "dropped from the sweep" in fails[0]
+
+    def test_main_dispatches_serve_file(self, gate_dirs):
+        base, res, _ = gate_dirs
+        rc = check_regress.main(
+            ["--files", check_regress.SERVE_FILE,
+             "--baseline-dir", str(base), "--result-dir", str(res)])
+        assert rc == 0
+
+    def test_update_refreshes_serve_baseline(self, gate_dirs):
+        base, res, points = gate_dirs
+        pts = copy.deepcopy(points)
+        pts[0]["p99_ttft_ticks"] = 99.0
+        self._rewrite(res, pts)
+        assert self._check(base, res) != []
+        rc = check_regress.main(
+            ["--update", "--files", check_regress.SERVE_FILE,
+             "--baseline-dir", str(base), "--result-dir", str(res)])
+        assert rc == 0
+        assert self._check(base, res) == []
+
+
+class TestCommittedBaseline:
+    def test_baseline_file_matches_schema(self):
+        """The committed serve baseline must carry every gated field at
+        every point — otherwise check_serve_file would KeyError in CI."""
+        import os
+        path = os.path.join(check_regress.BASELINE_DIR,
+                            check_regress.SERVE_FILE)
+        with open(path) as f:
+            payload = json.load(f)
+        assert payload["points"], "baseline sweep is empty"
+        for p in payload["points"]:
+            for field in GATED_FIELDS:
+                assert field in p, (field, p.get("arrival_rate"))

@@ -1,0 +1,214 @@
+"""Replica-pool mechanics: routing, session affinity, bounded
+admission, elastic scale events, and the autoscaler's decisions —
+all on the model-free FakeEngine (tests/serve_testlib.py).  Real-model
+token parity through the pool is in tests/test_serve_consistency.py."""
+
+import numpy as np
+import pytest
+
+from repro.launch.serve import QueueFull, Request
+from repro.serve.autoscale import AutoscalePolicy, Autoscaler
+from repro.serve.metrics import MetricsRegistry
+from serve_testlib import fake_token, make_fake_pool
+
+
+def _req(rid, n=4, session=None):
+    return Request(rid=rid, prompt=np.arange(3, dtype=np.int32),
+                   max_new_tokens=n, session=session)
+
+
+class TestRouting:
+    def test_least_loaded_picks_emptiest(self):
+        pool = make_fake_pool(replicas=3)
+        assert pool.submit(_req(0)) == 0
+        assert pool.submit(_req(1)) == 1
+        assert pool.submit(_req(2)) == 2
+        # replica 1's queue drains first -> next request lands there
+        pool.replicas[1].engine.queue.clear()
+        assert pool.submit(_req(3)) == 1
+
+    def test_round_robin_cycles(self):
+        pool = make_fake_pool(replicas=3, routing="round_robin")
+        assert [pool.submit(_req(i)) for i in range(6)] == \
+            [0, 1, 2, 0, 1, 2]
+
+    def test_unknown_routing_rejected(self):
+        with pytest.raises(ValueError, match="routing"):
+            make_fake_pool(replicas=1, routing="random")
+
+    def test_run_completes_and_counts(self):
+        pool = make_fake_pool(replicas=2)
+        reqs = [_req(i, n=3 + i % 2) for i in range(5)]
+        stats = pool.run(reqs)
+        assert all(r.done for r in reqs)
+        assert stats["requests"] == 5 and stats["replicas"] == 2
+        assert stats["tokens"] == sum(len(r.out_tokens) for r in reqs)
+        # token values are (rid, index)-pure: replica placement did not
+        # change any request's stream
+        for r in reqs:
+            assert r.out_tokens == [fake_token(r.rid, j)
+                                    for j in range(len(r.out_tokens))]
+
+
+class TestAffinity:
+    def test_session_pins_to_first_replica(self):
+        pool = make_fake_pool(replicas=3)
+        first = pool.submit(_req(0, session="alice"))
+        # load the other replicas lightly; alice must stay pinned even
+        # when her replica is no longer least-loaded
+        pool.submit(_req(1))
+        assert pool.submit(_req(2, session="alice")) == first
+        assert pool.submit(_req(3, session="alice")) == first
+        assert pool.replica_for_session("alice") == first
+
+    def test_affinity_is_strict_under_overload(self):
+        """An overloaded pinned replica means backpressure, not a
+        silent rehome that forfeits KV locality."""
+        pool = make_fake_pool(replicas=2, max_queue=2)
+        pinned = pool.submit(_req(0, session="s"))
+        pool.submit(_req(1, session="s"))  # fills the queue watermark
+        with pytest.raises(QueueFull):
+            pool.submit(_req(3, session="s"))
+        # the OTHER replica still has space for unpinned work
+        assert pool.submit(_req(4)) != pinned
+
+    def test_scale_down_drops_pins(self):
+        pool = make_fake_pool(replicas=2, max_replicas=2)
+        pool.replicas[0].engine.queue.append(_req(99))  # bias load
+        idx = pool.submit(_req(0, session="bob"))
+        assert idx == 1
+        pool.scale_to(1)
+        assert pool.replica_for_session("bob") is None
+        # next turn re-routes to a surviving replica
+        assert pool.submit(_req(1, session="bob")) == 0
+
+
+class TestBoundedAdmission:
+    def test_burst_rejects_instead_of_growing(self):
+        """Oversized burst: every queue hits its watermark and further
+        submissions raise QueueFull — bounded memory, not OOM."""
+        pool = make_fake_pool(replicas=2, batch_size=2, max_queue=3)
+        accepted, rejected = 0, 0
+        for i in range(40):
+            try:
+                pool.submit(_req(i, n=8))
+                accepted += 1
+            except QueueFull:
+                rejected += 1
+        # capacity: 2 replicas x 3 queued; slots are empty pre-step
+        assert accepted == 6 and rejected == 34
+        assert pool.total_queued() == 6
+        while not pool.idle:
+            pool.step()
+
+    def test_unbounded_legacy_path(self):
+        pool = make_fake_pool(replicas=1, max_queue=None)
+        for i in range(100):
+            pool.submit(_req(i))
+        assert pool.total_queued() == 100
+
+
+class TestScaleEvents:
+    def test_scale_up_then_drain_down(self):
+        pool = make_fake_pool(replicas=1, max_replicas=3)
+        ev = pool.scale_to(3, reason="burst")
+        assert ev.old_n == 1 and ev.new_n == 3 and pool.n_active == 3
+        # occupy replica 2, then shrink: it must keep draining
+        pool.replicas[2].engine.submit(_req(0, n=6))
+        ev = pool.scale_to(1)
+        assert pool.n_active == 1
+        assert not pool.replicas[2].active
+        assert not pool.idle           # still draining
+        while not pool.idle:
+            pool.step()
+        assert pool.replicas[2].engine.slot_req == [None, None]
+        # new work only lands on the active replica
+        assert pool.submit(_req(1)) == 0
+
+    def test_scale_clamps_and_noops(self):
+        pool = make_fake_pool(replicas=2, max_replicas=2)
+        assert pool.scale_to(2) is None          # no-op
+        ev = pool.scale_to(99)                   # clamped to max
+        assert ev is None and pool.n_active == 2
+        ev = pool.scale_to(0)                    # clamped to 1
+        assert ev.new_n == 1
+
+    def test_scale_events_recorded_and_metered(self):
+        reg = MetricsRegistry()
+        pool = make_fake_pool(replicas=1, max_replicas=4, metrics=reg)
+        pool.scale_to(3, reason="test")
+        pool.scale_to(2)
+        assert [e.new_n for e in pool.scale_events] == [3, 2]
+        assert reg.counter("serve_scale_events").value() == 2
+        assert reg.gauge("serve_active_replicas").value() == 2
+        assert "scale" in pool.scale_events[0].describe()
+
+
+class TestAutoscaler:
+    def _scaler(self, pool, **kw):
+        defaults = dict(min_replicas=1, max_replicas=3, queue_high=2.0,
+                        queue_low=0.25, cooldown=2)
+        defaults.update(kw)
+        return Autoscaler(pool, AutoscalePolicy(**defaults),
+                          cfg=None, n_devices=1)
+
+    def test_scales_up_under_queue_pressure(self):
+        pool = make_fake_pool(replicas=1, batch_size=1, max_replicas=3)
+        sc = self._scaler(pool)
+        for i in range(8):
+            pool.submit(_req(i, n=8))
+        events = []
+        for _ in range(30):
+            tokens = pool.step()
+            ev = sc.observe(tokens)
+            if ev:
+                events.append(ev)
+            if pool.idle:
+                break
+        assert events and events[0].new_n == 2
+        assert pool.n_active >= 2
+        assert all("queue/replica" in e.reason for e in events
+                   if e.new_n > e.old_n)
+
+    def test_scales_down_when_idle(self):
+        pool = make_fake_pool(replicas=3, max_replicas=3)
+        sc = self._scaler(pool)
+        evs = [sc.observe(pool.step()) for _ in range(12)]
+        fired = [e for e in evs if e]
+        assert fired and fired[0].new_n == 2
+        assert pool.n_active < 3
+
+    def test_cooldown_rate_limits(self):
+        pool = make_fake_pool(replicas=3, max_replicas=3)
+        sc = self._scaler(pool, cooldown=100)
+        evs = [sc.observe(pool.step()) for _ in range(20)]
+        assert len([e for e in evs if e]) <= 1
+
+    def test_decide_is_pure(self):
+        pool = make_fake_pool(replicas=1, batch_size=1)
+        sc = self._scaler(pool)
+        for i in range(6):
+            pool.submit(_req(i))
+        target, reason = sc.decide()
+        assert target == 2 and "queue/replica" in reason
+        assert pool.n_active == 1      # no side effect
+
+    def test_mesh_resolves_per_replica_budget(self):
+        """Scale events re-split the device budget and re-resolve the
+        per-replica mesh via runtime.mesh.mesh_spec_for — resharder_for
+        semantics. On 1 device every split is the identity mesh."""
+        pool = make_fake_pool(replicas=1, max_replicas=2)
+        sc = self._scaler(pool)
+        spec = sc.mesh_for(2)
+        assert spec.size == 1 and spec.is_identity
+        # with a synthetic 8-device budget the split is real
+        sc8 = Autoscaler(pool, AutoscalePolicy(max_replicas=2),
+                         cfg=None, n_devices=8)
+        assert sc8.mesh_for(2).size == 4
+        assert sc8.mesh_for(1).size == 8
+
+    def test_policy_validation(self):
+        with pytest.raises(ValueError):
+            AutoscalePolicy(min_replicas=3, max_replicas=2)
+        with pytest.raises(ValueError):
+            AutoscalePolicy(queue_low=5.0, queue_high=1.0)
