@@ -12,8 +12,11 @@ of the ``core.ops`` registry) and reports
 
 Mask modes cover the shapes the models actually run: ``causal``
 (train/prefill), ``sliding`` (local layers, window = s/4), ``full``
-(encoder/cross), and ``decode`` (single token against a stale-slot
-linear cache at PER-ROW positions — the continuous-batching cell).
+(encoder/cross), ``decode`` (single token against a stale-slot linear
+cache at PER-ROW positions — the continuous-batching cell), and
+``paged`` (the SAME decode problem stored through a page table — the
+paged-KV serving layout; its oracle is the dense decode oracle because
+paging is a pure storage indirection).
 
 The machine-readable result lands in ``BENCH_attention.json`` (see
 ``benchmarks.run``); ``benchmarks.check_regress`` gates CI on it.
@@ -21,6 +24,7 @@ The machine-readable result lands in ``BENCH_attention.json`` (see
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -29,6 +33,7 @@ import numpy as np
 
 from benchmarks import common
 from repro.core import ops
+from repro.core.ops import paged
 from repro.core.precision import num_passes
 
 # The mask axis comes from the registry's family spec (OpSpec.bench_axes)
@@ -55,6 +60,23 @@ def _problem(s: int, *, batch: int = 1, kv_heads: int = 2, group: int = 2,
     return q, k, v, qd, pos
 
 
+def _paged_pool(k, v, *, page_size: int = 16) -> paged.PagedKVCache:
+    """The dense decode cache re-stored through a page table (stale junk
+    rows and all — the masks hide them, exactly as in the dense path)."""
+    b, s, kv, hd = k.shape
+    n_log = paged.num_logical_pages(s, page_size)
+    pool = paged.init_paged(b, s, kv, hd, page_size=page_size,
+                            num_pages=1 + b * n_log, dtype=k.dtype)
+    table = (1 + jnp.arange(b * n_log, dtype=jnp.int32)).reshape(b, n_log)
+    pad = n_log * page_size - s
+    to_pages = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))
+                                 ).reshape(b * n_log, page_size, kv, hd)
+    return dataclasses.replace(
+        pool, page_table=table,
+        k_pages=pool.k_pages.at[table.reshape(-1)].set(to_pages(k)),
+        v_pages=pool.v_pages.at[table.reshape(-1)].set(to_pages(v)))
+
+
 def _oracle(q, k, v, mask: str, *, window: int | None,
             pos=None) -> np.ndarray:
     """Dense fp64 softmax attention under the mask mode."""
@@ -70,12 +92,12 @@ def _oracle(q, k, v, mask: str, *, window: int | None,
         keep = (ki <= qi) & (ki > qi - window)
     elif mask == "full":
         keep = np.ones((s_q, s_k), bool)
-    elif mask == "decode":
+    elif mask in ("decode", "paged"):
         keep = (ki <= np.asarray(pos)[:, None])[:, None, :]  # (B,1,S)
     else:
         raise ValueError(mask)
     sc = np.einsum("bqkgd,bskd->bkgqs", qn, kn)
-    if mask == "decode":
+    if mask in ("decode", "paged"):
         sc = np.where(keep[:, None, None], sc, -1e30)
     else:
         sc = np.where(keep[None, None, None], sc, -1e30)
@@ -85,9 +107,12 @@ def _oracle(q, k, v, mask: str, *, window: int | None,
 
 
 def _dispatch(backend: str, policy: str, mask: str, q, k, v, qd, pos,
-              window: int | None, interpret: bool):
+              window: int | None, interpret: bool, pool=None):
     route = ops.Route(precision=policy, backends={"attention": backend},
                       interpret=interpret)
+    if mask == "paged":
+        return ops.attention_paged_decode(qd, pool, pos, window=None,
+                                          softcap=None, policy=route)
     if mask == "decode":
         return ops.attention_decode(qd, k, v, pos, window=None,
                                     softcap=None, policy=route)
@@ -117,7 +142,8 @@ def bench_matrix(s: int = 128, reps: int = 2, policies=None,
     q, k, v, qd, pos = _problem(s, batch=batch, kv_heads=kv_heads,
                                 group=group, head_dim=head_dim)
     heads = kv_heads * group
-    oracles = {m: _oracle(qd if m == "decode" else q, k, v, m,
+    pool = _paged_pool(k, v) if "paged" in masks else None
+    oracles = {m: _oracle(qd if m in ("decode", "paged") else q, k, v, m,
                           window=window, pos=pos) for m in masks}
     points = {}
     rows = []
@@ -125,11 +151,12 @@ def bench_matrix(s: int = 128, reps: int = 2, policies=None,
         for policy in policies:
             for mask in masks:
                 fn = functools.partial(_dispatch, backend, policy, mask,
-                                       q, k, v, qd, pos, window, interpret)
+                                       q, k, v, qd, pos, window, interpret,
+                                       pool)
                 t = common.time_fn(fn, reps=reps, warmup=1)
                 err = float(np.max(np.abs(
                     np.asarray(fn(), np.float64) - oracles[mask])))
-                s_q = 1 if mask == "decode" else s
+                s_q = 1 if mask in ("decode", "paged") else s
                 tf = common.hmean_tflops(
                     attn_flops(s_q, s, batch, heads, head_dim), t["mean_s"])
                 points[f"{backend}/{policy}/{mask}"] = {

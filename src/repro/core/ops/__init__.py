@@ -101,8 +101,17 @@ from repro.core.ops.attention import (
     AttentionOps,
     attention_decode,
     attention_forward,
+    attention_paged_decode,
 )
 from repro.core.ops.grouped import grouped_matmul, grouped_tiles
+from repro.core.ops.paged import (
+    PAGE_QUANT_BOUND,
+    PagedKVCache,
+    gather_dense,
+    init_paged,
+    num_logical_pages,
+    write_kv,
+)
 
 __all__ = [
     # registry
@@ -123,5 +132,9 @@ __all__ = [
     # families
     "gemm", "routed_einsum", "xla_policy_einsum",
     "AttentionOps", "attention_decode", "attention_forward",
+    "attention_paged_decode",
     "grouped_matmul", "grouped_tiles",
+    # paged KV
+    "PAGE_QUANT_BOUND", "PagedKVCache", "gather_dense", "init_paged",
+    "num_logical_pages", "write_kv",
 ]

@@ -36,19 +36,26 @@ from repro.core.ops.registry import (LADDER_BOUNDS, OpSpec, Partitioning,
                                      register_family, register_impl)
 from repro.core.ops.route import Route, as_route
 
-__all__ = ["AttentionOps", "attention_forward", "attention_decode"]
+__all__ = ["AttentionOps", "attention_forward", "attention_decode",
+           "attention_paged_decode"]
 
 
 class AttentionOps(NamedTuple):
-    """The two entry points an attention impl registers."""
+    """The entry points an attention impl registers.
+
+    ``paged_decode`` (optional) decodes against a
+    ``core.ops.paged.PagedKVCache`` instead of the dense per-slot
+    cache: ``paged_decode(q, cache, pos, *, window, softcap, route)``.
+    """
 
     forward: Callable
     decode: Callable
+    paged_decode: Callable | None = None
 
 
 # The feature tags every full-surface attention impl carries; route
-# validation / the decode dispatcher check against these.
-FULL_FEATURES = ("vjp", "decode", "gqa", "softcap",
+# validation / the decode dispatchers check against these.
+FULL_FEATURES = ("vjp", "decode", "paged_decode", "gqa", "softcap",
                  "masks:causal", "masks:sliding", "masks:full")
 
 
@@ -92,8 +99,9 @@ register_family(OpSpec(
     reference="xla",
     label="attention backend",        # historical error wording
     layer_families=("attention",),
-    bench_policies=("bf16", "refine_a", "refine_ab", "f32"),
-    bench_axes=(("mask", ("causal", "sliding", "full", "decode")),),
+    bench_policies=("int8", "bf16", "refine_a", "refine_ab", "f32"),
+    bench_axes=(("mask", ("causal", "sliding", "full", "decode",
+                          "paged")),),
     make_problem=_make_problem,
     run=_run,
     oracle=_oracle,
@@ -136,6 +144,19 @@ def _fused_decode(q, k_cache, v_cache, pos, *, window, softcap, route):
         precision=route.precision, interpret=route.resolved_interpret())
 
 
+def _xla_paged_decode(q, cache, pos, *, window, softcap, route):
+    from repro.models.attention import reference_paged_decode
+    return reference_paged_decode(q, cache, pos, window=window,
+                                  softcap=softcap, policy=route)
+
+
+def _fused_paged_decode(q, cache, pos, *, window, softcap, route):
+    from repro.kernels.attention_paged import flash_paged_decode
+    return flash_paged_decode(
+        q, cache, pos, window=window, softcap=softcap,
+        precision=route.precision, interpret=route.resolved_interpret())
+
+
 # Batch shards over dp and KV heads over tp for any impl (independent
 # slices — exact).  Only the reference impl additionally sequence-shards
 # (sp): its chunked online-softmax walk accepts an offset mask, so KV
@@ -157,13 +178,15 @@ _ATTN_PARTITIONING = Partitioning(
 register_impl("attention", "xla", fused_policies=(),
               features=FULL_FEATURES,
               partitioning=_ATTN_PARTITIONING_SP)(
-    AttentionOps(forward=_xla_forward, decode=_xla_decode))
+    AttentionOps(forward=_xla_forward, decode=_xla_decode,
+                 paged_decode=_xla_paged_decode))
 
 register_impl("attention", "pallas_fused",
               fused_policies=registry.ALL_POLICIES,
               features=FULL_FEATURES,
               partitioning=_ATTN_PARTITIONING)(
-    AttentionOps(forward=_fused_forward, decode=_fused_decode))
+    AttentionOps(forward=_fused_forward, decode=_fused_decode,
+                 paged_decode=_fused_paged_decode))
 
 
 def attention_forward(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -215,3 +238,34 @@ def attention_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
             route=route)
     return impl.fn.decode(q, k_cache, v_cache, pos, window=window,
                           softcap=softcap, route=shard.unsharded_route(route))
+
+
+def attention_paged_decode(q: jax.Array, cache, pos: jax.Array, *,
+                           window: int | None = None,
+                           softcap: float | None = None,
+                           policy: "str | Route" = "bf16") -> jax.Array:
+    """Single-token fused-attention decode against a PAGED KV cache.
+
+    ``cache`` is a post-write ``core.ops.paged.PagedKVCache`` (the
+    current token's row already scattered through the page table);
+    ``pos`` the per-row (B,) position vector.  Logical rows mean what
+    dense rows mean (``pos`` / ``pos % s_cache``), so the mask
+    semantics are identical to :func:`attention_decode`.
+
+    The paged pool is engine-local, per replica: a mesh on the route
+    only shards the model math, so paged decode always runs the
+    single-device impl entry (the replica pool is the scale-out axis).
+    """
+    route = as_route(policy)
+    impl = registry.get_impl("attention", route.impl("attention"))
+    if (not impl.capabilities.has("paged_decode")
+            or getattr(impl.fn, "paged_decode", None) is None):
+        raise ValueError(
+            f"attention impl {impl.name!r} does not support capability "
+            f"'paged_decode' (features: "
+            f"{sorted(impl.capabilities.features)}); route decode to a "
+            f"paged-capable impl, e.g. "
+            f"{registry.reference_impl('attention')!r}")
+    return impl.fn.paged_decode(
+        q, cache, pos, window=window, softcap=softcap,
+        route=shard.unsharded_route(route))

@@ -133,7 +133,8 @@ def _xla_gemm(a, b, *, policy, tiles, interpret):
 # subsystem (a top-level import would cycle).
 
 @register_impl("gemm", "pallas",
-               fused_policies=("bf16", "refine_a", "bf16x3", "refine_ab"),
+               fused_policies=("fp8", "int8", "fp8x3", "int8x3",
+                               "bf16", "refine_a", "bf16x3", "refine_ab"),
                features=("vjp",), pads_to_tiles=True,
                tile_schema=("bm", "bn", "bk"),
                partitioning=_GEMM_PARTITIONING)
@@ -142,6 +143,10 @@ def _pallas_gemm(a, b, *, policy, tiles, interpret):
         from repro.kernels.gemm_tiled import gemm_tiled
         return gemm_tiled(a, b, bm=tiles.bm, bn=tiles.bn, bk=tiles.bk,
                           interpret=interpret)
+    if policy in ("fp8", "int8", "fp8x3", "int8x3"):
+        from repro.kernels.gemm_lowp import gemm_lowp
+        return gemm_lowp(a, b, policy=policy, bm=tiles.bm, bn=tiles.bn,
+                         bk=tiles.bk, interpret=interpret)
     from repro.kernels.gemm_refined import gemm_refined
     return gemm_refined(a, b, policy=policy, bm=tiles.bm, bn=tiles.bn,
                         bk=tiles.bk, interpret=interpret)

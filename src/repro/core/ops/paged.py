@@ -1,0 +1,174 @@
+"""Paged KV cache: fixed-size pages behind a per-slot page table.
+
+The dense decode cache allocates every slot its WORST-CASE capacity
+(``(B, S_cache, Kv, hd)`` per layer) even when most requests are short.
+This module replaces that layout with a shared page pool:
+
+    k_pages / v_pages   (P, page_size, Kv, hd)   physical page payload
+    page_table          (B, n_logical) int32     per-slot logical->physical
+
+One logical row keeps the EXACT meaning it had in the dense cache —
+row ``pos`` for linear layers, row ``pos % s_cache`` for ring-buffer
+sliding-window layers — so every mask in ``models/attention.py`` and
+the fused decode kernels applies unchanged; only the storage indirects
+through the table: logical row ``j`` lives at
+``(page_table[b, j // page_size], j % page_size)``.
+
+Physical page 0 is the reserved TRASH page: freed and never-allocated
+table entries point there, so the jit'd engine tick — which decodes and
+writes EVERY slot, active or not — can never corrupt another slot's
+pages through a stale table row.  Allocation starts at page 1
+(``launch/serve.py`` owns the host-side free list).
+
+Optionally the payload is quantized: int8 pages with one fp32 scale per
+(page-row, kv-head) — ``k_scale / v_scale (P, page_size, Kv)`` — set at
+write time from the row's amax and applied at read time (gathered
+reference path, or in-kernel in the scalar-prefetched paged decode
+kernel).  ``PAGE_QUANT_BOUND`` is the declared max-abs output error of
+a quantized-page decode vs the dense f32 cache.
+
+The cache is a registered dataclass, so it rides ``lax.scan`` layer
+stacking (every array gains the leading ``(count,)`` dim; ``s_cache``
+stays static metadata) and jit boundaries like any other cache leaf.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "PagedKVCache",
+    "PAGE_QUANT_BOUND",
+    "init_paged",
+    "write_kv",
+    "gather_dense",
+    "quantize_rows",
+    "num_logical_pages",
+]
+
+# Declared max-abs output-error bound for int8-page decode vs the dense
+# f32 cache (U[-1,1]-scale activations; per-row/head amax scales keep
+# the value-side error ~0.5/127 of the row amax, and the softmax keeps
+# the score-side perturbation from compounding).
+PAGE_QUANT_BOUND = 5e-2
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedKVCache:
+    """Paged per-slot KV storage (see module docstring for layout)."""
+
+    k_pages: jax.Array            # (P, ps, Kv, hd) payload (or int8)
+    v_pages: jax.Array
+    page_table: jax.Array         # (B, n_logical) int32, 0 = trash page
+    k_scale: jax.Array | None     # (P, ps, Kv) f32 when quantized
+    v_scale: jax.Array | None
+    s_cache: int                  # static: logical capacity per slot
+
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
+
+    @property
+    def page_size(self) -> int:
+        return self.k_pages.shape[-3]
+
+    @property
+    def num_pages(self) -> int:
+        return self.k_pages.shape[-4]
+
+
+jax.tree_util.register_dataclass(
+    PagedKVCache,
+    data_fields=("k_pages", "v_pages", "page_table", "k_scale", "v_scale"),
+    meta_fields=("s_cache",))
+
+
+def num_logical_pages(s_cache: int, page_size: int) -> int:
+    """Logical pages per slot (capacity rounded up to whole pages)."""
+    return -(-s_cache // page_size)
+
+
+def init_paged(batch: int, s_cache: int, kv_heads: int, head_dim: int, *,
+               page_size: int, num_pages: int, quant: str | None = None,
+               dtype=jnp.bfloat16) -> PagedKVCache:
+    """All-zero pool with every table entry on the trash page (0)."""
+    if quant not in (None, "int8"):
+        raise ValueError(f"unsupported KV quantization {quant!r}; "
+                         f"one of (None, 'int8')")
+    n_log = num_logical_pages(s_cache, page_size)
+    payload_dtype = jnp.int8 if quant == "int8" else dtype
+    z = jnp.zeros((num_pages, page_size, kv_heads, head_dim), payload_dtype)
+    scale = (jnp.zeros((num_pages, page_size, kv_heads), jnp.float32)
+             if quant == "int8" else None)
+    return PagedKVCache(
+        k_pages=z, v_pages=z,
+        page_table=jnp.zeros((batch, n_log), jnp.int32),
+        k_scale=scale, v_scale=scale, s_cache=s_cache)
+
+
+def quantize_rows(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """int8-quantize KV rows with one amax scale per (..., head) row.
+
+    x: (..., hd) fp32-castable.  Returns (q int8 (..., hd),
+    scale f32 (...,)) with x ~= q * scale[..., None].
+    """
+    x = x.astype(jnp.float32)
+    amax = jnp.maximum(jnp.abs(x).max(axis=-1), jnp.float32(1e-30))
+    s = amax / 127.0
+    q = jnp.clip(jnp.round(x / s[..., None]), -127, 127).astype(jnp.int8)
+    return q, s
+
+
+def write_kv(cache: PagedKVCache, k_row: jax.Array, v_row: jax.Array,
+             slot: jax.Array) -> PagedKVCache:
+    """Write one (B, Kv, hd) KV row at per-row LOGICAL slot (B,).
+
+    The physical target is ``(page_table[b, slot // ps], slot % ps)``;
+    rows whose table entry is the trash page (inactive or unallocated
+    slots) land there harmlessly.  Quantized pools quantize the row and
+    store its scales alongside.
+    """
+    ps = cache.page_size
+    idx = (slot // ps)[:, None]                                # (B, 1)
+    page = jnp.take_along_axis(cache.page_table, idx, axis=1)[:, 0]
+    off = slot % ps                                            # (B,)
+    if cache.quantized:
+        qk, sk = quantize_rows(k_row)
+        qv, sv = quantize_rows(v_row)
+        return dataclasses.replace(
+            cache,
+            k_pages=cache.k_pages.at[page, off].set(qk),
+            v_pages=cache.v_pages.at[page, off].set(qv),
+            k_scale=cache.k_scale.at[page, off].set(sk),
+            v_scale=cache.v_scale.at[page, off].set(sv))
+    return dataclasses.replace(
+        cache,
+        k_pages=cache.k_pages.at[page, off].set(
+            k_row.astype(cache.k_pages.dtype)),
+        v_pages=cache.v_pages.at[page, off].set(
+            v_row.astype(cache.v_pages.dtype)))
+
+
+def gather_dense(cache: PagedKVCache) -> tuple[jax.Array, jax.Array]:
+    """Materialize the dense per-slot view: (B, s_cache, Kv, hd) fp32 x2.
+
+    Unallocated logical pages gather the trash page; their rows are
+    excluded by the caller's position masks exactly as never-written
+    dense rows are.  The reference paged-decode path is this gather
+    followed by the UNCHANGED dense decode math — which is what makes
+    unquantized paged decode token-exact vs the ring buffer.
+    """
+    b = cache.page_table.shape[0]
+
+    def pull(pages, scale):
+        x = pages[cache.page_table]            # (B, n_log, ps, Kv, hd)
+        x = x.astype(jnp.float32)
+        if scale is not None:
+            x = x * scale[cache.page_table][..., None]
+        return x.reshape(b, -1, *x.shape[3:])[:, :cache.s_cache]
+
+    return (pull(cache.k_pages, cache.k_scale),
+            pull(cache.v_pages, cache.v_scale))

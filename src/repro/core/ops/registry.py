@@ -61,6 +61,10 @@ ALL_POLICIES = frozenset(POLICIES)
 # differences between impls).  Families scale these via their
 # ``error_bound`` hook.
 LADDER_BOUNDS = {
+    "fp8": 2e0,       # e4m3 inputs, 1 pass (paper's half-precision trade)
+    "int8": 8e-1,     # int8 inputs under pow2 scale, 1 pass
+    "fp8x3": 8e-2,    # fp8 + Ootomo-Yokota residual correction, 3 passes
+    "int8x3": 8e-3,   # int8 + residual correction, 3 passes (~bf16-class)
     "bf16": 2e-1,
     "refine_a": 1e-1,
     "bf16x3": 1e-3,

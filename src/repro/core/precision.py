@@ -22,11 +22,29 @@ significand; this module implements the whole ladder:
 
 All splits are computed in fp32 on the VPU; all products run on the MXU in
 bf16 with fp32 accumulation (``preferred_element_type=float32``).
+
+The ladder also extends DOWN from bf16 (the paper's half-precision
+throughput/accuracy trade, pushed further): quantized rungs whose
+operands are fp8 (e4m3) or int8 values under a power-of-two scale.
+
+    fp8      e4m3 quantize-dequantize        1 pass   (3 mantissa bits)
+    int8     int8 quantize-dequantize        1 pass   (fixed point, 8 bits)
+    fp8x3    fp8 + residual correction       3 passes (Ootomo-Yokota style)
+    int8x3   int8 + residual correction      3 passes (near-bf16x3)
+
+Power-of-two scales make every dequantized term EXACTLY representable
+in bf16 (int8 needs 7 significand bits, e4m3 needs 4; bf16 carries 8),
+so the down-rungs reuse the identical bf16-pass decomposition machinery
+(``operand_terms`` / ``policy_terms``): a hi term ``qdq(x)`` and — for
+the error-corrected x3 rungs — a lo term ``qdq(x - hi)`` under its own
+(much smaller) scale, multiplied as lo.hi + hi.lo + hi.hi exactly like
+the Markidis Eq. 3 drop-term variant.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Sequence
 
 import jax
@@ -34,8 +52,13 @@ import jax.numpy as jnp
 
 __all__ = [
     "POLICIES",
+    "QUANT_FORMATS",
     "PrecisionPolicy",
     "num_passes",
+    "quant_format",
+    "quantize_pow2",
+    "qdq",
+    "qdq_split2",
     "split2",
     "split3",
     "merge2",
@@ -44,6 +67,10 @@ __all__ = [
 # Ordered by increasing accuracy / compute. Names are part of the config
 # surface (configs/<arch>.py reference them as strings).
 POLICIES: tuple[str, ...] = (
+    "fp8",
+    "int8",
+    "fp8x3",
+    "int8x3",
     "bf16",
     "refine_a",
     "bf16x3",
@@ -55,6 +82,10 @@ POLICIES: tuple[str, ...] = (
 # MXU matmul passes each policy costs (f32 counted as 1 full-precision
 # pass; on hardware without fp32 MXU paths XLA itself would decompose it).
 _PASSES = {
+    "fp8": 1,
+    "int8": 1,
+    "fp8x3": 3,
+    "int8x3": 3,
     "bf16": 1,
     "refine_a": 2,
     "bf16x3": 3,
@@ -96,6 +127,89 @@ def split3(x: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
 def merge2(hi: jax.Array, lo: jax.Array) -> jax.Array:
     """Reconstruct fp32 from a (hi, lo) split (exact fp32 addition)."""
     return hi.astype(jnp.float32) + lo.astype(jnp.float32)
+
+
+# ===================================================== quantized down-rungs
+
+# Storage dtype and max representable magnitude per quantized format.
+# e4m3 tops out at 448 but rounding during the cast can push a value in
+# the last binade over the edge (-> nan on the fn variant); budgeting a
+# full binade of headroom (224) keeps the cast safe for any input the
+# power-of-two scale admits.
+QUANT_FORMATS: dict[str, tuple[Any, float]] = {
+    "fp8": (jnp.float8_e4m3fn, 224.0),
+    "int8": (jnp.int8, 127.0),
+}
+
+
+def quant_format(policy: str) -> str:
+    """The quantized storage format ("fp8"/"int8") behind a down-rung."""
+    base = policy[:-2] if policy.endswith("x3") else policy
+    if base not in QUANT_FORMATS:
+        raise ValueError(f"policy {policy!r} is not a quantized rung")
+    return base
+
+
+def _pow2_scale(x: jax.Array, qmax: float) -> jax.Array:
+    """Smallest power-of-two ``s`` with ``qmax * s >= max|x|`` (scalar).
+
+    A power-of-two scale is lossless under dequantization: ``q * s``
+    only shifts the exponent, so the dequantized value carries exactly
+    the quantized significand — and is therefore exactly representable
+    in bf16 for both int8 (7 bits) and e4m3 (4 bits) payloads.
+    """
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    amax = jnp.maximum(amax, jnp.float32(1e-30))
+    return jnp.exp2(jnp.ceil(jnp.log2(amax / qmax)))
+
+
+def quantize_pow2(x: jax.Array, fmt: str) -> tuple[jax.Array, jax.Array]:
+    """Quantize fp32 ``x`` to ``(q, scale)`` with a per-tensor pow2 scale."""
+    dtype, qmax = QUANT_FORMATS[fmt]
+    x = x.astype(jnp.float32)
+    s = _pow2_scale(x, qmax)
+    y = x / s
+    if fmt == "int8":
+        q = jnp.clip(jnp.round(y), -qmax, qmax).astype(dtype)
+    else:
+        q = y.astype(dtype)
+    return q, s
+
+
+@functools.partial(jax.custom_jvp, nondiff_argnums=(1,))
+def qdq(x: jax.Array, fmt: str) -> jax.Array:
+    """Quantize-dequantize ``x`` through ``fmt``; returns bf16.
+
+    The result is EXACT bf16 (pow2 scale, narrow significand), so the
+    generic bf16-pass decomposition paths serve the quantized rungs
+    without modification — the quantization error is entirely in qdq.
+
+    Differentiation is straight-through: the rounding step's true
+    derivative is zero a.e., which would silence every gradient on the
+    quantized rungs; the STE treats qdq as identity in the tangent
+    space (and the x3 split's residual term then contributes zero, so
+    the split still sums to one identity).
+    """
+    q, s = quantize_pow2(x, fmt)
+    return (q.astype(jnp.float32) * s).astype(jnp.bfloat16)
+
+
+@qdq.defjvp
+def _qdq_jvp(fmt, primals, tangents):
+    (x,), (dx,) = primals, tangents
+    return qdq(x, fmt), dx.astype(jnp.bfloat16)
+
+
+def qdq_split2(x: jax.Array, fmt: str) -> tuple[jax.Array, jax.Array]:
+    """(hi, lo) = (qdq(x), qdq(x - hi)): the error-corrected x3 split.
+
+    The residual gets its OWN pow2 scale — it is qmax-times smaller, so
+    the lo term recovers the significand bits the hi pass rounded away
+    (Ootomo & Yokota's error-corrected accumulation, Eq. 1-style)."""
+    x = x.astype(jnp.float32)
+    hi = qdq(x, fmt)
+    lo = qdq(x - hi.astype(jnp.float32), fmt)
+    return hi, lo
 
 
 @jax.tree_util.register_dataclass
@@ -149,8 +263,12 @@ def policy_terms(policy: str) -> Sequence[tuple[int, int]]:
     Index 0 = hi, 1 = lo (2-way split) or 0=hi,1=mid,2=lo (3-way, bf16x6).
     Order is smallest-magnitude first so fp32 summation loses the least.
     """
-    if policy == "bf16":
+    if policy in ("bf16", "fp8", "int8"):
         return ((0, 0),)
+    if policy in ("fp8x3", "int8x3"):
+        # quantized hi/lo: lo.hi + hi.lo + hi.hi (drop the O(eps^2)
+        # lo.lo, exactly like bf16x3 drops R_A R_B)
+        return ((1, 0), (0, 1), (0, 0))
     if policy == "refine_a":
         # Eq. 2: R_A B_h + A_h B_h   (B never split)
         return ((1, 0), (0, 0))
@@ -170,6 +288,10 @@ def split_for_policy(x: jax.Array, policy: str) -> tuple[jax.Array, ...]:
     """Operand splits required by ``policy`` (1-, 2- or 3-way)."""
     if policy in ("bf16",):
         return (x.astype(jnp.bfloat16),)
+    if policy in ("fp8", "int8"):
+        return (qdq(x, policy),)
+    if policy in ("fp8x3", "int8x3"):
+        return qdq_split2(x, quant_format(policy))
     if policy in ("refine_a", "bf16x3", "refine_ab"):
         return split2(x)
     if policy == "bf16x6":

@@ -35,11 +35,40 @@ import numpy as np
 from repro.configs import ARCHS, get_config, get_smoke
 from repro.configs.base import execution_policy_for
 from repro.core import ops
+from repro.core.ops import paged as paged_kv
 from repro.core.precision import PrecisionPolicy
 from repro.models import api
 from repro.runtime import serve_step
 
 __all__ = ["ServeEngine", "Request", "QueueFull", "main"]
+
+
+class _PageAllocator:
+    """Host-side free list over ONE paged-pool capacity class.
+
+    Physical page 0 is the reserved trash page (freed table entries
+    point there) and is never handed out; allocation starts at page 1.
+    ``alloc`` is all-or-nothing — a partially satisfiable request
+    returns None so admission can keep the request queued instead of
+    holding pages it cannot use (backpressure, not deadlock: frees are
+    whole-request too, so a blocked head request always fits once
+    enough slots recycle)."""
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self._free = list(range(num_pages - 1, 0, -1))
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list[int] | None:
+        if n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, pages: list[int]) -> None:
+        self._free.extend(pages)
 
 
 class QueueFull(RuntimeError):
@@ -115,12 +144,29 @@ class ServeEngine:
     def __init__(self, cfg, *, batch_size: int, max_ctx: int,
                  policy: PrecisionPolicy | None = None, eos_id: int = 1,
                  max_queue: int | None = None, metrics=None,
-                 replica: str = "0"):
+                 replica: str = "0", kv_layout: str = "dense",
+                 kv_page_size: int = 8, kv_quant: str | None = None,
+                 kv_pages: int | None = None):
+        if kv_layout not in ("dense", "paged"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r}; "
+                             f"one of ('dense', 'paged')")
+        if kv_quant is not None and kv_layout != "paged":
+            raise ValueError("kv_quant requires kv_layout='paged'")
         self.cfg = cfg
         self.batch = batch_size
         self.max_ctx = max_ctx
         self.policy = policy or PrecisionPolicy.uniform("bf16")
         self.eos_id = eos_id
+        # paged-KV mode: attention caches become shared page pools; the
+        # engine owns the per-class host-side free lists (set by load())
+        # and the per-slot page allocations.
+        self.kv_layout = kv_layout
+        self.kv_page_size = kv_page_size
+        self.kv_quant = kv_quant
+        self.kv_pages = kv_pages
+        self._allocators: dict[int, _PageAllocator] = {}
+        self._slot_pages: list[dict[int, list[int]] | None] = \
+            [None] * batch_size
         # None = unbounded (legacy batch drivers); serving fronts set a
         # watermark so a stalled engine rejects instead of OOMing.
         self.max_queue = max_queue
@@ -150,9 +196,20 @@ class ServeEngine:
         # cache in the activation dtype: decode writes splice activation
         # rows in, and a dtype mismatch would silently round-trip keys
         # through a narrower type only on the batched path
-        self.cache = api.init_cache(
-            self.cfg, self.batch, self.max_ctx,
-            jnp.dtype(self.cfg.activation_dtype))
+        dtype = jnp.dtype(self.cfg.activation_dtype)
+        if self.kv_layout == "paged":
+            self.cache = serve_step.init_paged_cache(
+                self.cfg, self.batch, self.max_ctx,
+                page_size=self.kv_page_size, quant=self.kv_quant,
+                num_pages=self.kv_pages, dtype=dtype)
+            classes = serve_step.paged_classes(
+                self.cfg, self.batch, self.max_ctx,
+                page_size=self.kv_page_size, num_pages=self.kv_pages)
+            self._allocators = {cap: _PageAllocator(n)
+                                for cap, n in classes.items()}
+        else:
+            self.cache = api.init_cache(
+                self.cfg, self.batch, self.max_ctx, dtype)
 
     # ------------------------------------------------------------ slots
 
@@ -170,6 +227,93 @@ class ServeEngine:
                 f"request {req.rid}: prompt length {len(req.prompt)}"
                 f"{f' (+{n_img} image tokens)' if n_img else ''} does not "
                 f"fit the engine context (max_ctx={self.max_ctx})")
+
+    # -------------------------------------------------------- paged KV
+
+    def _pages_needed(self, req: Request, cap: int) -> int:
+        """Worst-case page demand of one request in a capacity class.
+
+        Linear layers touch rows [0, prompt+budget); ring layers wrap
+        into at most ``cap`` slots — ``min(cap, total)`` covers both."""
+        n_img = (self.cfg.num_image_tokens
+                 if self.cfg.family == "vlm" else 0)
+        total = n_img + len(req.prompt) + req.max_new_tokens
+        return paged_kv.num_logical_pages(min(cap, total),
+                                          self.kv_page_size)
+
+    def _alloc_pages(self, req: Request) -> dict[int, list[int]] | None:
+        """All-or-nothing allocation across every capacity class."""
+        got: dict[int, list[int]] = {}
+        for cap, alloc in self._allocators.items():
+            pages = alloc.alloc(self._pages_needed(req, cap))
+            if pages is None:
+                for c, p in got.items():
+                    self._allocators[c].free(p)
+                return None
+            got[cap] = pages
+        return got
+
+    def _free_pages(self, alloc_map: dict[int, list[int]], *,
+                    slot: int | None = None) -> None:
+        """Return a request's pages to the free lists; when the slot's
+        tables were written (it decoded), zero them too, so the freed
+        pages can never be corrupted by the stale slot's continuing
+        in-graph writes (inactive rows then write the trash page)."""
+        for cap, pages in alloc_map.items():
+            self._allocators[cap].free(pages)
+        if slot is not None:
+            for seg_key, pos_key, _, _ in serve_step.attn_cache_walk(
+                    self.cfg, self.max_ctx):
+                leaf = self.cache[seg_key][pos_key]
+                self.cache[seg_key][pos_key] = dataclasses.replace(
+                    leaf, page_table=leaf.page_table.at[:, slot].set(0))
+
+    def _splice_paged(self, cache1, slot: int,
+                      alloc_map: dict[int, list[int]]) -> None:
+        """Write the slot's page-table rows and scatter its padded dense
+        prefill KV into the allocated pages (quantizing when the pool is
+        quantized).  Every layer of a capacity class shares the same
+        page ids — each layer has its OWN pool array, so equal ids never
+        collide across layers."""
+        ps = self.kv_page_size
+        for seg_key, pos_key, _, cap in serve_step.attn_cache_walk(
+                self.cfg, self.max_ctx):
+            leaf = self.cache[seg_key][pos_key]
+            dense = cache1[seg_key][pos_key]   # AttnCache (count,1,cap,..)
+            n_log = leaf.page_table.shape[-1]
+            row = np.zeros(n_log, np.int32)
+            pages = alloc_map[cap]
+            row[:len(pages)] = pages           # tail stays on trash (0)
+            row_arr = jnp.asarray(row)
+
+            def to_pages(x):
+                # (count, 1, cap, Kv, hd) -> (count, n_log, ps, Kv, hd)
+                x = x[:, 0].astype(jnp.float32)
+                pad = [(0, 0)] * x.ndim
+                pad[1] = (0, n_log * ps - x.shape[1])
+                x = jnp.pad(x, pad)
+                return x.reshape(x.shape[0], n_log, ps, *x.shape[2:])
+
+            kp, vp = to_pages(dense.k), to_pages(dense.v)
+            if leaf.quantized:
+                qk, sk = paged_kv.quantize_rows(kp)
+                qv, sv = paged_kv.quantize_rows(vp)
+                leaf = dataclasses.replace(
+                    leaf,
+                    k_pages=leaf.k_pages.at[:, row_arr].set(qk),
+                    v_pages=leaf.v_pages.at[:, row_arr].set(qv),
+                    k_scale=leaf.k_scale.at[:, row_arr].set(sk),
+                    v_scale=leaf.v_scale.at[:, row_arr].set(sv),
+                    page_table=leaf.page_table.at[:, slot].set(row_arr))
+            else:
+                leaf = dataclasses.replace(
+                    leaf,
+                    k_pages=leaf.k_pages.at[:, row_arr].set(
+                        kp.astype(leaf.k_pages.dtype)),
+                    v_pages=leaf.v_pages.at[:, row_arr].set(
+                        vp.astype(leaf.v_pages.dtype)),
+                    page_table=leaf.page_table.at[:, slot].set(row_arr))
+            self.cache[seg_key][pos_key] = leaf
 
     # -------------------------------------------------------- metrics
     # All no-ops when self.metrics is None: the registry is duck-typed
@@ -237,6 +381,15 @@ class ServeEngine:
         if req.t_submit is None:
             req.t_submit = time.monotonic()
             req.wall_time = time.time()
+        alloc_map = None
+        if self.kv_layout == "paged":
+            # Reserve pages BEFORE the prefill: worst-case demand is a
+            # pure function of prompt length + token budget, so a
+            # pool-pressure refusal costs nothing — the request stays
+            # queued with no speculative first token to roll back.
+            alloc_map = self._alloc_pages(req)
+            if alloc_map is None:
+                return False
         n_img = (self.cfg.num_image_tokens
                  if self.cfg.family == "vlm" else 0)
         prompt = jnp.asarray(req.prompt)[None]              # (1, S)
@@ -249,15 +402,6 @@ class ServeEngine:
                 (1, self.cfg.num_image_tokens, self.cfg.d_model),
                 jnp.float32)
         logits, cache1 = self._prefill(self.params, batch)
-
-        def splice(full, one):
-            if not hasattr(one, "shape") or one.ndim < 2:
-                return full
-            # leaves are (count, B, ...) stacked per segment
-            return jax.lax.dynamic_update_index_in_dim(
-                full, one[:, 0].astype(full.dtype), slot, axis=1)
-
-        self.cache = jax.tree.map(splice, self.cache, cache1)
         req.t_admit = time.monotonic()
         first = int(jnp.argmax(logits[0, -1]))
         req.out_tokens.append(first)
@@ -279,10 +423,38 @@ class ServeEngine:
                     1, replica=self.replica)
         if first == self.eos_id or req.max_new_tokens <= 1:
             # EOS (or a 1-token budget) straight out of prefill: the
-            # request is done; the slot stays free for the next one.
+            # request is done; the slot stays free for the next one
+            # (its reserved pages go straight back — tables were never
+            # written, so no zeroing is needed).
             req.done = True
             req.t_done = time.monotonic()
+            if alloc_map is not None:
+                self._free_pages(alloc_map)
             return True
+
+        # The slot will actually decode: commit its prefill KV into the
+        # batch cache (splice runs after the early-done check, so
+        # requests that finish in prefill never touch the cache).
+        def splice(full, one):
+            if not hasattr(one, "shape") or one.ndim < 2:
+                return full
+            # leaves are (count, B, ...) stacked per segment
+            return jax.lax.dynamic_update_index_in_dim(
+                full, one[:, 0].astype(full.dtype), slot, axis=1)
+
+        if self.kv_layout == "paged":
+            # paged leaves take the page-scatter path; everything else
+            # (cross-attn KV, recurrent state) splices densely as ever
+            for sk, seg in cache1.items():
+                for pk, one in seg.items():
+                    full = self.cache[sk][pk]
+                    if isinstance(full, paged_kv.PagedKVCache):
+                        continue
+                    self.cache[sk][pk] = jax.tree.map(splice, full, one)
+            self._splice_paged(cache1, slot, alloc_map)
+            self._slot_pages[slot] = alloc_map
+        else:
+            self.cache = jax.tree.map(splice, self.cache, cache1)
         self.slot_req[slot] = req
         self.last_tok = self.last_tok.at[slot].set(first)
         self.pos = self.pos.at[slot].set(n_img + len(req.prompt))
@@ -320,6 +492,9 @@ class ServeEngine:
                 r.done = True
                 r.t_done = now
                 self.slot_req[i] = None
+                if self.kv_layout == "paged" and self._slot_pages[i]:
+                    self._free_pages(self._slot_pages[i], slot=int(i))
+                    self._slot_pages[i] = None
         self.ticks += 1
         self.tokens_generated += n_active
         if self.metrics is not None:
@@ -406,6 +581,23 @@ def main() -> None:
     ap.add_argument("--max-ctx", type=int, default=64)
     ap.add_argument("--policy", default="bf16",
                     help="default precision policy for every matmul")
+    ap.add_argument("--kv-layout", choices=("dense", "paged"),
+                    default="dense",
+                    help="attention KV cache layout: 'dense' per-slot "
+                         "ring buffers, or 'paged' fixed-size pages "
+                         "behind a per-slot page table (allocate on "
+                         "admit, free on slot recycle)")
+    ap.add_argument("--kv-page-size", type=int, default=8,
+                    help="rows per KV page (paged layout only)")
+    ap.add_argument("--kv-quant", choices=("none", "int8"),
+                    default="none",
+                    help="paged-page payload quantization: int8 pages "
+                         "+ per-(row, kv-head) fp32 scales, dequantized "
+                         "at read time")
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="pages per pool class (default: full capacity "
+                         "+ trash page — lossless; smaller pools trade "
+                         "admission backpressure for memory)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="engine replicas behind a least-loaded router "
                          "with session affinity (repro.serve.pool); 1 "
@@ -463,10 +655,17 @@ def main() -> None:
     mesh_spec = meshlib.resolve_mesh_spec(args.mesh, cfg)
     # Route-build validation: the engine tick decodes against the KV
     # cache every step, so demand the attention impl's decode capability
-    # up front instead of failing on the first tick.
+    # up front instead of failing on the first tick (and paged_decode
+    # too when the engine runs the paged layout).
+    attn_caps = (("decode", "paged_decode")
+                 if args.kv_layout == "paged" else ("decode",))
     policy = execution_policy_for(
         cfg, default=args.policy, backends=backends,
-        require={"attention": ("decode",)}, mesh=mesh_spec)
+        require={"attention": attn_caps}, mesh=mesh_spec)
+    kv_kwargs = dict(
+        kv_layout=args.kv_layout, kv_page_size=args.kv_page_size,
+        kv_quant=None if args.kv_quant == "none" else args.kv_quant,
+        kv_pages=args.kv_pages)
     print(run_header(args.arch, policy=policy, mesh=policy.mesh), flush=True)
     params = api.init_params(jax.random.PRNGKey(0), cfg)
 
@@ -477,10 +676,21 @@ def main() -> None:
         from repro.serve.metrics import MetricsRegistry
         from repro.serve.pool import ReplicaPool
         registry = MetricsRegistry()
-        pool = ReplicaPool(cfg, params, replicas=args.replicas,
-                           batch_size=args.batch, max_ctx=args.max_ctx,
-                           policy=policy, max_queue=args.max_queue,
-                           metrics=registry)
+
+        def factory(idx, pol):
+            eng = ServeEngine(cfg, batch_size=args.batch,
+                              max_ctx=args.max_ctx, policy=pol,
+                              max_queue=args.max_queue, metrics=registry,
+                              replica=str(idx), **kv_kwargs)
+            eng.load(params)
+            return eng
+
+        pool = ReplicaPool(
+            cfg, params, replicas=args.replicas,
+            batch_size=args.batch, max_ctx=args.max_ctx,
+            policy=policy, max_queue=args.max_queue, metrics=registry,
+            engine_factory=(factory if args.kv_layout == "paged"
+                            else None))
         if args.gateway_port is not None:
             import asyncio
 
@@ -509,7 +719,8 @@ def main() -> None:
         return
 
     eng = ServeEngine(cfg, batch_size=args.batch, max_ctx=args.max_ctx,
-                      policy=policy, max_queue=args.max_queue)
+                      policy=policy, max_queue=args.max_queue,
+                      **kv_kwargs)
     eng.load(params)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,

@@ -29,11 +29,14 @@ import jax.numpy as jnp
 
 from repro.core import ops
 from repro.core.ops import Route
+from repro.core.ops import paged as paged_kv
+from repro.core.ops.paged import PagedKVCache
 from repro.core.refined_matmul import peinsum
 from repro.models import layers as L
 
 __all__ = ["init_attn", "attention", "AttnCache", "rope_table",
-           "reference_forward", "reference_decode"]
+           "reference_forward", "reference_decode",
+           "reference_paged_decode"]
 
 NEG_INF = -1e30
 
@@ -186,6 +189,21 @@ def reference_decode(q, k_cache, v_cache, pos, *, window: int | None,
     return _values(pr.astype(q.dtype), v_cache, policy)
 
 
+def reference_paged_decode(q, cache: PagedKVCache, pos, *,
+                           window: int | None, softcap: float | None,
+                           policy):
+    """Paged decode = page-table gather + the UNCHANGED dense decode.
+
+    Gathering the pool through the table reproduces the dense per-slot
+    layout row for row (trash-page rows land where never-written dense
+    rows sit and are masked identically), so an unquantized paged
+    decode is bitwise the dense decode; quantized pools additionally
+    dequantize by the stored per-row/head scales."""
+    k, v = paged_kv.gather_dense(cache)          # (B, s_cache, Kv, hd)
+    return reference_decode(q, k.astype(q.dtype), v.astype(q.dtype), pos,
+                            window=window, softcap=softcap, policy=policy)
+
+
 # ------------------------------------------------------------- attention
 
 def attention(
@@ -258,7 +276,8 @@ def attention(
         # batching engine are admitted at different ticks, so every row
         # rotates, writes and masks at its own absolute position.
         pos = jnp.broadcast_to(pos, (b,))
-        s_cache = cache.k.shape[1]
+        is_paged = isinstance(cache, PagedKVCache)
+        s_cache = cache.s_cache if is_paged else cache.k.shape[1]
         if rope_theta is not None:
             sin, cos = rope_table(pos[:, None], head_dim, rope_theta,
                                   dtype)                 # (B,1,hd/2)
@@ -269,14 +288,22 @@ def attention(
         k, v = k.astype(dtype), v.astype(dtype)
 
         slot = pos % s_cache if window is not None else pos       # (B,)
-        row = jnp.arange(b)
-        ck = cache.k.at[row, slot].set(k[:, 0].astype(cache.k.dtype))
-        cv = cache.v.at[row, slot].set(v[:, 0].astype(cache.v.dtype))
-        new_cache = AttnCache(k=ck, v=cv)
+        if is_paged:
+            # Same logical row as the dense write, stored through the
+            # page table (inactive rows land on the trash page).
+            new_cache = paged_kv.write_kv(cache, k[:, 0], v[:, 0], slot)
+            out = ops.attention_paged_decode(
+                q, new_cache, pos, window=window, softcap=softcap,
+                policy=policy)
+        else:
+            row = jnp.arange(b)
+            ck = cache.k.at[row, slot].set(k[:, 0].astype(cache.k.dtype))
+            cv = cache.v.at[row, slot].set(v[:, 0].astype(cache.v.dtype))
+            new_cache = AttnCache(k=ck, v=cv)
 
-        out = ops.attention_decode(
-            q, ck.astype(dtype), cv.astype(dtype), pos, window=window,
-            softcap=softcap, policy=policy)
+            out = ops.attention_decode(
+                q, ck.astype(dtype), cv.astype(dtype), pos, window=window,
+                softcap=softcap, policy=policy)
     else:
         raise ValueError(f"unknown mode {mode!r}")
 

@@ -26,6 +26,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.ops import routed_einsum as peinsum
 from repro.models import layers as L
 
 __all__ = ["init_rwkv6", "rwkv6_layer", "RWKVState", "init_rwkv_state"]
@@ -91,7 +92,7 @@ def _ddlerp(p: dict, x: jax.Array, dx: jax.Array, policy: str):
     return outs
 
 
-def _wkv_chunked(r, k, v, logw, u, chunk: int, narrow: bool = True):
+def _wkv_chunked(r, k, v, logw, u, chunk: int, policy="bf16"):
     """Chunked WKV: r/k/v (B,S,H,K), logw (B,S,H,K) (<=0), u (H,K).
 
     Returns (out (B,S,H,K), final_state (B,H,K,V)). fp32 state/output.
@@ -100,11 +101,11 @@ def _wkv_chunked(r, k, v, logw, u, chunk: int, narrow: bool = True):
     (B,H,C,C,K) tensor materialized per chunk step is ``r_ed`` — the
     decay tensor with r pre-folded in (exp+mul fuse into one write).
     The causal mask is applied to the 2-D-per-(t,s) ``scores`` AFTER the
-    K contraction (it is K-independent), not to the 5-D tensor. With
-    ``narrow=True`` the MXU contraction operands are cast to bf16
-    (fp32 accumulate) — the paper's mixed-precision GEMM applied to the
-    WKV recurrence; the policy's 'f32' point keeps full precision.
-    """
+    K contraction (it is K-independent), not to the 5-D tensor. The MXU
+    contractions run through the policy router (``ops.routed_einsum``)
+    — the paper's mixed-precision GEMM ladder, down to the fp8/int8
+    quantized rungs, applied to the WKV recurrence; 'f32' keeps a
+    single full-precision pass."""
     b, s0, h, kd = r.shape
     if s0 % chunk:
         # Pad with identity steps: decay 1 (logw=0), k=v=0 -> outputs at
@@ -120,7 +121,6 @@ def _wkv_chunked(r, k, v, logw, u, chunk: int, narrow: bool = True):
     wc = logw.reshape(b, n, chunk, h, kd).transpose(1, 0, 3, 2, 4)
 
     mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # strict lower
-    cdtype = jnp.bfloat16 if narrow else jnp.float32
 
     def step(state, inp):
         rr, kk, vv, lw = inp                     # (B,H,C,K) each
@@ -128,30 +128,23 @@ def _wkv_chunked(r, k, v, logw, u, chunk: int, narrow: bool = True):
         lae = la - lw                            # exclusive: decay to t-1
         # inter-chunk: r_t reads S_{t-1} = S_0 decayed by w_1..w_{t-1}
         r_dec = rr * jnp.exp(lae)                # exponent <= 0
-        inter = jnp.einsum("bhck,bhkv->bhcv", r_dec.astype(cdtype),
-                           state.astype(cdtype),
-                           preferred_element_type=jnp.float32)
+        inter = peinsum("bhck,bhkv->bhcv", r_dec, state, policy)
         # intra-chunk (strict causal): k_s decayed by w_{s+1}..w_{t-1};
         # r folded into the decay tensor at construction (single 5-D
-        # materialization, exp+mul+cast in one fused write).
-        r_ed = (rr[:, :, :, None, :] * jnp.exp(jnp.clip(
+        # materialization, exp+mul in one fused write).
+        r_ed = rr[:, :, :, None, :] * jnp.exp(jnp.clip(
             lae[:, :, :, None, :] - la[:, :, None, :, :], None, 0.0))
-        ).astype(cdtype)
-        scores = jnp.einsum("bhtsk,bhsk->bhts", r_ed, kk.astype(cdtype),
-                            preferred_element_type=jnp.float32)
+        scores = peinsum("bhtsk,bhsk->bhts", r_ed, kk, policy)
         scores = jnp.where(mask[None, None], scores, 0.0)  # 2-D mask
-        intra = jnp.einsum("bhts,bhsv->bhtv", scores.astype(cdtype),
-                           vv.astype(cdtype),
-                           preferred_element_type=jnp.float32)
+        intra = peinsum("bhts,bhsv->bhtv", scores, vv, policy)
         # current-token bonus u
         bonus = jnp.einsum("bhck,bhck->bhc", rr * u[None, :, None, :], kk)
         cur = bonus[..., None] * vv
         out = inter + intra + cur
         # state update: decay to chunk end, add decayed outer products
         dec_end = jnp.exp(la[:, :, -1:, :] - la)  # exponent <= 0
-        state = state * jnp.exp(la[:, :, -1, :])[..., None] + jnp.einsum(
-            "bhck,bhcv->bhkv", (kk * dec_end).astype(cdtype),
-            vv.astype(cdtype), preferred_element_type=jnp.float32)
+        state = state * jnp.exp(la[:, :, -1, :])[..., None] + peinsum(
+            "bhck,bhcv->bhkv", kk * dec_end, vv, policy)
         return state, out
 
     step = jax.checkpoint(step)  # bwd recomputes r_ed instead of loading
@@ -205,7 +198,7 @@ def rwkv6_layer(p: dict, x: jax.Array, *, head_dim: int, policy: str,
     else:
         ch = min(chunk, s)
         out, new_wkv = _wkv_chunked(r32, k32, v32, logw, u, ch,
-                                    narrow=(policy != "f32"))
+                                    policy=policy)
 
     out = out.reshape(b, s, d).astype(dtype) * g.astype(dtype)
     x = x + L.linear(p["wo"], out, policy).astype(dtype)

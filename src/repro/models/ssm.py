@@ -19,7 +19,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.refined_matmul import peinsum
+from repro.core.ops import routed_einsum as peinsum
 from repro.models import layers as L
 
 __all__ = ["init_mamba2", "mamba2_layer", "MambaState", "init_mamba_state"]

@@ -17,12 +17,15 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.ops import ExecutionPolicy
+from repro.core.ops import paged as paged_kv
+from repro.core.ops.paged import PagedKVCache
 from repro.core.precision import PrecisionPolicy
 from repro.models import api
 from repro.models.attention import AttnCache
 
 __all__ = ["make_prefill", "make_decode", "make_engine_tick", "pad_cache",
-           "abstract_cache", "abstract_params"]
+           "abstract_cache", "abstract_params", "attn_cache_walk",
+           "paged_classes", "init_paged_cache"]
 
 # Either policy flavour routes every model matmul below (ExecutionPolicy
 # — or its legacy MatmulPolicy subclass — additionally selects the
@@ -64,6 +67,67 @@ def pad_cache(cache: dict, cfg: ModelConfig, s_ctx: int) -> dict:
             new_seg[f"pos{j}"] = c
         out[f"seg{i}"] = new_seg
     return out
+
+
+# ---------------------------------------------------------- paged cache
+
+def attn_cache_walk(cfg: ModelConfig, s_ctx: int):
+    """Yield ``(seg_key, pos_key, kind, cap)`` for every growable
+    attention sublayer (the capacity classes of the paged pool);
+    cross-attention (fixed encoder length) and recurrent state are
+    excluded."""
+    for i, seg in enumerate(cfg.segments):
+        for j, kind in enumerate(seg.pattern):
+            cap = _attn_capacity(kind, cfg, s_ctx)
+            if cap is not None:
+                yield f"seg{i}", f"pos{j}", kind, cap
+
+
+def paged_classes(cfg: ModelConfig, batch: int, s_ctx: int, *,
+                  page_size: int,
+                  num_pages: int | None = None) -> dict[int, int]:
+    """Map each capacity class (attn full-context vs local ring) to its
+    per-layer pool size in pages.  Default is full capacity plus the
+    reserved trash page — functionally lossless; smaller pools trade
+    admission backpressure for memory."""
+    caps = sorted({cap for *_, cap in attn_cache_walk(cfg, s_ctx)})
+    return {cap: (num_pages if num_pages is not None
+                  else 1 + batch * paged_kv.num_logical_pages(
+                      cap, page_size))
+            for cap in caps}
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, s_ctx: int, *,
+                     page_size: int, quant: str | None = None,
+                     num_pages: int | None = None,
+                     dtype=jnp.bfloat16) -> dict:
+    """``api.init_cache`` with every attention sublayer's dense
+    ``AttnCache`` replaced by a stacked ``PagedKVCache``.
+
+    Pool arrays gain the same leading ``(count,)`` layer-stack dim the
+    dense leaves carry, so the per-segment ``lax.scan`` slices one pool
+    per layer; every table entry starts on the trash page (0) — the
+    engine owns allocation (``launch/serve.py``)."""
+    cache = api.init_cache(cfg, batch, s_ctx, dtype)
+    classes = paged_classes(cfg, batch, s_ctx, page_size=page_size,
+                            num_pages=num_pages)
+    for seg_key, pos_key, kind, cap in attn_cache_walk(cfg, s_ctx):
+        count = cache[seg_key][pos_key].k.shape[0]
+        pool = paged_kv.init_paged(
+            batch, cap, cfg.num_kv_heads, cfg.head_dim,
+            page_size=page_size, num_pages=classes[cap], quant=quant,
+            dtype=dtype)
+
+        def stack(x):
+            return (None if x is None
+                    else jnp.broadcast_to(x, (count, *x.shape)))
+
+        cache[seg_key][pos_key] = PagedKVCache(
+            k_pages=stack(pool.k_pages), v_pages=stack(pool.v_pages),
+            page_table=stack(pool.page_table),
+            k_scale=stack(pool.k_scale), v_scale=stack(pool.v_scale),
+            s_cache=cap)
+    return cache
 
 
 def make_prefill(cfg: ModelConfig, policy: Policy, *,

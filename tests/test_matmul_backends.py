@@ -19,8 +19,13 @@ from repro.models import api
 
 # Max-abs-error bounds vs the fp64 oracle for U[-1,1] operands with
 # K ~ 130 (the ladder of the paper's Fig. 8, with slack for backend
-# summation-order differences).
+# summation-order differences; the quantized down-rungs sit ABOVE bf16,
+# their x3 error-corrected variants between refine_a and bf16x3).
 ERROR_BOUNDS = {
+    "fp8": 3e0,
+    "int8": 6e-1,
+    "fp8x3": 8e-2,
+    "int8x3": 8e-3,
     "bf16": 2e-1,
     "refine_a": 1e-1,
     "bf16x3": 1e-3,
@@ -241,8 +246,9 @@ class TestMatmulPolicy:
         assert p.for_("attention").backend == "pallas"
 
     def test_rejects_unknown_precision(self):
+        # fp8/int8 are real rungs now — fp4 remains off the ladder
         with pytest.raises(ValueError):
-            mm.MatmulPolicy(default="fp8")
+            mm.MatmulPolicy(default="fp4")
 
     def test_from_precision_lift(self):
         base = PrecisionPolicy.mixed_hpc()

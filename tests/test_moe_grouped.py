@@ -33,6 +33,10 @@ from repro.models import moe as M
 # Same ladder bounds as tests/test_matmul_backends.py (U[-1,1] operands,
 # K ~ 130, slack for summation-order differences between backends).
 ERROR_BOUNDS = {
+    "fp8": 3e0,
+    "int8": 6e-1,
+    "fp8x3": 8e-2,
+    "int8x3": 8e-3,
     "bf16": 2e-1,
     "refine_a": 1e-1,
     "bf16x3": 1e-3,

@@ -1,0 +1,260 @@
+"""Paged KV cache: ring-buffer -> paged migration equivalence.
+
+The paged layout must be a pure STORAGE change: logical rows keep their
+dense meaning (row ``pos`` linear, ``pos % s_cache`` ring), so
+unquantized paged decode is token-exact against the dense engine across
+every continuous-batching wrinkle — wrapped ring rows, stale recycled
+slots, staggered admission — and quantized pages stay inside the
+declared ``PAGE_QUANT_BOUND`` at the op level.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core import ops
+from repro.core.ops import paged
+from repro.core.ops.route import Route
+from repro.core.precision import PrecisionPolicy
+from repro.kernels.attention_paged import flash_paged_decode
+from repro.launch.serve import Request, ServeEngine, _PageAllocator
+from repro.models import api
+from repro.models.attention import reference_decode
+from repro.runtime import serve_step
+
+POLICY = PrecisionPolicy.uniform("f32")
+MAX_CTX = 32
+
+
+def _f32(cfg):
+    cf = max(cfg.capacity_factor, float(cfg.num_experts or 1))
+    return dataclasses.replace(cfg, activation_dtype="float32",
+                               capacity_factor=cf)
+
+
+def _serve(arch, kv_kwargs, *, batch_size=2, n_req=4, max_ctx=MAX_CTX,
+           budget=None, seed=17):
+    cfg = _f32(get_smoke(arch))
+    params = api.init_params(jax.random.PRNGKey(3), cfg)
+    eng = ServeEngine(cfg, batch_size=batch_size, max_ctx=max_ctx,
+                      policy=POLICY, **kv_kwargs)
+    eng.load(params)
+    rng = np.random.default_rng(seed)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(2, cfg.vocab_size,
+                                        4 + (i % 3)).astype(np.int32),
+                    max_new_tokens=budget or (4 + (i % 3)))
+            for i in range(n_req)]
+    eng.run(reqs)
+    assert all(r.done for r in reqs)
+    return eng, [list(r.out_tokens) for r in reqs]
+
+
+# ==================================================== engine equivalence
+
+@pytest.mark.parametrize("arch", [
+    "gemma3-1b",        # 5:1 local(window ring buffer):global
+    "starcoder2-15b",   # pure global GQA (linear layout)
+    "whisper-medium",   # cross-attn cache stays DENSE beside paged self
+])
+def test_paged_engine_token_exact(arch):
+    """Staggered admission on a 2-slot engine: paged == dense, token
+    for token, for every cache-layout family."""
+    _, dense = _serve(arch, dict(kv_layout="dense"))
+    _, pg = _serve(arch, dict(kv_layout="paged", kv_page_size=4))
+    assert pg == dense
+
+
+def test_paged_ring_wrap_long_decode():
+    """Budgets pushing every slot far past the sliding window: wrapped
+    ring rows must land on the right pages."""
+    cfg = _f32(get_smoke("gemma3-1b"))
+    assert cfg.window is not None and cfg.window < MAX_CTX
+    budget = cfg.window + 6
+    _, dense = _serve("gemma3-1b", dict(kv_layout="dense"),
+                      n_req=2, budget=budget)
+    _, pg = _serve("gemma3-1b",
+                   dict(kv_layout="paged", kv_page_size=4),
+                   n_req=2, budget=budget)
+    assert pg == dense
+
+
+def test_paged_stale_slot_reuse():
+    """A 1-slot engine recycles the slot for every request: freed pages
+    and zeroed table rows must leave no trace of the previous tenant."""
+    _, dense = _serve("gemma3-1b", dict(kv_layout="dense"),
+                      batch_size=1, n_req=4)
+    _, pg = _serve("gemma3-1b", dict(kv_layout="paged", kv_page_size=4),
+                   batch_size=1, n_req=4)
+    assert pg == dense
+
+
+def test_paged_backpressure_tight_pool():
+    """A pool sized for ~one request at a time still serves everything
+    (admission waits for frees) and stays token-exact."""
+    _, dense = _serve("starcoder2-15b", dict(kv_layout="dense"))
+    # max demand/request: ceil(min(32, 6+6)/4) = 3 pages; pool of 1+4
+    # admits at most one such request alongside a smaller one.
+    _, pg = _serve("starcoder2-15b",
+                   dict(kv_layout="paged", kv_page_size=4, kv_pages=5))
+    assert pg == dense
+
+
+def test_paged_engine_all_pages_freed():
+    """After a run every page is back on the free list and every table
+    row points at the trash page."""
+    eng, _ = _serve("gemma3-1b", dict(kv_layout="paged", kv_page_size=4))
+    for cap, alloc in eng._allocators.items():
+        assert alloc.available == alloc.num_pages - 1, cap
+    assert all(m is None for m in eng._slot_pages)
+    for sk, pk, _, _ in serve_step.attn_cache_walk(eng.cfg, eng.max_ctx):
+        assert not np.asarray(eng.cache[sk][pk].page_table).any()
+
+
+def test_paged_int8_engine_completes():
+    """Quantized-page serving runs the same lifecycle end to end (token
+    equality is NOT promised at int8 — the op-level bound below is)."""
+    eng, toks = _serve("gemma3-1b",
+                       dict(kv_layout="paged", kv_page_size=4,
+                            kv_quant="int8"))
+    assert all(len(t) >= 1 for t in toks)
+    for cap, alloc in eng._allocators.items():
+        assert alloc.available == alloc.num_pages - 1, cap
+
+
+# ===================================================== op-level parity
+
+def _pools(window, quant, *, B=3, Kv=2, hd=32, s_cache=12, ps=4,
+           seed=0):
+    """Dense + paged caches holding identical per-row histories (row 1
+    wraps the ring), built through the real write paths."""
+    key = jax.random.PRNGKey(seed)
+    n_log = paged.num_logical_pages(s_cache, ps)
+    pool = paged.init_paged(B, s_cache, Kv, hd, page_size=ps,
+                            num_pages=1 + B * n_log, quant=quant,
+                            dtype=jnp.float32)
+    table = (1 + jnp.arange(B * n_log, dtype=jnp.int32)).reshape(B, n_log)
+    pool = dataclasses.replace(pool, page_table=table)
+    dense_k = jnp.zeros((B, s_cache, Kv, hd), jnp.float32)
+    dense_v = jnp.zeros_like(dense_k)
+    pos = jnp.array([5, 17, 2], jnp.int32)    # row 1 wraps (17 > 12)
+    for p in range(int(pos.max()) + 1):
+        ks = jax.random.uniform(jax.random.fold_in(key, p),
+                                (B, Kv, hd), jnp.float32, -1, 1)
+        vs = jax.random.uniform(jax.random.fold_in(key, 1000 + p),
+                                (B, Kv, hd), jnp.float32, -1, 1)
+        active = jnp.full((B,), p) <= pos
+        slot = jnp.full((B,), p % s_cache, jnp.int32)
+        # rows past their history redirect to the trash page — exactly
+        # what the engine's zeroed table rows do for inactive slots
+        tmp = dataclasses.replace(
+            pool, page_table=jnp.where(active[:, None], table, 0))
+        pool = dataclasses.replace(paged.write_kv(tmp, ks, vs, slot),
+                                   page_table=table)
+        for b in np.flatnonzero(np.asarray(active)):
+            dense_k = dense_k.at[b, p % s_cache].set(ks[b])
+            dense_v = dense_v.at[b, p % s_cache].set(vs[b])
+    q = jax.random.uniform(jax.random.fold_in(key, 7),
+                           (B, 1, Kv, 2, hd), jnp.float32, -1, 1) * hd**-0.5
+    return q, dense_k, dense_v, pool, pos
+
+
+@pytest.mark.parametrize("window", [8, None])
+def test_reference_paged_decode_exact(window):
+    """Unquantized gather-based paged decode is BITWISE the dense
+    reference decode (same math, indirected storage)."""
+    q, dk, dv, pool, pos = _pools(window, None)
+    ref = reference_decode(q, dk, dv, pos, window=window, softcap=None,
+                           policy="f32")
+    out = ops.attention_paged_decode(q, pool, pos, window=window,
+                                     policy="f32")
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+
+
+@pytest.mark.parametrize("window", [8, None])
+def test_flash_paged_decode_matches_reference(window):
+    q, dk, dv, pool, pos = _pools(window, None)
+    ref = reference_decode(q, dk, dv, pos, window=window, softcap=None,
+                           policy="f32")
+    out = flash_paged_decode(q, pool, pos, window=window,
+                             precision="f32", interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=0, atol=1e-5)
+
+
+@pytest.mark.parametrize("window", [8, None])
+@pytest.mark.parametrize("impl", ["xla", "pallas_fused"])
+def test_quantized_pages_within_bound(window, impl):
+    """int8 pages: both paged-decode impls stay inside the declared
+    PAGE_QUANT_BOUND vs the dense f32 cache."""
+    q, dk, dv, _, pos = _pools(window, None)
+    _, _, _, qpool, _ = _pools(window, "int8")
+    ref = reference_decode(q, dk, dv, pos, window=window, softcap=None,
+                           policy="f32")
+    rt = Route(precision="f32", backends={"attention": impl},
+               interpret=True)
+    out = ops.attention_paged_decode(q, qpool, pos, window=window,
+                                     policy=rt)
+    err = float(jnp.abs(out - ref).max())
+    assert err <= paged.PAGE_QUANT_BOUND, err
+    assert err > 0.0   # it IS quantized
+
+
+def test_paged_decode_capability_error_names_impl():
+    from repro.core.ops.attention import AttentionOps
+    from repro.core.ops.registry import register_impl
+    name = "toy_nopaged_test"
+    register_impl("attention", name, features=("decode",))(
+        AttentionOps(forward=lambda *a, **k: None,
+                     decode=lambda *a, **k: None))
+    q, _, _, pool, pos = _pools(None, None)
+    with pytest.raises(ValueError, match="paged_decode"):
+        ops.attention_paged_decode(
+            q, pool, pos, policy=Route(backends={"attention": name}))
+
+
+# ======================================================== infrastructure
+
+def test_page_allocator_lifecycle():
+    a = _PageAllocator(6)           # pages 1..5 allocatable, 0 = trash
+    assert a.available == 5
+    got = a.alloc(3)
+    assert got is not None and 0 not in got and len(set(got)) == 3
+    assert a.alloc(3) is None       # all-or-nothing: only 2 left
+    assert a.available == 2         # the failed alloc held nothing
+    a.free(got)
+    assert a.available == 5
+
+
+def test_init_paged_cache_structure():
+    cfg = _f32(get_smoke("gemma3-1b"))
+    cache = serve_step.init_paged_cache(cfg, 2, MAX_CTX, page_size=4,
+                                        dtype=jnp.float32)
+    walked = list(serve_step.attn_cache_walk(cfg, MAX_CTX))
+    caps = {cap for *_, cap in walked}
+    assert len(caps) == 2           # global (MAX_CTX) + local (window)
+    for sk, pk, kind, cap in walked:
+        leaf = cache[sk][pk]
+        assert isinstance(leaf, paged.PagedKVCache)
+        assert leaf.s_cache == cap
+        assert leaf.page_table.shape[-1] == \
+            paged.num_logical_pages(cap, 4)
+        assert not np.asarray(leaf.page_table).any()   # all on trash
+    # pytree: scan-sliceable (leading count dim) and jit-traversable
+    leaves = jax.tree.leaves(cache)
+    assert all(hasattr(x, "shape") for x in leaves)
+
+
+def test_pad_cache_ignores_paged_leaves():
+    """pad_cache only grows dense AttnCache prefill output; a paged
+    leaf passes through untouched."""
+    cfg = _f32(get_smoke("gemma3-1b"))
+    cache = serve_step.init_paged_cache(cfg, 2, MAX_CTX, page_size=4,
+                                        dtype=jnp.float32)
+    out = serve_step.pad_cache(cache, cfg, MAX_CTX)
+    for sk, pk, _, _ in serve_step.attn_cache_walk(cfg, MAX_CTX):
+        assert out[sk][pk] is cache[sk][pk]
