@@ -68,6 +68,12 @@ FILES = ("BENCH_gemm.json", "BENCH_attention.json", "BENCH_moe.json")
 # than added to the default kernel set.
 SERVE_FILE = "BENCH_serve.json"
 
+# The chaos matrix (loadgen --chaos) rides the serve gates plus
+# recovery-specific ones: leaked pages are a HARD zero (a dead
+# replica's KV pages must all be reclaimed), recovered streams must be
+# token-exact, and recovery latency / recovered count must not regress.
+SERVE_CHAOS_FILE = "BENCH_serve_chaos.json"
+
 # Per-matrix extra point axes beyond backend x policy (attention masks,
 # MoE group-imbalance profiles).
 _EXTRA_AXES = ("mask", "profile")
@@ -192,6 +198,45 @@ def check_serve_file(name: str, *, tol: float, baseline_dir: str,
                 f"{name}: {key} rejection rate "
                 f"{np_['rejection_rate']:.3f} grew past baseline "
                 f"{bp['rejection_rate']:.3f} (gate: {rj_bound:.3f})")
+        if "chaos" in bp:
+            failures += _check_chaos_point(name, key, bp, np_, tol=tol)
+    return failures
+
+
+def _check_chaos_point(name: str, key: str, bp: dict, np_: dict,
+                       *, tol: float) -> list[str]:
+    """Recovery gates for one chaos point (see SERVE_CHAOS_FILE)."""
+    failures = []
+    # hard invariants — not tolerance-gated
+    if np_.get("leaked_pages", 0) != 0:
+        failures.append(
+            f"{name}: {key} leaked {np_['leaked_pages']} KV page(s) — "
+            f"dead-replica page reclamation is broken")
+    if not np_.get("recovered_token_exact", False):
+        failures.append(
+            f"{name}: {key} recovered streams are NOT token-exact vs "
+            f"the undisturbed reference")
+    # recovery coverage/latency vs baseline
+    if np_.get("requests_recovered", 0) < bp.get("requests_recovered", 0):
+        failures.append(
+            f"{name}: {key} recovered {np_.get('requests_recovered', 0)} "
+            f"request(s), below baseline "
+            f"{bp.get('requests_recovered', 0)}")
+    b_lat = bp.get("p99_recovery_ticks", 0.0)
+    lat_bound = b_lat * (1.0 + tol) + _SERVE_TICK_FLOOR
+    if np_.get("p99_recovery_ticks", 0.0) > lat_bound:
+        failures.append(
+            f"{name}: {key} p99 recovery latency "
+            f"{np_['p99_recovery_ticks']:.2f} ticks worsened past "
+            f"baseline {b_lat:.2f} (+{tol:.0%} gate: {lat_bound:.2f})")
+    b_rg = bp.get("recovered_goodput_tok_per_tick", 0.0)
+    rg_bound = b_rg * (1.0 - tol) - 0.01
+    if np_.get("recovered_goodput_tok_per_tick", 0.0) < rg_bound:
+        failures.append(
+            f"{name}: {key} recovered goodput "
+            f"{np_['recovered_goodput_tok_per_tick']:.3f} tok/tick "
+            f"dropped below baseline {b_rg:.3f} "
+            f"(-{tol:.0%} gate: {rg_bound:.3f})")
     return failures
 
 
@@ -217,10 +262,11 @@ def main(argv=None) -> int:
                     help="refresh the committed baselines from the "
                          "current results instead of gating")
     ap.add_argument("--files", nargs="+", default=list(FILES),
-                    choices=list(FILES) + [SERVE_FILE],
+                    choices=list(FILES) + [SERVE_FILE, SERVE_CHAOS_FILE],
                     help="matrices to gate/update (default: the kernel "
                          "matrices; the serve-slo lane passes "
-                         f"{SERVE_FILE})")
+                         f"{SERVE_FILE}, the chaos lane "
+                         f"{SERVE_CHAOS_FILE})")
     args = ap.parse_args(argv)
 
     if args.update:
@@ -231,7 +277,9 @@ def main(argv=None) -> int:
 
     failures = []
     for name in args.files:
-        checker = check_serve_file if name == SERVE_FILE else check_file
+        checker = (check_serve_file
+                   if name in (SERVE_FILE, SERVE_CHAOS_FILE)
+                   else check_file)
         failures += checker(name, tol=args.tol,
                             baseline_dir=args.baseline_dir,
                             result_dir=args.result_dir)

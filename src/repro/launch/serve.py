@@ -40,7 +40,8 @@ from repro.core.precision import PrecisionPolicy
 from repro.models import api
 from repro.runtime import serve_step
 
-__all__ = ["ServeEngine", "Request", "QueueFull", "main"]
+__all__ = ["ServeEngine", "Request", "QueueFull", "RecoveryMismatch",
+           "main"]
 
 
 class _PageAllocator:
@@ -86,6 +87,26 @@ class QueueFull(RuntimeError):
         self.max_queue = max_queue
 
 
+class RecoveryMismatch(RuntimeError):
+    """Token-exact recovery failed: re-prefilling ``prompt +
+    out_tokens[:-1]`` on the new replica predicted a different token
+    than the one the dead replica had already emitted.  Under greedy
+    decode and a deterministic policy this must never happen — it means
+    the two replicas disagree numerically (e.g. a policy mismatch), so
+    recovery refuses to silently fork the stream."""
+
+    def __init__(self, rid: int, index: int, expected: int, got: int):
+        super().__init__(
+            f"request {rid}: recovery re-prefill predicted token {got} "
+            f"at output index {index} but the original stream emitted "
+            f"{expected} — replicas are not bit-identical under this "
+            f"policy")
+        self.rid = rid
+        self.index = index
+        self.expected = expected
+        self.got = got
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -94,6 +115,16 @@ class Request:
     session: str | None = None   # pool-level affinity key (multi-turn)
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # fault-tolerance surface: a deadline in ENGINE ticks (virtual
+    # time, so it is deterministic and survives rehoming — ticks_used
+    # rides on the request, not on any one engine's counter), and
+    # terminal disposition flags.  ``recoveries`` counts how many times
+    # the request was rehomed after a replica death.
+    deadline_ticks: int | None = None
+    ticks_used: int = 0
+    cancelled: bool = False
+    expired: bool = False
+    recoveries: int = 0
     # latency accounting — MONOTONIC clock, seconds (a wall-clock step
     # under NTP would corrupt latency_s/queue_s); wall_time is the one
     # wall timestamp, kept for log attribution only.
@@ -222,9 +253,12 @@ class ServeEngine:
     def _validate(self, req: Request) -> None:
         n_img = (self.cfg.num_image_tokens
                  if self.cfg.family == "vlm" else 0)
-        if n_img + len(req.prompt) >= self.max_ctx:
+        # a recovered request re-prefills prompt + out_tokens[:-1], so
+        # THAT is the length that must fit the prefill context
+        plen = len(req.prompt) + max(0, len(req.out_tokens) - 1)
+        if n_img + plen >= self.max_ctx:
             raise ValueError(
-                f"request {req.rid}: prompt length {len(req.prompt)}"
+                f"request {req.rid}: prompt length {plen}"
                 f"{f' (+{n_img} image tokens)' if n_img else ''} does not "
                 f"fit the engine context (max_ctx={self.max_ctx})")
 
@@ -373,6 +407,17 @@ class ServeEngine:
         prompt's first sampled token counts against max_new_tokens and
         may itself be EOS — then the request completes without ever
         occupying a decode slot.
+
+        A request arriving with ``out_tokens`` already populated is a
+        RECOVERY re-admission (its previous replica died mid-decode):
+        the engine re-prefills ``prompt + out_tokens[:-1]`` and checks
+        that the prefill's greedy next token equals the last token the
+        dead replica emitted — under greedy decode this pins the resumed
+        stream bit-identical to an undisturbed run (the same invariant
+        that makes staggered admission token-exact).  A disagreement
+        raises ``RecoveryMismatch`` rather than silently forking the
+        stream.  No token is appended and nothing is re-counted: the
+        recovered tokens were already generated once.
         """
         slot = self._free_slot()
         if slot is None:
@@ -387,12 +432,18 @@ class ServeEngine:
             # pure function of prompt length + token budget, so a
             # pool-pressure refusal costs nothing — the request stays
             # queued with no speculative first token to roll back.
+            # (Recovery demand is identical: prompt + budget is
+            # unchanged by rehoming.)
             alloc_map = self._alloc_pages(req)
             if alloc_map is None:
                 return False
         n_img = (self.cfg.num_image_tokens
                  if self.cfg.family == "vlm" else 0)
-        prompt = jnp.asarray(req.prompt)[None]              # (1, S)
+        resume = len(req.out_tokens) > 0
+        toks = (np.concatenate([np.asarray(req.prompt, np.int32),
+                                np.asarray(req.out_tokens[:-1], np.int32)])
+                if resume else np.asarray(req.prompt, np.int32))
+        prompt = jnp.asarray(toks)[None]                    # (1, S[+k-1])
         batch = {"tokens": prompt}
         if self.cfg.family == "audio":
             batch["frames"] = jnp.zeros(
@@ -402,27 +453,36 @@ class ServeEngine:
                 (1, self.cfg.num_image_tokens, self.cfg.d_model),
                 jnp.float32)
         logits, cache1 = self._prefill(self.params, batch)
-        req.t_admit = time.monotonic()
         first = int(jnp.argmax(logits[0, -1]))
-        req.out_tokens.append(first)
-        req.t_first = time.monotonic()
-        self.tokens_generated += 1
-        if self.metrics is not None:
-            self.metrics.histogram(
-                "serve_queue_wait_seconds",
-                "submit-to-admission wait").observe(
-                    req.queue_s, replica=self.replica)
-            self.metrics.histogram(
-                "serve_ttft_seconds",
-                "submit-to-first-token latency").observe(
-                    req.ttft_s, replica=self.replica)
-            # the prefill-sampled first token is generated HERE, before
-            # the slot ever ticks — count it where it happens
-            self.metrics.counter(
-                "serve_tokens", "decoded tokens").inc(
-                    1, replica=self.replica)
-        if first == self.eos_id or req.max_new_tokens <= 1:
-            # EOS (or a 1-token budget) straight out of prefill: the
+        if resume:
+            if first != req.out_tokens[-1]:
+                if alloc_map is not None:
+                    self._free_pages(alloc_map)
+                raise RecoveryMismatch(
+                    req.rid, len(req.out_tokens) - 1,
+                    req.out_tokens[-1], first)
+        else:
+            req.t_admit = time.monotonic()
+            req.out_tokens.append(first)
+            req.t_first = time.monotonic()
+            self.tokens_generated += 1
+            if self.metrics is not None:
+                self.metrics.histogram(
+                    "serve_queue_wait_seconds",
+                    "submit-to-admission wait").observe(
+                        req.queue_s, replica=self.replica)
+                self.metrics.histogram(
+                    "serve_ttft_seconds",
+                    "submit-to-first-token latency").observe(
+                        req.ttft_s, replica=self.replica)
+                # the prefill-sampled first token is generated HERE,
+                # before the slot ever ticks — count it where it happens
+                self.metrics.counter(
+                    "serve_tokens", "decoded tokens").inc(
+                        1, replica=self.replica)
+        if (req.out_tokens[-1] == self.eos_id
+                or len(req.out_tokens) >= req.max_new_tokens):
+            # EOS (or an exhausted budget) straight out of prefill: the
             # request is done; the slot stays free for the next one
             # (its reserved pages go straight back — tables were never
             # written, so no zeroing is needed).
@@ -455,11 +515,17 @@ class ServeEngine:
             self._slot_pages[slot] = alloc_map
         else:
             self.cache = jax.tree.map(splice, self.cache, cache1)
+        # invariant (fresh k=1 and resumed k>1 alike): after k emitted
+        # tokens the cache holds prompt + out[:k-1], the next input is
+        # out[k-1] at position n_img + S + k - 1, and k counted against
+        # the budget — so a resumed slot ticks exactly like the dead one
+        # would have.
         self.slot_req[slot] = req
-        self.last_tok = self.last_tok.at[slot].set(first)
-        self.pos = self.pos.at[slot].set(n_img + len(req.prompt))
+        self.last_tok = self.last_tok.at[slot].set(req.out_tokens[-1])
+        self.pos = self.pos.at[slot].set(n_img + len(toks))
         self.active = self.active.at[slot].set(True)
-        self.remaining = self.remaining.at[slot].set(req.max_new_tokens - 1)
+        self.remaining = self.remaining.at[slot].set(
+            req.max_new_tokens - len(req.out_tokens))
         return True
 
     # ------------------------------------------------------------- tick
@@ -520,15 +586,119 @@ class ServeEngine:
         return n_active
 
     def step(self) -> int:
-        """Admit as many queued requests as slots allow, then tick."""
+        """Expire overdue work, admit as many queued requests as slots
+        allow, tick, then age every request still in flight (deadlines
+        count engine steps of ownership, so they are deterministic in
+        virtual time and survive rehoming to another replica)."""
+        self._expire_due()
         while self.queue and self.admit(self.queue[0]):
             self.queue.popleft()
         self._m_queue_depth()
-        return self.tick()
+        n = self.tick()
+        for r in self.queue:
+            r.ticks_used += 1
+        for r in self.slot_req:
+            if r is not None:
+                r.ticks_used += 1
+        return n
 
     @property
     def idle(self) -> bool:
         return not self.queue and all(r is None for r in self.slot_req)
+
+    # ------------------------------------------------- fault tolerance
+
+    def _release_slot(self, slot: int) -> None:
+        """Host-side slot teardown outside the normal finish path
+        (cancellation, expiry, evacuation): unmask the slot from the
+        jit'd tick and reclaim its pages.  The cache rows themselves
+        need no scrubbing — an inactive slot is frozen in-graph and its
+        region is overwritten by the next admission's splice."""
+        self.slot_req[slot] = None
+        self.active = self.active.at[slot].set(False)
+        self.remaining = self.remaining.at[slot].set(0)
+        if self.kv_layout == "paged" and self._slot_pages[slot]:
+            self._free_pages(self._slot_pages[slot], slot=slot)
+            self._slot_pages[slot] = None
+
+    def _finish(self, req: Request, *, cancelled: bool = False,
+                expired: bool = False) -> None:
+        req.done = True
+        req.cancelled = cancelled
+        req.expired = expired
+        req.t_done = time.monotonic()
+
+    def _expire_due(self) -> list[Request]:
+        """Terminate every request whose tick deadline has passed —
+        queued or mid-decode — freeing its slot and pages."""
+        expired: list[Request] = []
+        for r in [r for r in self.queue
+                  if r.deadline_ticks is not None
+                  and r.ticks_used >= r.deadline_ticks]:
+            self.queue.remove(r)
+            self._finish(r, expired=True)
+            expired.append(r)
+        for i, r in enumerate(self.slot_req):
+            if (r is not None and r.deadline_ticks is not None
+                    and r.ticks_used >= r.deadline_ticks):
+                self._finish(r, expired=True)
+                self._release_slot(i)
+                expired.append(r)
+        if expired and self.metrics is not None:
+            self.metrics.counter(
+                "serve_requests_expired",
+                "requests terminated at their tick deadline").inc(
+                    len(expired), replica=self.replica)
+        return expired
+
+    def cancel(self, rid: int) -> bool:
+        """Abort a request by id (client disconnect): drop it from the
+        queue or free its decode slot + KV pages.  Returns False when
+        the request is unknown or already done."""
+        for i, r in enumerate(self.slot_req):
+            if r is not None and r.rid == rid:
+                self._finish(r, cancelled=True)
+                self._release_slot(i)
+                break
+        else:
+            for r in self.queue:
+                if r.rid == rid:
+                    self.queue.remove(r)
+                    self._finish(r, cancelled=True)
+                    break
+            else:
+                return False
+        if self.metrics is not None:
+            self.metrics.counter(
+                "serve_requests_cancelled",
+                "requests aborted before completion "
+                "(client disconnect)").inc(replica=self.replica)
+        return True
+
+    def evacuate(self) -> list[Request]:
+        """Strip every unfinished request off this engine, freeing all
+        slots and pages, and return them (decoding slots in slot order
+        with their partial ``out_tokens``, then the queue in FIFO
+        order) so the pool can rehome them.  Purely host-side
+        bookkeeping — safe to run on a crashed replica whose device
+        state is unreachable."""
+        orphans: list[Request] = []
+        for i, r in enumerate(self.slot_req):
+            if r is not None:
+                self._release_slot(i)
+                if not r.done:
+                    orphans.append(r)
+        while self.queue:
+            r = self.queue.popleft()
+            if not r.done:
+                orphans.append(r)
+        return orphans
+
+    def pages_outstanding(self) -> int:
+        """KV pages currently held by slots (leak audit: must be 0 on
+        an idle engine; dense engines report 0)."""
+        return sum(a.num_pages - 1 - a.available
+                   for a in self._allocators.values())
 
     def stats(self, requests: list[Request], wall_s: float) -> dict:
         lat = [r.latency_s for r in requests if r.latency_s is not None]
@@ -598,6 +768,11 @@ def main() -> None:
                     help="pages per pool class (default: full capacity "
                          "+ trash page — lossless; smaller pools trade "
                          "admission backpressure for memory)")
+    ap.add_argument("--deadline-ticks", type=int, default=None,
+                    help="per-request deadline in engine ticks: work "
+                         "still queued or decoding after this many "
+                         "ticks of ownership is expired in-engine "
+                         "(slot + KV pages freed). Default: none")
     ap.add_argument("--replicas", type=int, default=1,
                     help="engine replicas behind a least-loaded router "
                          "with session affinity (repro.serve.pool); 1 "
@@ -707,7 +882,8 @@ def main() -> None:
                         prompt=rng.integers(
                             2, cfg.vocab_size,
                             args.prompt_len).astype(np.int32),
-                        max_new_tokens=args.max_new)
+                        max_new_tokens=args.max_new,
+                        deadline_ticks=args.deadline_ticks)
                 for i in range(args.requests)]
         stats = pool.run(reqs)
         print(f"pool served {stats['requests']} requests across "
@@ -726,7 +902,8 @@ def main() -> None:
     reqs = [Request(rid=i,
                     prompt=rng.integers(2, cfg.vocab_size,
                                         args.prompt_len).astype(np.int32),
-                    max_new_tokens=args.max_new)
+                    max_new_tokens=args.max_new,
+                    deadline_ticks=args.deadline_ticks)
             for i in range(args.requests)]
     stats = eng.run(reqs)
     print(f"served {stats['requests']} requests in {stats['ticks']} ticks "

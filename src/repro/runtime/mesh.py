@@ -39,6 +39,7 @@ __all__ = [
     "make_test_mesh",
     "max_parallel_degree",
     "mesh_spec_for",
+    "replica_mesh_spec",
     "resharder_for",
     "resolve_mesh_flag",
     "resolve_mesh_spec",
@@ -117,6 +118,14 @@ def mesh_spec_for(n_devices: int, cfg=None) -> MeshSpec:
     still carries the experts — the Sharder and the grouped family both
     key on divisibility, not on the axis label."""
     return MeshSpec.from_shape(*choose_mesh_shape(n_devices, cfg))
+
+
+def replica_mesh_spec(n_devices: int, n_active: int, cfg=None) -> MeshSpec:
+    """Per-replica MeshSpec when ``n_devices`` are split evenly across
+    ``n_active`` serving replicas — the single mesh surface for the
+    pool's scale AND replace actions (serve.autoscale), so a repaired
+    replica re-resolves its route exactly like a resized one."""
+    return mesh_spec_for(max(1, n_devices // max(n_active, 1)), cfg)
 
 
 # ------------------------------------------------------------ CLI surface

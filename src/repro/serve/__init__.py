@@ -3,16 +3,24 @@
 Layering (each module imports only downward):
 
     gateway.py    asyncio HTTP/JSON front: token streaming, bounded
-                  admission, 429 + Retry-After backpressure, /metrics
-    autoscale.py  queue-depth + tokens/s driven replica-set resizing,
-                  re-resolving per-replica meshes on scale events
+                  admission, 429 + Retry-After backpressure, request
+                  timeouts/disconnect-cancellation, /metrics
+    autoscale.py  queue-depth + tokens/s driven replica-set resizing
+                  plus the ``replace`` repair action, re-resolving
+                  per-replica meshes on scale events
     pool.py       N in-process ServeEngine replicas: least-loaded
-                  routing, session affinity, bounded queues, drains
+                  routing, session affinity, bounded queues, drains,
+                  death evacuation + token-exact request rehoming
+    faults.py     deterministic seeded fault injection (crash, hang,
+                  slow, admission, page exhaustion) in virtual ticks
+    health.py     per-replica tick heartbeat, HEALTHY/SUSPECT/DEAD/
+                  RECOVERING state machine, circuit-breaker admission
     metrics.py    Prometheus-style counters/gauges/histograms + text
                   exposition (no serve/launch imports — shared by the
                   engine and runtime/monitor.py via duck typing)
     loadgen.py    open-loop Poisson load sweeps in virtual tick time,
                   emitting the CI-gated BENCH_serve.json SLO matrix
+                  (and BENCH_serve_chaos.json under ``--chaos``)
 
 Attribute access is lazy: ``repro.launch.serve`` (the engine) is
 imported by ``pool``/``gateway``, and itself imports
@@ -30,12 +38,23 @@ _LAZY = {
     "Replica": ("repro.serve.pool", "Replica"),
     "ReplicaPool": ("repro.serve.pool", "ReplicaPool"),
     "ScaleEvent": ("repro.serve.pool", "ScaleEvent"),
+    "RecoveryEvent": ("repro.serve.pool", "RecoveryEvent"),
     "AutoscalePolicy": ("repro.serve.autoscale", "AutoscalePolicy"),
     "Autoscaler": ("repro.serve.autoscale", "Autoscaler"),
     "Gateway": ("repro.serve.gateway", "Gateway"),
+    "FaultPlan": ("repro.serve.faults", "FaultPlan"),
+    "FaultSpec": ("repro.serve.faults", "FaultSpec"),
+    "FaultyEngine": ("repro.serve.faults", "FaultyEngine"),
+    "HealthMonitor": ("repro.serve.health", "HealthMonitor"),
+    "HealthPolicy": ("repro.serve.health", "HealthPolicy"),
+    "ReplicaDead": ("repro.serve.health", "ReplicaDead"),
+    "ReplicaState": ("repro.serve.health", "ReplicaState"),
+    "TransientAdmissionError": ("repro.serve.health",
+                                "TransientAdmissionError"),
     "LoadSpec": ("repro.serve.loadgen", "LoadSpec"),
     "run_sweep": ("repro.serve.loadgen", "run_sweep"),
     "QueueFull": ("repro.launch.serve", "QueueFull"),
+    "RecoveryMismatch": ("repro.launch.serve", "RecoveryMismatch"),
     "Request": ("repro.launch.serve", "Request"),
     "ServeEngine": ("repro.launch.serve", "ServeEngine"),
 }

@@ -104,9 +104,28 @@ class Autoscaler:
         """Per-replica MeshSpec after a resize: the device budget split
         across ``n_active`` replicas, re-resolved config-aware — the
         same path ``resharder_for`` takes on device-count change."""
-        from repro.runtime.mesh import mesh_spec_for
-        per_replica = max(1, self.n_devices // max(n_active, 1))
-        return mesh_spec_for(per_replica, self.cfg)
+        from repro.runtime.mesh import replica_mesh_spec
+        return replica_mesh_spec(self.n_devices, n_active, self.cfg)
+
+    # -------------------------------------------------------- repair
+
+    def repair(self) -> ScaleEvent | None:
+        """Availability repair, distinct from elastic resize: rebuild
+        the lowest-index DEAD replica via ``pool.replace_replica``
+        under a re-split device budget.  NOT cooldown-gated — lost
+        capacity is repaired immediately, a drain in progress has
+        nothing to do with it.  One replacement per step keeps the
+        mesh re-resolution consistent with the count it was computed
+        for."""
+        from repro.serve.health import ReplicaState
+        for idx, state in sorted(self.pool.monitor.states().items()):
+            if state is ReplicaState.DEAD:
+                target = min(self.pool.n_active + 1,
+                             self.policy.max_replicas)
+                return self.pool.replace_replica(
+                    idx, mesh=self.mesh_for(max(target, 1)),
+                    reason=f"replica {idx} dead")
+        return None
 
     # -------------------------------------------------------- decide
 
@@ -133,7 +152,8 @@ class Autoscaler:
         return n, ""
 
     def observe(self, tokens_this_step: int) -> ScaleEvent | None:
-        """Fold one pool step's token count in; maybe resize."""
+        """Fold one pool step's token count in; maybe repair a dead
+        replica (immediately) or resize (cooldown-gated)."""
         self._tokens.append(tokens_this_step)
         if self.metrics is not None:
             sig = self.signals()
@@ -141,6 +161,10 @@ class Autoscaler:
                 "serve_queue_per_replica",
                 "queued requests per active replica").set(
                     sig["queue_per_replica"])
+        ev = self.repair()
+        if ev is not None:
+            self._last_action = self.pool.ticks
+            return ev
         if self.pool.ticks - self._last_action < self.policy.cooldown:
             return None
         target, reason = self.decide()

@@ -15,14 +15,28 @@ surface is three routes):
   GET  /metrics       Prometheus text exposition of the shared
                       registry (engine tick/TTFT/queue series
                       included).
-  GET  /healthz       {"ok": true, "replicas": N, "queued": Q}
+  GET  /healthz       {"ok": true, "replicas": N, "queued": Q,
+                       "states": {idx: "healthy"|"suspect"|"dead"|
+                       "recovering"}, ...}
 
 Backpressure is explicit and two-layered: the gateway rejects with
 ``429 Retry-After`` when pool-wide in-flight work exceeds its own
 ``max_inflight`` watermark, and maps the pool/engine's typed
 ``QueueFull`` (per-replica admission watermark, session-affinity
 overload) to the same response — overload turns into a client signal,
-never into unbounded queue growth.
+never into unbounded queue growth.  ``submit_retries`` optionally
+retries QueueFull with exponential backoff BEFORE rejecting — safe
+because a refused submit was never admitted anywhere (idempotent); an
+admitted request is never resubmitted by the gateway.
+
+Failure semantics end to end: a client that disconnects mid-stream
+CANCELS its request (the pool frees the slot and KV pages — a dropped
+connection no longer burns decode until length-stop), and a request
+that outlives ``request_timeout_s`` (or its in-engine tick deadline)
+terminates with ``504 Gateway Timeout`` (unary) or a terminal
+``"expired"`` line (stream).  Cancellation is applied by the pump
+thread between pool steps, so engine state is never mutated
+concurrently with a tick.
 
 The engine pump is one background task: it steps the pool in a
 single-thread executor (the tick blocks on device compute; handler
@@ -59,7 +73,10 @@ class _Inflight:
 class Gateway:
     def __init__(self, pool: ReplicaPool, *, host: str = "127.0.0.1",
                  port: int = 8080, max_inflight: int | None = None,
-                 retry_after_s: float = 1.0, metrics=None):
+                 retry_after_s: float = 1.0, metrics=None,
+                 request_timeout_s: float | None = None,
+                 submit_retries: int = 0,
+                 retry_backoff_s: float = 0.05):
         self.pool = pool
         self.host = host
         self.port = port
@@ -70,8 +87,12 @@ class Gateway:
             max_inflight = pool.max_replicas * (per + pool.batch)
         self.max_inflight = max_inflight
         self.retry_after_s = retry_after_s
+        self.request_timeout_s = request_timeout_s
+        self.submit_retries = submit_retries
+        self.retry_backoff_s = retry_backoff_s
         self.metrics = metrics if metrics is not None else pool.metrics
         self._inflight: dict[int, _Inflight] = {}
+        self._cancels: set[int] = set()   # applied between pool steps
         self._rid = 0
         self._server: asyncio.AbstractServer | None = None
         self._pump_task: asyncio.Task | None = None
@@ -109,14 +130,37 @@ class Gateway:
     async def _pump(self) -> None:
         loop = asyncio.get_running_loop()
         while not self._closing:
-            if self.pool.idle and not self._inflight:
+            if self.pool.idle and not self._inflight \
+                    and not self._cancels:
                 self._wake.clear()
                 await self._wake.wait()
                 continue
-            await loop.run_in_executor(self._exec, self.pool.step)
+            await loop.run_in_executor(self._exec, self._step_pool)
             self._drain()
             # yield so handler coroutines flush their token queues
             await asyncio.sleep(0)
+
+    def _step_pool(self) -> int:
+        """Runs on the pump thread: apply pending cancellations, then
+        step.  Cancels mutate engine slot state, so they must never
+        interleave with a tick — routing them through here serializes
+        them with the step they precede."""
+        while self._cancels:
+            self.pool.cancel(self._cancels.pop())
+        return self.pool.step()
+
+    def _cancel(self, req: Request) -> None:
+        """Client disconnected: drop the stream and schedule the
+        request's cancellation (slot + KV pages freed, in-flight
+        accounting decremented)."""
+        self._inflight.pop(req.rid, None)
+        if not req.done:
+            self._cancels.add(req.rid)
+            self._wake.set()
+        if self.metrics is not None:
+            self.metrics.counter(
+                "gateway_disconnects",
+                "streams dropped by the client before completion").inc()
 
     def _drain(self) -> None:
         """Push newly decoded tokens of every in-flight request into
@@ -143,11 +187,17 @@ class Gateway:
             if method == "GET" and path == "/metrics":
                 await self._respond_metrics(writer)
             elif method == "GET" and path == "/healthz":
+                states = {str(i): s.name.lower() for i, s
+                          in sorted(self.pool.monitor.states().items())}
                 await self._respond_json(writer, 200, {
-                    "ok": True, "replicas": self.pool.n_active,
-                    "queued": self.pool.total_queued()})
+                    "ok": self.pool.n_active > 0,
+                    "replicas": self.pool.n_active,
+                    "queued": self.pool.total_queued(),
+                    "states": states,
+                    "deaths": self.pool.monitor.deaths,
+                    "recovered": len(self.pool.recovery_events)})
             elif method == "POST" and path == "/v1/generate":
-                await self._handle_generate(writer, body)
+                await self._handle_generate(writer, reader, body)
             else:
                 await self._respond_json(writer, 404, {
                     "error": f"no route {method} {path}"})
@@ -176,7 +226,8 @@ class Gateway:
 
     # -------------------------------------------------------- routes
 
-    async def _handle_generate(self, writer, body: bytes) -> None:
+    async def _handle_generate(self, writer, reader,
+                               body: bytes) -> None:
         try:
             payload = json.loads(body or b"{}")
             prompt = np.asarray(payload["prompt"], np.int32)
@@ -196,25 +247,64 @@ class Gateway:
         req = Request(
             rid=self._rid, prompt=prompt,
             max_new_tokens=int(payload.get("max_new_tokens", 16)),
-            session=payload.get("session"))
+            session=payload.get("session"),
+            deadline_ticks=payload.get("deadline_ticks"))
         st = _Inflight(req)
-        try:
-            replica = self.pool.submit(req)
-        except QueueFull as e:
-            await self._reject(writer, str(e))
-            return
-        except ValueError as e:        # oversized prompt
-            await self._respond_json(writer, 400, {"error": str(e)})
-            return
+        # Submit retries are safe ONLY here: a QueueFull submit never
+        # entered any queue, so resubmitting cannot duplicate work.
+        # Once admitted, the request is never resubmitted.
+        replica = None
+        for attempt in range(self.submit_retries + 1):
+            try:
+                replica = self.pool.submit(req)
+                break
+            except QueueFull as e:
+                if attempt == self.submit_retries:
+                    await self._reject(writer, str(e))
+                    return
+                await asyncio.sleep(
+                    self.retry_backoff_s * (2 ** attempt))
+            except ValueError as e:    # oversized prompt
+                await self._respond_json(writer, 400, {"error": str(e)})
+                return
         self._inflight[req.rid] = st
         self._wake.set()
         if payload.get("stream", True):
-            await self._stream_response(writer, req, st, replica)
+            await self._stream_response(writer, reader, req, st, replica)
         else:
-            await self._unary_response(writer, req, st, replica)
+            await self._unary_response(writer, reader, req, st, replica)
 
-    async def _stream_response(self, writer, req: Request, st: _Inflight,
-                               replica: int) -> None:
+    async def _next_event(self, st: _Inflight, eof: asyncio.Task,
+                          deadline: float | None):
+        """One of ("token", i, tok) / ("done", n, None) /
+        ("disconnect",) / ("timeout",): the stream's token queue raced
+        against client EOF and the request deadline."""
+        loop = asyncio.get_running_loop()
+        timeout = None if deadline is None \
+            else max(deadline - loop.time(), 0.0)
+        get = asyncio.ensure_future(st.queue.get())
+        done, _ = await asyncio.wait(
+            {get, eof}, timeout=timeout,
+            return_when=asyncio.FIRST_COMPLETED)
+        if get in done:
+            return get.result()
+        get.cancel()
+        if eof in done:
+            return ("disconnect",)
+        return ("timeout",)
+
+    def _timeout(self, req: Request) -> None:
+        self._inflight.pop(req.rid, None)
+        if not req.done:
+            self._cancels.add(req.rid)
+            self._wake.set()
+        if self.metrics is not None:
+            self.metrics.counter(
+                "gateway_timeouts",
+                "requests terminated at request_timeout_s").inc()
+
+    async def _stream_response(self, writer, reader, req: Request,
+                               st: _Inflight, replica: int) -> None:
         writer.write(
             b"HTTP/1.1 200 OK\r\n"
             b"Content-Type: application/x-ndjson\r\n"
@@ -222,29 +312,81 @@ class Gateway:
             b"Connection: close\r\n"
             + f"X-Replica: {replica}\r\n\r\n".encode())
         await writer.drain()
-        while True:
-            kind, index, tok = await st.queue.get()
-            if kind == "done":
-                tail = {"rid": req.rid, "done": True, "n_tokens": index,
-                        "ttft_s": req.ttft_s, "latency_s": req.latency_s}
-                self._write_chunk(writer, tail)
-                writer.write(b"0\r\n\r\n")
-                await writer.drain()
-                return
-            self._write_chunk(writer, {"rid": req.rid, "index": index,
-                                       "token": int(tok)})
-            await writer.drain()
+        # the request body is fully consumed, so any further read
+        # resolving means the client closed its end — EOF doubles as
+        # the disconnect watch
+        eof = asyncio.ensure_future(reader.read(1))
+        loop = asyncio.get_running_loop()
+        deadline = None if self.request_timeout_s is None \
+            else loop.time() + self.request_timeout_s
+        try:
+            while True:
+                ev = await self._next_event(st, eof, deadline)
+                if ev[0] == "disconnect":
+                    self._cancel(req)
+                    return
+                if ev[0] == "timeout":
+                    self._timeout(req)
+                    self._write_chunk(writer, {
+                        "rid": req.rid, "done": True, "expired": True,
+                        "error": "request timed out"})
+                    writer.write(b"0\r\n\r\n")
+                    await writer.drain()
+                    return
+                kind, index, tok = ev
+                if kind == "done":
+                    tail = {"rid": req.rid, "done": True,
+                            "n_tokens": index, "ttft_s": req.ttft_s,
+                            "latency_s": req.latency_s}
+                    if req.expired:
+                        tail["expired"] = True
+                    if req.recoveries:
+                        tail["recoveries"] = req.recoveries
+                    self._write_chunk(writer, tail)
+                    writer.write(b"0\r\n\r\n")
+                    await writer.drain()
+                    return
+                try:
+                    self._write_chunk(writer, {
+                        "rid": req.rid, "index": index,
+                        "token": int(tok)})
+                    await writer.drain()
+                except (ConnectionError, BrokenPipeError):
+                    self._cancel(req)
+                    return
+        finally:
+            eof.cancel()
 
-    async def _unary_response(self, writer, req: Request, st: _Inflight,
-                              replica: int) -> None:
-        while True:
-            kind, _, _ = await st.queue.get()
-            if kind == "done":
-                break
+    async def _unary_response(self, writer, reader, req: Request,
+                              st: _Inflight, replica: int) -> None:
+        eof = asyncio.ensure_future(reader.read(1))
+        loop = asyncio.get_running_loop()
+        deadline = None if self.request_timeout_s is None \
+            else loop.time() + self.request_timeout_s
+        try:
+            while True:
+                ev = await self._next_event(st, eof, deadline)
+                if ev[0] == "disconnect":
+                    self._cancel(req)
+                    return
+                if ev[0] == "timeout":
+                    self._timeout(req)
+                    await self._respond_json(writer, 504, {
+                        "rid": req.rid, "error": "request timed out"})
+                    return
+                if ev[0] == "done":
+                    break
+        finally:
+            eof.cancel()
+        if req.expired:
+            await self._respond_json(writer, 504, {
+                "rid": req.rid, "error": "request deadline expired",
+                "tokens": list(req.out_tokens)})
+            return
         await self._respond_json(writer, 200, {
             "rid": req.rid, "tokens": list(req.out_tokens),
             "ttft_s": req.ttft_s, "latency_s": req.latency_s,
-            "replica": replica})
+            "replica": replica, "recoveries": req.recoveries})
 
     def _write_chunk(self, writer, obj: dict) -> None:
         data = (json.dumps(obj) + "\n").encode()
@@ -273,7 +415,7 @@ class Gateway:
         await writer.drain()
 
     _STATUS = {200: "OK", 400: "Bad Request", 404: "Not Found",
-               429: "Too Many Requests"}
+               429: "Too Many Requests", 504: "Gateway Timeout"}
 
     async def _respond_json(self, writer, status: int, obj: dict,
                             extra_headers: dict | None = None) -> None:

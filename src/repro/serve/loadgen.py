@@ -95,13 +95,22 @@ def sample_workload(spec: LoadSpec, rate: float, vocab: int,
 
 
 def run_point(pool, spec: LoadSpec, rate: float, *, vocab: int,
-              autoscaler=None) -> dict:
+              autoscaler=None, chaos=None, reference=None) -> dict:
     """Drive one arrival-rate point through ``pool`` in virtual time.
 
     Arrivals scheduled at tick t are submitted before step t runs; a
     token first observed after step t counts latency ``t + 1 -
     arrival``.  Rejected submissions (QueueFull anywhere in the
     admission path) are dropped and counted — open loop, no retry.
+
+    With ``chaos`` (a ``serve.faults.FaultPlan`` already baked into the
+    pool's engine factory) the point additionally reports the recovery
+    columns: replica deaths, recovered requests, p99 recovery latency,
+    recovered-request goodput, the allocator leak audit
+    (``leaked_pages`` must be 0), and — when ``reference`` (a
+    ``(prompt, max_new) -> tokens`` oracle serving one request on an
+    undisturbed engine) is given — ``recovered_token_exact``, the bit-
+    identity of every recovered stream against its undisturbed twin.
     """
     work = sample_workload(spec, rate, vocab)
     pending = list(work)
@@ -147,7 +156,7 @@ def run_point(pool, spec: LoadSpec, rate: float, *, vocab: int,
     def pct(xs, q):
         return float(np.percentile(xs, q)) if len(xs) else 0.0
 
-    return {
+    point = {
         "arrival_rate": rate,
         "requests": spec.n_requests,
         "completed": len(done),
@@ -165,34 +174,114 @@ def run_point(pool, spec: LoadSpec, rate: float, *, vocab: int,
         "wall_s": round(wall_s, 4),
         "tok_per_s_wall": round(tokens / max(wall_s, 1e-9), 2),
     }
+    if chaos is None:
+        return point
+    # ---- recovery columns (chaos runs only, so undisturbed points —
+    # and the committed BENCH_serve.json schema — are byte-identical
+    # to before the fault framework existed)
+    recs = pool.recovery_events
+    rec_lat = np.array([ev.latency_ticks for ev in recs], np.float64)
+    recovered_rids = {ev.rid for ev in recs}
+    recovered_reqs = [req for _, req in work
+                      if req.rid in recovered_rids and req.done
+                      and not (req.expired or req.cancelled)]
+    exact = True
+    for req in recovered_reqs:
+        if reference is not None:
+            ref = reference(req.prompt, req.max_new_tokens)
+            if list(req.out_tokens) != list(ref):
+                exact = False
+    point.update({
+        "chaos": chaos.describe(),
+        "replica_deaths": pool.monitor.deaths,
+        "requests_recovered": len(recs),
+        "p99_recovery_ticks": round(pct(rec_lat, 99), 4),
+        "recovered_goodput_tok_per_tick": round(
+            sum(len(r.out_tokens) for r in recovered_reqs)
+            / max(total_ticks, 1), 6),
+        "recovered_token_exact": bool(exact),
+        # allocator free-count audit: every page a dead replica held
+        # must have come back through the allocator free path
+        "leaked_pages": pool.pages_outstanding(),
+        "expired": sum(req.expired for _, req in work),
+    })
+    return point
 
 
 def run_sweep(cfg, params, *, rates, spec: LoadSpec, replicas: int = 2,
               batch_size: int = 4, max_ctx: int = 64, policy=None,
               max_queue: int | None = 8, autoscale=None,
-              metrics=None) -> dict:
+              metrics=None, chaos=None, health=None,
+              kv_layout: str = "dense", kv_page_size: int = 8,
+              kv_quant: str | None = None,
+              kv_pages: int | None = None) -> dict:
     """One pool per rate point (points stay independent; engines share
-    the params tree), swept lowest rate first."""
+    the params tree), swept lowest rate first.
+
+    ``chaos`` (a ``serve.faults.FaultPlan``) wraps each point's engine
+    factory so the SAME seeded fault schedule hits every rate point;
+    recovery needs repair, so a chaos sweep always runs an autoscaler
+    (default policy when ``autoscale`` is None).  The kv_* knobs route
+    the engines through the paged / quantized cache layouts, exercising
+    dead-replica page reclamation for real."""
+    from repro.launch.serve import ServeEngine
     from repro.serve.pool import ReplicaPool
+    kv_kwargs = dict(kv_layout=kv_layout, kv_page_size=kv_page_size,
+                     kv_quant=kv_quant, kv_pages=kv_pages)
+
+    def engine_factory(idx, pol):
+        eng = ServeEngine(
+            cfg, batch_size=batch_size, max_ctx=max_ctx, policy=pol,
+            eos_id=-1, max_queue=max_queue, metrics=metrics,
+            replica=str(idx), **kv_kwargs)
+        eng.load(params)
+        return eng
+
+    reference = None
+    if chaos is not None:
+        # undisturbed oracle for the token-exactness column: one fresh
+        # single-slot engine serving one request at a time (batch-
+        # composition independence makes that the canonical stream)
+        ref_eng = ServeEngine(cfg, batch_size=1, max_ctx=max_ctx,
+                              policy=policy, eos_id=-1, **kv_kwargs)
+        ref_eng.load(params)
+
+        def reference(prompt, max_new):
+            req = Request(rid=0, prompt=prompt, max_new_tokens=max_new)
+            ref_eng.run([req])
+            return list(req.out_tokens)
+
+        if autoscale is None:
+            from repro.serve.autoscale import AutoscalePolicy
+            autoscale = AutoscalePolicy(
+                min_replicas=max(1, replicas),
+                max_replicas=max(replicas, 2))
     points = []
     for rate in sorted(rates):
+        factory = engine_factory
+        if chaos is not None:
+            factory = chaos.wrap_factory(factory, n_replicas=replicas)
         pool = ReplicaPool(
             cfg, params, replicas=replicas, batch_size=batch_size,
             max_ctx=max_ctx, policy=policy, max_queue=max_queue,
             eos_id=-1,  # budget-only termination => deterministic ticks
-            metrics=metrics)
+            metrics=metrics, health=health,
+            engine_factory=(factory if (chaos is not None
+                                        or kv_layout != "dense")
+                            else None))
         scaler = None
         if autoscale is not None:
             from repro.serve.autoscale import Autoscaler
             scaler = Autoscaler(pool, autoscale, cfg=cfg,
                                 metrics=metrics)
-        point = run_point(pool, spec, rate,
-                          vocab=cfg.vocab_size, autoscaler=scaler)
+        point = run_point(pool, spec, rate, vocab=cfg.vocab_size,
+                          autoscaler=scaler, chaos=chaos,
+                          reference=reference)
         if scaler is not None:
             point["replicas_final"] = pool.n_active
             point["scale_events"] = len(pool.scale_events)
         points.append(point)
-    return {
+    out = {
         "bench": "serve",
         "replicas": replicas,
         "batch_size": batch_size,
@@ -204,6 +293,13 @@ def run_sweep(cfg, params, *, rates, spec: LoadSpec, replicas: int = 2,
                  "are info-only)",
         "points": points,
     }
+    if chaos is not None:
+        out["bench"] = "serve_chaos"
+        out["chaos"] = chaos.describe()
+        out["kv_layout"] = kv_layout
+        if kv_quant:
+            out["kv_quant"] = kv_quant
+    return out
 
 
 def main(argv=None) -> None:
@@ -227,8 +323,24 @@ def main(argv=None) -> None:
     ap.add_argument("--autoscale", default=None, metavar="MIN:MAX",
                     help="enable the autoscaler over [MIN, MAX] "
                          "replicas instead of a fixed pool")
+    ap.add_argument("--chaos", default=None, metavar="SEED:PLAN",
+                    help="run the sweep under a seeded fault plan "
+                         "(serve.faults grammar, e.g. "
+                         "'7:crash@6,hang@14x4') and report the "
+                         "recovery columns; recovery requires the "
+                         "autoscaler's replace action, enabled "
+                         "automatically. Use a deterministic policy "
+                         "(--policy f32) so the recovery re-prefill "
+                         "is bit-exact")
+    ap.add_argument("--kv-layout", choices=("dense", "paged"),
+                    default="dense")
+    ap.add_argument("--kv-page-size", type=int, default=8)
+    ap.add_argument("--kv-quant", choices=("none", "int8"),
+                    default="none")
+    ap.add_argument("--kv-pages", type=int, default=None)
     ap.add_argument("--out", default="BENCH_serve.json",
-                    help="output path for the serve SLO matrix")
+                    help="output path for the serve SLO matrix "
+                         "(BENCH_serve_chaos.json for --chaos runs)")
     args = ap.parse_args(argv)
 
     import jax
@@ -241,25 +353,48 @@ def main(argv=None) -> None:
     if args.autoscale:
         lo, hi = (int(x) for x in args.autoscale.split(":"))
         autoscale = AutoscalePolicy(min_replicas=lo, max_replicas=hi)
+    chaos = None
+    if args.chaos:
+        from repro.serve.faults import FaultPlan
+        chaos = FaultPlan.parse(args.chaos)
+    kv_quant = None if args.kv_quant == "none" else args.kv_quant
+    if args.kv_layout == "paged":
+        # the engine tick decodes against the paged cache, so the
+        # attention route must carry paged_decode (mirrors launch/serve)
+        from repro.configs.base import execution_policy_for
+        policy = execution_policy_for(
+            cfg, default=args.policy,
+            require={"attention": ("decode", "paged_decode")})
+    else:
+        policy = PrecisionPolicy.uniform(args.policy)
     payload = run_sweep(
         cfg, params, rates=rates, spec=spec, replicas=args.replicas,
-        batch_size=args.batch, max_ctx=args.max_ctx,
-        policy=PrecisionPolicy.uniform(args.policy),
-        max_queue=args.max_queue, autoscale=autoscale)
+        batch_size=args.batch, max_ctx=args.max_ctx, policy=policy,
+        max_queue=args.max_queue, autoscale=autoscale, chaos=chaos,
+        kv_layout=args.kv_layout, kv_page_size=args.kv_page_size,
+        kv_quant=kv_quant, kv_pages=args.kv_pages)
     payload["arch"] = args.arch
     payload["smoke"] = bool(args.smoke)
+    payload["policy"] = args.policy
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
         f.write("\n")
     print(f"loadgen: {len(rates)} rate point(s) -> "
           f"{os.path.abspath(args.out)}")
     for p in payload["points"]:
-        print(f"  rate={p['arrival_rate']:.2f}: "
-              f"ttft p50/p99 {p['p50_ttft_ticks']:.1f}/"
-              f"{p['p99_ttft_ticks']:.1f} ticks, "
-              f"e2e p99 {p['p99_e2e_ticks']:.1f}, "
-              f"goodput {p['goodput_tok_per_tick']:.2f} tok/tick, "
-              f"rejected {p['rejected']}/{p['requests']}")
+        line = (f"  rate={p['arrival_rate']:.2f}: "
+                f"ttft p50/p99 {p['p50_ttft_ticks']:.1f}/"
+                f"{p['p99_ttft_ticks']:.1f} ticks, "
+                f"e2e p99 {p['p99_e2e_ticks']:.1f}, "
+                f"goodput {p['goodput_tok_per_tick']:.2f} tok/tick, "
+                f"rejected {p['rejected']}/{p['requests']}")
+        if chaos is not None:
+            line += (f", deaths {p['replica_deaths']}, recovered "
+                     f"{p['requests_recovered']} (p99 "
+                     f"{p['p99_recovery_ticks']:.1f} ticks, exact="
+                     f"{p['recovered_token_exact']}), leaked pages "
+                     f"{p['leaked_pages']}")
+        print(line)
 
 
 if __name__ == "__main__":

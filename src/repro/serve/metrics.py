@@ -37,6 +37,7 @@ __all__ = [
     "Histogram",
     "MetricsRegistry",
     "DEFAULT_LATENCY_BUCKETS",
+    "TICK_BUCKETS",
 ]
 
 # Seconds-scale latency buckets: spans jit'd smoke ticks (~ms) through
@@ -44,6 +45,11 @@ __all__ = [
 DEFAULT_LATENCY_BUCKETS = (
     0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5,
     1.0, 2.5, 5.0, 10.0, 30.0)
+
+# Virtual-tick buckets for durations measured in engine/pool steps
+# (recovery latency, drain time) — deterministic units, so these
+# histograms are bit-reproducible across runs like the loadgen sweeps.
+TICK_BUCKETS = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0)
 
 
 def _fmt_labels(labels: dict[str, str]) -> str:

@@ -46,6 +46,18 @@ class FakeEngine:
         for i, r in enumerate(self.slot_req):
             if r is None and self.queue:
                 req = self.queue.popleft()
+                if req.out_tokens:
+                    # recovery re-admission (the pool rehomed it after
+                    # a replica death): tokens are a pure function of
+                    # (rid, index), so resuming at len(out_tokens) is
+                    # bit-identical by construction — mirroring the
+                    # real engine's re-prefill resume
+                    if len(req.out_tokens) < req.max_new_tokens:
+                        self.slot_req[i] = req
+                    else:
+                        req.done = True
+                        req.t_done = time.monotonic()
+                    continue
                 req.t_admit = time.monotonic()
                 req.out_tokens.append(fake_token(req.rid, 0))
                 req.t_first = time.monotonic()
@@ -56,7 +68,22 @@ class FakeEngine:
                 else:
                     self.slot_req[i] = req
 
+    def _expire_due(self) -> None:
+        for r in [r for r in self.queue
+                  if r.deadline_ticks is not None
+                  and r.ticks_used >= r.deadline_ticks]:
+            self.queue.remove(r)
+            r.done = r.expired = True
+            r.t_done = time.monotonic()
+        for i, r in enumerate(self.slot_req):
+            if (r is not None and r.deadline_ticks is not None
+                    and r.ticks_used >= r.deadline_ticks):
+                r.done = r.expired = True
+                r.t_done = time.monotonic()
+                self.slot_req[i] = None
+
     def step(self) -> int:
+        self._expire_due()
         self._admit_all()
         n = 0
         for i, req in enumerate(self.slot_req):
@@ -71,7 +98,43 @@ class FakeEngine:
                 req.t_done = time.monotonic()
                 self.slot_req[i] = None
         self.ticks += 1
+        for r in self.queue:
+            r.ticks_used += 1
+        for r in self.slot_req:
+            if r is not None:
+                r.ticks_used += 1
         return n
+
+    def cancel(self, rid: int) -> bool:
+        for i, r in enumerate(self.slot_req):
+            if r is not None and r.rid == rid:
+                r.done = r.cancelled = True
+                r.t_done = time.monotonic()
+                self.slot_req[i] = None
+                return True
+        for r in self.queue:
+            if r.rid == rid:
+                self.queue.remove(r)
+                r.done = r.cancelled = True
+                r.t_done = time.monotonic()
+                return True
+        return False
+
+    def evacuate(self) -> list:
+        orphans = []
+        for i, r in enumerate(self.slot_req):
+            if r is not None:
+                self.slot_req[i] = None
+                if not r.done:
+                    orphans.append(r)
+        while self.queue:
+            r = self.queue.popleft()
+            if not r.done:
+                orphans.append(r)
+        return orphans
+
+    def pages_outstanding(self) -> int:
+        return 0
 
     @property
     def idle(self) -> bool:

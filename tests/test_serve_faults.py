@@ -1,0 +1,193 @@
+"""Deterministic fault harness (serve.faults): plan grammar, seeded
+placement, and every FaultyEngine behavior — crash, hang, slow,
+admission faults, page-pool exhaustion — exercised on the model-free
+FakeEngine so the chaos machinery itself is tested in milliseconds.
+End-to-end recovery (pool rehoming, token exactness on the real
+engine) lives in tests/test_serve_recovery.py."""
+
+import numpy as np
+import pytest
+
+from repro.launch.serve import Request
+from repro.serve.faults import FaultPlan, FaultSpec, FaultyEngine
+from repro.serve.health import ReplicaDead, TransientAdmissionError
+from serve_testlib import FakeEngine
+
+
+def _req(rid, n=6):
+    return Request(rid=rid, prompt=np.arange(3, dtype=np.int32),
+                   max_new_tokens=n)
+
+
+class TestGrammar:
+    def test_spec_parse_crash(self):
+        s = FaultSpec.parse("crash@6")
+        assert (s.kind, s.tick, s.duration, s.replica) == \
+            ("crash", 6, 0, None)
+
+    def test_spec_parse_windowed_with_replica(self):
+        s = FaultSpec.parse("hang@14x4@r1")
+        assert (s.kind, s.tick, s.duration, s.replica) == \
+            ("hang", 14, 4, 1)
+        assert s.end == 18
+        assert s.active(14) and s.active(17) and not s.active(18)
+
+    def test_spec_roundtrip(self):
+        for text in ("crash@6", "hang@14x4@r1", "slow@2x8",
+                     "adm@0x3@r0", "pages@5x2"):
+            assert FaultSpec.parse(text).describe() == text
+
+    @pytest.mark.parametrize("bad", [
+        "meteor@3",          # unknown kind
+        "hang@4",            # windowed kind without a window
+        "crash@6@x1",        # bad replica token
+        "crash",             # no tick
+    ])
+    def test_spec_rejects(self, bad):
+        with pytest.raises(ValueError):
+            FaultSpec.parse(bad)
+
+    def test_plan_parse_and_describe(self):
+        plan = FaultPlan.parse("7:crash@6,hang@14x4@r1")
+        assert plan.seed == 7 and len(plan.faults) == 2
+        assert plan.describe() == "7:crash@6,hang@14x4@r1"
+
+    @pytest.mark.parametrize("bad", ["crash@6", "x:crash@6", "7:"])
+    def test_plan_rejects(self, bad):
+        with pytest.raises(ValueError):
+            FaultPlan.parse(bad)
+
+
+class TestPlacement:
+    def test_resolved_is_deterministic(self):
+        plan = FaultPlan.parse("11:crash@6,hang@10x2,adm@3x4")
+        a = plan.resolved(4)
+        b = FaultPlan.parse("11:crash@6,hang@10x2,adm@3x4").resolved(4)
+        assert {i: [s.describe() for s in v] for i, v in a.items()} == \
+            {i: [s.describe() for s in v] for i, v in b.items()}
+        assert all(0 <= i < 4 for i in a)
+
+    def test_explicit_replica_respected(self):
+        placed = FaultPlan.parse("0:crash@6@r2").resolved(3)
+        assert list(placed) == [2]
+
+    def test_out_of_range_replica_rejected(self):
+        with pytest.raises(ValueError, match="targets replica"):
+            FaultPlan.parse("0:crash@6@r5").resolved(2)
+
+    def test_wrap_only_faulted_replicas(self):
+        plan = FaultPlan.parse("0:crash@6@r1")
+        raw = FakeEngine()
+        assert plan.wrap(0, raw, n_replicas=2) is raw
+        wrapped = plan.wrap(1, FakeEngine(), n_replicas=2)
+        assert isinstance(wrapped, FaultyEngine)
+
+    def test_wrap_factory_is_one_shot_per_slot(self):
+        """A replacement engine (autoscaler repair) must come back
+        healthy — re-wrapping it would crash every repair forever."""
+        plan = FaultPlan.parse("0:crash@2@r0")
+        make = plan.wrap_factory(lambda idx, pol: FakeEngine(),
+                                 n_replicas=2)
+        assert isinstance(make(0, None), FaultyEngine)
+        assert isinstance(make(0, None), FakeEngine)   # rebuilt: clean
+
+
+class TestFaultyEngine:
+    def test_delegation(self):
+        eng = FaultyEngine(FakeEngine(batch_size=3), [])
+        assert eng.batch == 3 and eng.idle
+        eng.submit(_req(0))
+        assert len(eng.queue) == 1
+
+    def test_crash_is_fail_stop(self):
+        eng = FaultyEngine(FakeEngine(), [FaultSpec.parse("crash@2")])
+        eng.submit(_req(0))
+        assert eng.step() >= 0 and eng.step() >= 0
+        with pytest.raises(ReplicaDead):
+            eng.step()
+        assert eng.dead and "crash@2" in eng.fired
+        with pytest.raises(ReplicaDead):     # dead replicas stay dead
+            eng.step()
+        with pytest.raises(ReplicaDead):
+            eng.submit(_req(1))
+
+    def test_hang_stalls_inner_ticks(self):
+        eng = FaultyEngine(FakeEngine(), [FaultSpec.parse("hang@1x3")])
+        eng.submit(_req(0, n=10))
+        eng.step()
+        inner = eng.engine.ticks
+        for _ in range(3):                   # the hang window
+            assert eng.step() == 0
+        assert eng.engine.ticks == inner     # heartbeat stalled
+        assert eng.fault_ticks == 4          # harness clock advanced
+        eng.step()
+        assert eng.engine.ticks == inner + 1
+
+    def test_slow_ticks_every_factor(self):
+        eng = FaultyEngine(FakeEngine(), [FaultSpec.parse("slow@0x8")])
+        eng.submit(_req(0, n=20))
+        before = eng.engine.ticks
+        for _ in range(8):
+            eng.step()
+        # factor=2: the engine only ticks on every other step
+        assert eng.engine.ticks - before == 4
+
+    def test_adm_window_raises_transient(self):
+        eng = FaultyEngine(FakeEngine(), [FaultSpec.parse("adm@0x2")])
+        with pytest.raises(TransientAdmissionError):
+            eng.submit(_req(0))
+        eng.step(), eng.step()               # window closes
+        eng.submit(_req(1))
+        assert len(eng.queue) == 1
+
+
+class _Alloc:
+    """Minimal _PageAllocator surface for the pages fault."""
+
+    def __init__(self, n=8):
+        self.num_pages = n
+        self._free = list(range(1, n))       # page 0 is the trash page
+
+    @property
+    def available(self):
+        return len(self._free)
+
+    def alloc(self, n):
+        if n > len(self._free):
+            return None
+        out, self._free = self._free[:n], self._free[n:]
+        return out
+
+    def free(self, pages):
+        self._free.extend(pages)
+
+
+class TestPagesFault:
+    def _paged_engine(self, spec):
+        inner = FakeEngine()
+        inner._allocators = {32: _Alloc(8)}
+        return FaultyEngine(inner, [FaultSpec.parse(spec)]), inner
+
+    def test_steal_and_restore(self):
+        eng, inner = self._paged_engine("pages@1x2")
+        eng.step()
+        assert inner._allocators[32].available == 7
+        eng.step()                           # window start: pool drained
+        assert inner._allocators[32].available == 0
+        eng.step(), eng.step()               # window closes -> restored
+        assert inner._allocators[32].available == 7
+
+    def test_quiesce_prevents_false_leaks(self):
+        eng, inner = self._paged_engine("pages@0x100")
+        eng.step()
+        assert inner._allocators[32].available == 0
+        # the leak audit must see the true allocator picture even while
+        # the window is open
+        assert eng.pages_outstanding() == 0
+        assert inner._allocators[32].available == 7
+
+    def test_noop_on_dense_engine(self):
+        eng = FaultyEngine(FakeEngine(), [FaultSpec.parse("pages@0x2")])
+        eng.submit(_req(0))
+        eng.step()                           # no _allocators: no effect
+        assert eng.pages_outstanding() == 0

@@ -151,6 +151,141 @@ class TestBackpressure:
         assert _status(nowhere) == 404
 
 
+class TestFaultSemantics:
+    """Failure handling end to end: disconnect-cancel, deadline 504s,
+    replica death surfaced through /healthz and the stream tail."""
+
+    @staticmethod
+    def _chaos_gateway(plan, replicas=2, **gw_kw):
+        from repro.serve.faults import FaultPlan
+        from repro.serve.pool import ReplicaPool
+        from serve_testlib import fake_factory
+        reg = MetricsRegistry()
+        pool = ReplicaPool(
+            None, None, replicas=replicas, batch_size=2, metrics=reg,
+            engine_factory=FaultPlan.parse(plan).wrap_factory(
+                fake_factory(2, None), n_replicas=replicas))
+        return Gateway(pool, port=0, metrics=reg, **gw_kw), pool, reg
+
+    def test_disconnect_cancels_request(self):
+        """A client that drops mid-stream must free its slot — the
+        engine stops decoding for it instead of burning ticks until
+        length-stop."""
+        async def scenario():
+            gw, pool, reg = _gateway(replicas=1, batch_size=1)
+            await gw.start()
+            reader, writer = await asyncio.open_connection(
+                "127.0.0.1", gw.port)
+            body = json.dumps({"prompt": [3, 4],
+                               "max_new_tokens": 10_000,
+                               "stream": True}).encode()
+            writer.write((f"POST /v1/generate HTTP/1.1\r\nHost: t\r\n"
+                          f"Content-Length: {len(body)}\r\n\r\n"
+                          ).encode() + body)
+            await writer.drain()
+            await reader.read(256)          # a few tokens flowed
+            writer.close()                  # client walks away
+            await writer.wait_closed()
+            for _ in range(200):            # pump applies the cancel
+                if pool.idle:
+                    break
+                await asyncio.sleep(0.01)
+            await gw.stop()
+            return pool, reg
+
+        pool, reg = _run(scenario())
+        assert pool.idle                    # slot freed, queue empty
+        assert reg.counter("gateway_disconnects").value() == 1
+        assert pool.tokens_generated < 10_000
+
+    def test_unary_timeout_maps_to_504(self):
+        """A hung replica (no progress, nowhere to rehome) must turn
+        into a client-visible 504, not an open connection forever."""
+        async def scenario():
+            gw, pool, reg = self._chaos_gateway(
+                "0:hang@0x100000@r0", replicas=1,
+                request_timeout_s=0.3)
+            await gw.start()
+            resp = await _http(gw.port, "POST", "/v1/generate",
+                               {"prompt": [3], "max_new_tokens": 50,
+                                "stream": False})
+            await gw.stop()
+            return resp, reg
+
+        resp, reg = _run(scenario())
+        assert _status(resp) == 504
+        body = json.loads(resp.split("\r\n\r\n", 1)[1])
+        assert "timed out" in body["error"]
+        assert reg.counter("gateway_timeouts").value() == 1
+
+    def test_stream_timeout_emits_terminal_expired_chunk(self):
+        async def scenario():
+            gw, pool, _ = self._chaos_gateway(
+                "0:hang@0x100000@r0", replicas=1,
+                request_timeout_s=0.3)
+            await gw.start()
+            resp = await _http(gw.port, "POST", "/v1/generate",
+                               {"prompt": [3], "max_new_tokens": 50,
+                                "stream": True})
+            await gw.stop()
+            return resp
+
+        resp = _run(scenario())
+        assert _status(resp) == 200         # headers were already sent
+        tail = _ndjson(resp)[-1]
+        assert tail["done"] is True and tail["expired"] is True
+
+    def test_replica_death_surfaces_in_healthz_and_tail(self):
+        """Kill the serving replica mid-stream: the stream completes
+        token-exactly on the survivor, reports its recovery count, and
+        /healthz shows the death + recovery."""
+        async def scenario():
+            gw, pool, _ = self._chaos_gateway("0:crash@2@r0",
+                                              replicas=2)
+            await gw.start()
+            resp = await _http(gw.port, "POST", "/v1/generate",
+                               {"prompt": [3, 4], "max_new_tokens": 8,
+                                "stream": True})
+            health = await _http(gw.port, "GET", "/healthz")
+            await gw.stop()
+            return resp, health
+
+        resp, health = _run(scenario())
+        lines = _ndjson(resp)
+        body, tail = lines[:-1], lines[-1]
+        rid = body[0]["rid"]
+        # the full stream, in order, despite the mid-decode crash
+        assert [ln["token"] for ln in body] == \
+            [fake_token(rid, j) for j in range(8)]
+        assert tail["done"] is True and tail["recoveries"] == 1
+        h = json.loads(health.split("\r\n\r\n", 1)[1])
+        assert h["ok"] is True and h["deaths"] == 1
+        assert h["states"]["0"] == "dead"
+        assert h["states"]["1"] == "healthy"
+        assert h["recovered"] == 1
+
+    def test_submit_retries_absorb_transient_backpressure(self):
+        """With retries enabled, a burst that transiently fills the
+        queue succeeds once capacity frees instead of bouncing 429."""
+        async def scenario():
+            gw, pool, reg = _gateway(replicas=1, batch_size=1,
+                                     max_queue=1)
+            gw.max_inflight = 64
+            gw.submit_retries = 6
+            gw.retry_backoff_s = 0.02
+            await gw.start()
+            resps = await asyncio.gather(*[
+                _http(gw.port, "POST", "/v1/generate",
+                      {"prompt": [3], "max_new_tokens": 3,
+                       "stream": False})
+                for _ in range(5)])
+            await gw.stop()
+            return resps
+
+        resps = _run(scenario())
+        assert all(_status(r) == 200 for r in resps)
+
+
 class TestAffinityAndOps:
     def test_session_affinity_via_http(self):
         async def scenario():

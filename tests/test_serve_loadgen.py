@@ -107,6 +107,51 @@ class TestRunPoint:
             one["goodput_tok_per_tick"]
 
 
+CHAOS_FIELDS = ("chaos", "replica_deaths", "requests_recovered",
+                "p99_recovery_ticks", "recovered_goodput_tok_per_tick",
+                "recovered_token_exact", "leaked_pages", "expired")
+
+
+def _chaos_point(rate, plan="0:crash@3@r0", *, replicas=2, spec=None):
+    from repro.serve.faults import FaultPlan
+    from repro.serve.pool import ReplicaPool
+    from serve_testlib import fake_factory
+    chaos = FaultPlan.parse(plan)
+    pool = ReplicaPool(
+        None, None, replicas=replicas, batch_size=2, max_queue=4,
+        engine_factory=chaos.wrap_factory(fake_factory(2, 4),
+                                          n_replicas=replicas))
+    return run_point(pool, spec or LoadSpec(n_requests=20, seed=3),
+                     rate, vocab=VOCAB, chaos=chaos)
+
+
+class TestChaosPoint:
+    def test_recovery_columns_present_and_clean(self):
+        p = _chaos_point(1.0)
+        for field in CHAOS_FIELDS:
+            assert field in p, field
+        assert p["replica_deaths"] == 1
+        assert p["requests_recovered"] >= 1
+        assert p["leaked_pages"] == 0
+        assert p["recovered_token_exact"] is True
+        assert p["p99_recovery_ticks"] >= 1.0
+        # the base SLO schema rides along unchanged
+        for field in GATED_FIELDS:
+            assert field in p, field
+
+    def test_chaos_point_is_deterministic(self):
+        a = _strip_wall(_chaos_point(1.0))
+        b = _strip_wall(_chaos_point(1.0))
+        assert a == b
+
+    def test_plain_point_schema_is_chaos_free(self):
+        """Non-chaos points must stay byte-compatible with the
+        committed BENCH_serve.json — no recovery columns leak in."""
+        p = _point(1.0)
+        for field in CHAOS_FIELDS:
+            assert field not in p, field
+
+
 def _payload(points):
     return {"bench": "serve", "points": points}
 
@@ -195,6 +240,75 @@ class TestServeGate:
         assert self._check(base, res) == []
 
 
+@pytest.fixture
+def chaos_gate_dirs(tmp_path):
+    base = tmp_path / "baselines"
+    res = tmp_path / "results"
+    base.mkdir()
+    res.mkdir()
+    points = [_strip_wall(_chaos_point(r)) for r in (0.5, 2.0)]
+    for d in (base, res):
+        (d / check_regress.SERVE_CHAOS_FILE).write_text(
+            json.dumps({"bench": "serve_chaos", "points": points}))
+    return base, res, points
+
+
+class TestChaosGate:
+    def _check(self, base, res, tol=0.10):
+        return check_regress.check_serve_file(
+            check_regress.SERVE_CHAOS_FILE, tol=tol,
+            baseline_dir=str(base), result_dir=str(res))
+
+    def _rewrite(self, res, points):
+        (res / check_regress.SERVE_CHAOS_FILE).write_text(
+            json.dumps({"bench": "serve_chaos", "points": points}))
+
+    def test_identical_results_pass(self, chaos_gate_dirs):
+        base, res, _ = chaos_gate_dirs
+        assert self._check(base, res) == []
+
+    def test_leaked_pages_is_a_hard_fail(self, chaos_gate_dirs):
+        base, res, points = chaos_gate_dirs
+        pts = copy.deepcopy(points)
+        pts[0]["leaked_pages"] = 1
+        self._rewrite(res, pts)
+        fails = self._check(base, res)
+        assert fails and "leaked" in fails[0]
+
+    def test_inexact_recovery_fails(self, chaos_gate_dirs):
+        base, res, points = chaos_gate_dirs
+        pts = copy.deepcopy(points)
+        pts[1]["recovered_token_exact"] = False
+        self._rewrite(res, pts)
+        fails = self._check(base, res)
+        assert fails and "token-exact" in fails[0]
+
+    def test_recovery_latency_regression_fails(self, chaos_gate_dirs):
+        base, res, points = chaos_gate_dirs
+        pts = copy.deepcopy(points)
+        pts[0]["p99_recovery_ticks"] = \
+            pts[0]["p99_recovery_ticks"] * 1.2 + 2
+        self._rewrite(res, pts)
+        fails = self._check(base, res)
+        assert fails and "recovery latency" in fails[0]
+
+    def test_lost_recovery_coverage_fails(self, chaos_gate_dirs):
+        base, res, points = chaos_gate_dirs
+        pts = copy.deepcopy(points)
+        pts[0]["requests_recovered"] = 0
+        pts[0]["recovered_goodput_tok_per_tick"] = 0.0
+        self._rewrite(res, pts)
+        fails = self._check(base, res)
+        assert any("recovered" in f for f in fails)
+
+    def test_main_dispatches_chaos_file(self, chaos_gate_dirs):
+        base, res, _ = chaos_gate_dirs
+        rc = check_regress.main(
+            ["--files", check_regress.SERVE_CHAOS_FILE,
+             "--baseline-dir", str(base), "--result-dir", str(res)])
+        assert rc == 0
+
+
 class TestCommittedBaseline:
     def test_baseline_file_matches_schema(self):
         """The committed serve baseline must carry every gated field at
@@ -208,3 +322,20 @@ class TestCommittedBaseline:
         for p in payload["points"]:
             for field in GATED_FIELDS:
                 assert field in p, (field, p.get("arrival_rate"))
+
+    def test_chaos_baseline_matches_schema_and_invariants(self):
+        """The committed chaos baseline carries the recovery columns
+        and itself satisfies the hard gates (no leaks, token-exact)."""
+        import os
+        path = os.path.join(check_regress.BASELINE_DIR,
+                            check_regress.SERVE_CHAOS_FILE)
+        with open(path) as f:
+            payload = json.load(f)
+        assert payload["bench"] == "serve_chaos"
+        assert payload["points"], "chaos baseline sweep is empty"
+        for p in payload["points"]:
+            for field in GATED_FIELDS + CHAOS_FIELDS:
+                assert field in p, (field, p.get("arrival_rate"))
+            assert p["leaked_pages"] == 0
+            assert p["recovered_token_exact"] is True
+            assert p["replica_deaths"] >= 1

@@ -115,6 +115,73 @@ class TestEngineThreading:
             "serve_requests_rejected").value(replica="7") == 1
 
 
+class TestFaultToleranceSeries:
+    """The PR-9 observability contract: replica health and recovery are
+    first-class series, published by the monitor/pool — asserted here
+    on the FakeEngine pool so the names can't silently drift."""
+
+    def _chaos_pool(self, plan, reg, **kw):
+        from repro.serve.faults import FaultPlan
+        from repro.serve.pool import ReplicaPool
+        from serve_testlib import fake_factory
+        return ReplicaPool(
+            None, None, replicas=2, batch_size=2, metrics=reg,
+            engine_factory=FaultPlan.parse(plan).wrap_factory(
+                fake_factory(2, None), n_replicas=2), **kw)
+
+    def test_replica_state_gauge_and_failure_counter(self):
+        reg = MetricsRegistry()
+        pool = self._chaos_pool("0:crash@2@r0", reg)
+        reqs = [Request(rid=i, prompt=np.arange(3, dtype=np.int32),
+                        max_new_tokens=8) for i in range(4)]
+        pool.run(reqs)
+        from repro.serve.health import ReplicaState
+        assert reg.gauge("serve_replica_state").value(replica="0") == \
+            int(ReplicaState.DEAD)
+        assert reg.gauge("serve_replica_state").value(replica="1") == \
+            int(ReplicaState.HEALTHY)
+        assert reg.counter(
+            "serve_replica_failures").value(replica="0") == 1
+
+    def test_recovery_counter_and_latency_histogram(self):
+        reg = MetricsRegistry()
+        pool = self._chaos_pool("0:crash@3@r0", reg)
+        reqs = [Request(rid=i, prompt=np.arange(3, dtype=np.int32),
+                        max_new_tokens=8) for i in range(4)]
+        pool.run(reqs)
+        n_rec = len(pool.recovery_events)
+        assert n_rec >= 1
+        assert reg.counter("serve_requests_recovered").value() == n_rec
+        h = reg.histogram("serve_recovery_ticks")
+        assert h.count() == n_rec
+        from repro.serve.metrics import TICK_BUCKETS
+        assert h.quantile(0.99) <= TICK_BUCKETS[-1]
+        text = reg.expose()
+        assert "serve_recovery_ticks_bucket" in text
+
+    def test_expired_counter(self):
+        # sole replica crashes: the orphan can never land, so it must
+        # terminate at its deadline through the pool-level expiry path
+        reg = MetricsRegistry()
+        from repro.serve.faults import FaultPlan
+        from repro.serve.pool import ReplicaPool
+        from serve_testlib import fake_factory
+        pool = ReplicaPool(
+            None, None, replicas=1, batch_size=2, metrics=reg,
+            engine_factory=FaultPlan.parse("0:crash@2@r0").wrap_factory(
+                fake_factory(2, None), n_replicas=1))
+        req = Request(rid=0, prompt=np.arange(3, dtype=np.int32),
+                      max_new_tokens=30, deadline_ticks=6)
+        pool.run([req])
+        assert req.expired
+        assert reg.counter(
+            "serve_requests_expired").value(replica="pool") == 1
+
+    def test_tick_buckets_sorted(self):
+        from repro.serve.metrics import TICK_BUCKETS
+        assert list(TICK_BUCKETS) == sorted(TICK_BUCKETS)
+
+
 class TestMonitorIntegration:
     def test_monitor_publishes(self):
         reg = MetricsRegistry()
