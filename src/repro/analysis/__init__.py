@@ -1,1 +1,17 @@
+"""Static analysis for the op registry: cost modelling (``hlo_cost``)
+and the jaxpr-level contract auditor (``auditor`` + ``python -m
+repro.analysis``)."""
+
+from repro.analysis.auditor import (  # noqa: F401
+    apply_baseline,
+    audit_all,
+    audit_execution_policy,
+    audit_family,
+    audit_impl,
+    default_baseline_path,
+    load_baseline,
+    save_baseline,
+)
 from repro.analysis.hlo_cost import HloCost, analyze_hlo  # noqa: F401
+from repro.analysis.rules import RULES, Finding, make_finding  # noqa: F401
+from repro.analysis.source_rules import scan_source  # noqa: F401

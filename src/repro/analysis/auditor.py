@@ -1,0 +1,423 @@
+"""The registry auditor: prove capability contracts from jaxprs alone.
+
+For every registered ``(family, impl, policy)`` triple the auditor
+traces the family's ``OpSpec`` hooks under abstract values
+(``jax.make_jaxpr`` — no kernel ever executes) and judges the traced
+graph against the impl's DECLARED capabilities:
+
+  precision flow   every ``dot_general`` accumulates in >= 32 bits
+                   (PRE001), no narrowing convert sits between a
+                   multiply and its accumulate (PRE003), and the trace
+                   contains exactly ``num_passes(policy) *
+                   audit_contractions`` dots — ``x3`` rungs really are
+                   3-pass error-corrected (PRE002);
+  capabilities     a ``vjp`` claim must yield a traceable backward
+                   (CAP001), ``decode``-class claims must trace through
+                   the family's ``audit_runs`` (CAP002), and
+                   ``fused_policies`` must fuse IN-KERNEL — constant
+                   pallas-call count across fused rungs, zero dots
+                   outside the kernel — while router-decomposed rungs
+                   must show exactly one kernel call per pass (CAP003);
+  sharding         traced on each ``audit_meshes`` entry via
+                   ``shard.abstract_meshes()``, the jaxpr's collectives
+                   must equal the impl's declared ``Partitioning`` —
+                   nothing undeclared (SHD001), nothing declared-but-
+                   never-observed (SHD002), f32 reductions actually f32
+                   (SHD003);
+  pallas           BlockSpec/grid/scratch/interpret structure
+                   (``pallas_rules``).
+
+Because targets enumerate from the registry, any future
+``register_impl`` is audited with zero auditor changes — the static
+counterpart of the auto-parametrized contract suite.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from collections.abc import Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.jaxpr_scan import ScanResult, scan_jaxpr, trace_jaxpr
+from repro.analysis.pallas_rules import check_pallas_site
+from repro.analysis.rules import Finding, make_finding
+from repro.analysis.source_rules import scan_source
+from repro.core.precision import num_passes
+
+__all__ = [
+    "audit_impl",
+    "audit_family",
+    "audit_all",
+    "audit_execution_policy",
+    "load_baseline",
+    "save_baseline",
+    "apply_baseline",
+    "default_baseline_path",
+]
+
+# Partitioning role -> concrete mesh axis (core.ops.shard's binding).
+ROLE_AXIS = {"dp": "data", "sp": "data", "tp": "model", "ep": "expert",
+             "pod": "pod"}
+
+# Longest-prefix match for declared collective names ("psum_f32:tp" ->
+# psum over the tp role's axis, f32-required).
+_COLL_PREFIXES = ("reduce_scatter", "psum_scatter", "all_gather",
+                  "all_to_all", "ppermute", "psum")
+
+# Policies the per-surface sweeps (vjp / decode / sharded) sample: one
+# single-pass rung, one multi-pass rung, the exact rung.
+_SURFACE_POLICIES = ("bf16", "bf16x3", "f32")
+
+
+def _registry():
+    from repro.core.ops import registry
+    return registry
+
+
+def _route(family: str, impl: str, policy: str, mesh=None):
+    from repro.core.ops.route import Route
+    return Route(precision=policy, backends=((family, impl),),
+                 interpret=True, mesh=mesh)
+
+
+def _acc_ok(dtype) -> bool:
+    """>= 32-bit accumulation (f32/f64 floats, i32 for int8-MXU runs)."""
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.finfo(dtype).bits >= 32
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.iinfo(dtype).bits >= 32
+    return True
+
+
+def parse_collective(name: str) -> tuple[str, str, bool] | None:
+    """Declared collective -> (primitive, mesh axis, f32 required)."""
+    label, _, role = name.partition(":")
+    prim = next((p for p in _COLL_PREFIXES if label.startswith(p)), None)
+    axis = ROLE_AXIS.get(role)
+    if prim is None or axis is None:
+        return None
+    return prim, axis, "_f32" in label
+
+
+def _judge_trace(scan: ScanResult, target: str, policy: str,
+                 contractions: int, caps, *,
+                 check_passes: bool = True) -> list[Finding]:
+    out: list[Finding] = []
+    for i, dot in enumerate(scan.dots):
+        if not _acc_ok(dot.out_dtype):
+            out.append(make_finding(
+                "PRE001", target,
+                f"dot {i} accumulates in {dot.out_dtype} "
+                f"({dot.lhs_dtype} x {dot.rhs_dtype}, "
+                f"preferred_element_type={dot.preferred}) — MXU "
+                f"contractions must accumulate in f32"))
+    if check_passes:
+        expected = num_passes(policy) * contractions
+        if len(scan.dots) != expected:
+            out.append(make_finding(
+                "PRE002", target,
+                f"traced {len(scan.dots)} dot_general eqns, expected "
+                f"{expected} (= {num_passes(policy)} passes x "
+                f"{contractions} contraction sites) — the {policy!r} "
+                f"decomposition is not the declared rung structure"))
+    for src_dt, dst_dt in scan.downcasts:
+        out.append(make_finding(
+            "PRE003", target,
+            f"dot output downcast {src_dt} -> {dst_dt} feeds an "
+            f"accumulation add — the multiply/accumulate chain loses "
+            f"the f32 accumulator"))
+    for site in scan.pallas:
+        out.extend(check_pallas_site(
+            site, target, expect_interpret=True,
+            pads_to_tiles=caps.pads_to_tiles))
+    return out
+
+
+def _check_fusion_structure(scans: dict[str, ScanResult], caps,
+                            target_base: str) -> list[Finding]:
+    """CAP003: kernel-call structure vs fused_policies (kernel-backed
+    impls only — vendor chains have no pallas calls to structure)."""
+    out: list[Finding] = []
+    fused = {p: s for p, s in scans.items() if p in caps.fused_policies}
+    if not any(s.pallas_calls for s in fused.values()):
+        return out
+    per_pass = min(s.pallas_calls for s in fused.values()
+                   if s.pallas_calls) if fused else 1
+    for p, s in sorted(fused.items()):
+        tgt = f"{target_base}/{p}"
+        if s.pallas_calls != per_pass:
+            out.append(make_finding(
+                "CAP003", tgt,
+                f"declared fused but traces {s.pallas_calls} kernel "
+                f"calls where the impl's fused baseline is {per_pass} "
+                f"— this rung decomposes router-side"))
+        elif s.outer_dots:
+            out.append(make_finding(
+                "CAP003", tgt,
+                f"declared fused but {s.outer_dots} contraction(s) run "
+                f"OUTSIDE the kernel — the ladder is not in-kernel"))
+    for p, s in sorted(scans.items()):
+        if p in caps.fused_policies:
+            continue
+        tgt = f"{target_base}/{p}"
+        expected = 0 if p == "f32" else num_passes(p) * per_pass
+        if s.pallas_calls != expected:
+            what = ("exact-f32 vendor fallback (0 kernel calls)"
+                    if p == "f32" else
+                    f"router decomposition ({num_passes(p)} passes x "
+                    f"{per_pass} call(s))")
+            out.append(make_finding(
+                "CAP003", tgt,
+                f"non-fused rung traces {s.pallas_calls} kernel calls; "
+                f"expected {expected} — {what}"))
+    return out
+
+
+def _audit_sharded(spec, impl, problem, policies: Sequence[str],
+                   ) -> list[Finding]:
+    from repro.core.ops import shard
+    caps = impl.capabilities
+    part = caps.partitioning
+    out: list[Finding] = []
+    declared: dict[tuple[str, str], tuple[str, bool]] = {}
+    for name in part.collectives:
+        parsed = parse_collective(name)
+        if parsed is not None:
+            prim, axis, f32 = parsed
+            declared[(prim, axis)] = (name, f32)
+    observed: set[tuple[str, str]] = set()
+    for mesh_text in spec.audit_meshes:
+        mesh = shard.MeshSpec.parse(mesh_text)
+        policy = next((p for p in _SURFACE_POLICIES if p in policies),
+                      next(iter(policies), "bf16"))
+        target = f"{spec.family}/{impl.name}/{policy}@{mesh_text}"
+        route = _route(spec.family, impl.name, policy, mesh=mesh)
+        try:
+            with shard.abstract_meshes():
+                closed = trace_jaxpr(lambda: spec.run(problem, route))
+        except Exception as e:
+            out.append(make_finding(
+                "AUD001", target,
+                f"sharded trace failed: {type(e).__name__}: {e}"))
+            continue
+        scan = scan_jaxpr(closed)
+        out.extend(_judge_trace(scan, target, policy,
+                                spec.audit_contractions, caps))
+        for site in scan.collectives:
+            for axis in site.axes:
+                observed.add((site.prim, axis))
+                dec = declared.get((site.prim, axis))
+                if dec is None:
+                    out.append(make_finding(
+                        "SHD001", target,
+                        f"traced {site.prim} over axis {axis!r}; the "
+                        f"impl's Partitioning declares "
+                        f"{sorted(part.collectives) or 'no collectives'}"))
+                elif dec[1] and site.dtype != jnp.float32:
+                    out.append(make_finding(
+                        "SHD003", target,
+                        f"collective {dec[0]!r} declares an f32 "
+                        f"reduction but the traced {site.prim} operand "
+                        f"is {site.dtype}"))
+    for (prim, axis), (name, _) in sorted(declared.items()):
+        if (prim, axis) not in observed:
+            out.append(make_finding(
+                "SHD002", f"{spec.family}/{impl.name}@audit-meshes",
+                f"declared collective {name!r} ({prim} over {axis!r}) "
+                f"never observed on audit meshes "
+                f"{list(spec.audit_meshes)} — drift between "
+                f"Partitioning and the sharded body, or a mesh gap"))
+    return out
+
+
+def audit_impl(family: str, impl_name: str, *,
+               policies: Iterable[str] | None = None,
+               meshes: bool = True) -> list[Finding]:
+    """All findings for one registered impl."""
+    registry = _registry()
+    spec = registry.get_family(family)
+    if not spec.auditable:
+        return []
+    impl = registry.get_impl(family, impl_name)
+    caps = impl.capabilities
+    pols = tuple(p for p in sorted(caps.policies)
+                 if policies is None or p in set(policies))
+    problem = spec.make_problem(0)
+    out: list[Finding] = []
+
+    scans: dict[str, ScanResult] = {}
+    for policy in pols:
+        target = f"{family}/{impl_name}/{policy}"
+        route = _route(family, impl_name, policy)
+        try:
+            closed = trace_jaxpr(lambda: spec.run(problem, route))
+        except Exception as e:
+            out.append(make_finding(
+                "AUD001", target,
+                f"forward trace failed: {type(e).__name__}: {e}"))
+            continue
+        scans[policy] = scan_jaxpr(closed)
+        out.extend(_judge_trace(scans[policy], target, policy,
+                                spec.audit_contractions, caps))
+    out.extend(_check_fusion_structure(scans, caps,
+                                       f"{family}/{impl_name}"))
+
+    if caps.has("vjp") and spec.grad_args:
+        arg = spec.grad_args[0]
+        policy = next((p for p in _SURFACE_POLICIES if p in pols),
+                      pols[0] if pols else "bf16")
+        target = f"{family}/{impl_name}/{policy}#vjp"
+        route = _route(family, impl_name, policy)
+
+        def _loss(x):
+            return spec.run({**problem, arg: x}, route).sum()
+
+        try:
+            closed = trace_jaxpr(jax.grad(_loss), problem[arg])
+        except Exception as e:
+            out.append(make_finding(
+                "CAP001", target,
+                f"impl declares 'vjp' but the backward does not trace: "
+                f"{type(e).__name__}: {e}"))
+        else:
+            out.extend(_judge_trace(scan_jaxpr(closed), target, policy,
+                                    spec.audit_contractions, caps,
+                                    check_passes=False))
+
+    for feature, contractions, run in spec.audit_runs:
+        if not caps.has(feature):
+            continue
+        for policy in (p for p in _SURFACE_POLICIES if p in pols):
+            target = f"{family}/{impl_name}/{policy}#{feature}"
+            route = _route(family, impl_name, policy)
+            try:
+                closed = trace_jaxpr(lambda: run(problem, route))
+            except Exception as e:
+                out.append(make_finding(
+                    "CAP002", target,
+                    f"impl declares {feature!r} but the surface does "
+                    f"not trace: {type(e).__name__}: {e}"))
+                continue
+            out.extend(_judge_trace(scan_jaxpr(closed), target, policy,
+                                    contractions, caps))
+
+    if meshes and caps.partitioning is not None and spec.audit_meshes:
+        out.extend(_audit_sharded(spec, impl, problem, pols))
+    return out
+
+
+def audit_family(family: str, *, impl: str | None = None,
+                 policies: Iterable[str] | None = None,
+                 meshes: bool = True) -> list[Finding]:
+    registry = _registry()
+    names = (impl,) if impl else registry.available_impls(family)
+    out: list[Finding] = []
+    for name in names:
+        out.extend(audit_impl(family, name, policies=policies,
+                              meshes=meshes))
+    return out
+
+
+def audit_all(*, source: bool = True, meshes: bool = True,
+              source_root: str | None = None) -> list[Finding]:
+    """Every registered (family, impl, policy) triple + the SRC sweep."""
+    registry = _registry()
+    out: list[Finding] = []
+    for family in registry.families():
+        out.extend(audit_family(family, meshes=meshes))
+    if source:
+        out.extend(scan_source(source_root))
+    return out
+
+
+def audit_execution_policy(policy) -> list[Finding]:
+    """Audit exactly the surfaces an ``ExecutionPolicy`` resolves to —
+    the ``dryrun --audit`` deployment vet: each family's selected impl
+    (layer-scoped overrides included) on the rungs the policy will run,
+    plus that impl's audit meshes when the policy carries a mesh."""
+    registry = _registry()
+    out: list[Finding] = []
+    seen: set[tuple[str, str, tuple[str, ...]]] = set()
+    mesh_active = policy.mesh is not None and not policy.mesh.is_identity
+    for family in registry.families():
+        spec = registry.get_family(family)
+        layer_scopes: list[str | None] = [None]
+        layer_scopes += [lf for lf in (spec.layer_families or ())
+                         if policy.impl_for(family, lf)
+                         != policy.impl_for(family)]
+        for scope in layer_scopes:
+            impl = policy.impl_for(family, scope)
+            rungs = tuple(sorted(policy._rungs_for(family, scope)))
+            key = (family, impl, rungs)
+            if key in seen:
+                continue
+            seen.add(key)
+            out.extend(audit_impl(family, impl, policies=rungs,
+                                  meshes=mesh_active))
+    return out
+
+
+# ============================================================== baselines
+
+_BASELINE_SCHEMA = "analysis_baseline/v1"
+
+
+def default_baseline_path() -> str:
+    """``benchmarks/baselines/ANALYSIS_baseline.json`` at the repo root
+    (resolved relative to this file, like the bench baselines)."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.normpath(os.path.join(
+        here, "..", "..", "..", "benchmarks", "baselines",
+        "ANALYSIS_baseline.json"))
+
+
+def load_baseline(path: str | None) -> dict:
+    path = path or default_baseline_path()
+    if not os.path.exists(path):
+        return {"schema": _BASELINE_SCHEMA, "suppressions": []}
+    with open(path, encoding="utf-8") as f:
+        data = json.load(f)
+    if data.get("schema") != _BASELINE_SCHEMA:
+        raise ValueError(
+            f"baseline {path}: unknown schema {data.get('schema')!r} "
+            f"(expected {_BASELINE_SCHEMA!r})")
+    return data
+
+
+def save_baseline(path: str | None, findings: Sequence[Finding],
+                  reason: str = "baselined (review before trusting)",
+                  ) -> str:
+    path = path or default_baseline_path()
+    data = {
+        "schema": _BASELINE_SCHEMA,
+        "suppressions": [
+            {"key": f.key, "rule": f.rule_id, "reason": reason}
+            for f in sorted(findings, key=lambda f: f.key)],
+    }
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+@dataclasses.dataclass(frozen=True)
+class BaselineResult:
+    unsuppressed: tuple[Finding, ...]
+    suppressed: tuple[Finding, ...]
+    stale_keys: tuple[str, ...]      # suppressions that no longer fire
+
+
+def apply_baseline(findings: Sequence[Finding],
+                   baseline: dict) -> BaselineResult:
+    keys = {s["key"] for s in baseline.get("suppressions", ())}
+    hit = {f.key for f in findings}
+    return BaselineResult(
+        unsuppressed=tuple(f for f in findings if f.key not in keys),
+        suppressed=tuple(f for f in findings if f.key in keys),
+        stale_keys=tuple(sorted(keys - hit)),
+    )

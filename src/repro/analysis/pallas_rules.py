@@ -1,0 +1,122 @@
+"""Pallas structural rules: judge one traced ``pallas_call`` site.
+
+What a kernel's eqn params prove without running it:
+
+  * every ``BlockSpec`` index map is itself a jaxpr — evaluating it at
+    the GRID CORNERS (all-0 / all-max program ids) bounds the block
+    indices it can produce, so an off-by-one in an index map is caught
+    statically (PAL001).  Index maps taking scalar-prefetch operands
+    (data-dependent block chasing, e.g. the paged-decode page-table
+    walk or the grouped kernel's offset-driven expert pick) cannot be
+    bounded without values and are skipped.
+  * ``pads_to_tiles`` impls promise tile-aligned operands, so every
+    block shape must divide its (padded) array shape (PAL002).
+  * scratch accumulators hold partial MXU sums; a floating scratch
+    narrower than f32 reintroduces exactly the accumulate-in-half
+    error the paper measures (PAL003).
+  * the traced ``interpret`` flag must equal the route's resolved flag
+    — a kernel hardcoding it would silently ignore the CI interpret
+    lane or, worse, interpret in production (PAL004).
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import jax
+
+from repro.analysis.jaxpr_scan import PallasSite, _float_bits
+from repro.analysis.rules import Finding, make_finding
+
+__all__ = ["check_pallas_site"]
+
+
+def _eval_index_map(index_map, point: tuple[int, ...]) -> tuple[int, ...]:
+    closed = index_map if hasattr(index_map, "jaxpr") else None
+    jaxpr = closed.jaxpr if closed is not None else index_map
+    consts = closed.consts if closed is not None else ()
+    out = jax.core.eval_jaxpr(jaxpr, consts, *point)
+    return tuple(int(v) for v in out)
+
+
+def _block_dims(block_shape) -> list[int | None]:
+    """Block extents as ints (None = unbounded/squeezed dim we skip)."""
+    dims: list[int | None] = []
+    for b in block_shape:
+        if isinstance(b, int):
+            dims.append(b)
+        elif hasattr(b, "block_size"):          # pl.Blocked wrapper
+            dims.append(int(b.block_size))
+        else:                                   # None / squeezed / mapped
+            dims.append(None)
+    return dims
+
+
+def check_pallas_site(site: PallasSite, target: str, *,
+                      expect_interpret: bool,
+                      pads_to_tiles: bool) -> list[Finding]:
+    out: list[Finding] = []
+    label = f"{target} kernel {site.name!r}"
+
+    if site.interpret != expect_interpret:
+        out.append(make_finding(
+            "PAL004", target,
+            f"{label}: pallas_call interpret={site.interpret} but the "
+            f"audited route resolves interpret={expect_interpret} — the "
+            f"kernel ignores route.resolved_interpret()"))
+
+    grid = tuple(g for g in site.grid if isinstance(g, int))
+    static_grid = len(grid) == len(site.grid)
+
+    for op_idx, (block_shape, array_shape, index_map) in enumerate(
+            site.block_mappings):
+        dims = _block_dims(block_shape)
+        if pads_to_tiles:
+            for d, (bs, ad) in enumerate(zip(dims, array_shape)):
+                if bs and isinstance(ad, int) and ad % bs:
+                    out.append(make_finding(
+                        "PAL002", target,
+                        f"{label}: operand {op_idx} block shape "
+                        f"{tuple(dims)} dim {d} ({bs}) does not divide "
+                        f"array shape {tuple(array_shape)} — impl "
+                        f"declares pads_to_tiles"))
+
+        if index_map is None or not static_grid:
+            continue
+        n_in = len(getattr(index_map, "jaxpr", index_map).invars)
+        if n_in != len(grid):
+            # Scalar-prefetch operands: data-dependent index map
+            # (page-table / group-offset chasing) — not statically
+            # boundable, by design.
+            continue
+        corners = set(itertools.product(
+            *[(0, g - 1) for g in grid])) if grid else {()}
+        for point in sorted(corners):
+            try:
+                idx = _eval_index_map(index_map, point)
+            except Exception:       # non-arithmetic maps: out of scope
+                break
+            for d, i in enumerate(idx[:len(dims)]):
+                bs = dims[d] if d < len(dims) else None
+                ad = array_shape[d] if d < len(array_shape) else None
+                if not bs or not isinstance(ad, int):
+                    continue
+                n_blocks = max(-(-ad // bs), 1)
+                if i < 0 or i >= n_blocks:
+                    out.append(make_finding(
+                        "PAL001", target,
+                        f"{label}: operand {op_idx} index map returns "
+                        f"block index {i} for dim {d} at grid point "
+                        f"{point}, outside [0, {n_blocks - 1}] "
+                        f"(array {tuple(array_shape)}, block "
+                        f"{tuple(dims)})"))
+
+    for s_idx, dt in enumerate(site.scratch_avals):
+        bits = _float_bits(dt)
+        if bits is not None and bits < 32:
+            out.append(make_finding(
+                "PAL003", target,
+                f"{label}: scratch operand {s_idx} is {dt} — floating "
+                f"accumulator scratch must be f32 (the paper's "
+                f"accumulate-in-full-precision invariant)"))
+    return out

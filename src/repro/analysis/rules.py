@@ -1,0 +1,109 @@
+"""Rule catalog + finding model for the static auditor.
+
+Every check the auditor performs has a STABLE rule ID (the contract
+with baselines, CI logs and the mutation self-tests in
+``tests/test_analysis.py`` — each ID there is proven live by a seeded
+violation).  Groups mirror the contract families:
+
+  AUD  plumbing     a declared surface fails to trace at all
+  PRE  precision    f32 accumulation / pass-count / downcast structure
+  CAP  capability   vjp / decode claims, fused-vs-router decomposition
+  SHD  sharding     declared Partitioning collectives vs the jaxpr
+  PAL  pallas       BlockSpec bounds, tile divisibility, scratch dtypes,
+                    interpret-flag hygiene
+  SRC  source       raw ``jnp`` contractions without an f32 accumulator
+
+A ``Finding`` is one violation at one target; its ``key``
+(``rule_id|target``) is what baseline suppression files match on, so a
+suppression pins one rule at one (family, impl, policy, mesh/surface)
+coordinate and nothing else.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["Finding", "Rule", "RULES", "rule", "make_finding"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    rule_id: str
+    severity: str                # "error" | "warning"
+    title: str
+
+
+RULES: dict[str, Rule] = {r.rule_id: r for r in (
+    Rule("AUD001", "error",
+         "declared surface fails to trace (make_jaxpr raised)"),
+    Rule("PRE001", "error",
+         "MXU contraction does not accumulate in f32 (dot_general output "
+         "narrower than float32)"),
+    Rule("PRE002", "error",
+         "decomposition pass count differs from the policy's declared "
+         "rung count (dots != num_passes * contraction sites)"),
+    Rule("PRE003", "error",
+         "dot output downcast below f32 before accumulation (convert "
+         "between multiply and add)"),
+    Rule("CAP001", "error",
+         "impl declares 'vjp' but its backward fails to trace"),
+    Rule("CAP002", "error",
+         "declared decode-class capability fails to trace"),
+    Rule("CAP003", "error",
+         "fused/router decomposition structure contradicts "
+         "fused_policies (kernel-call count vs declared fusion)"),
+    Rule("SHD001", "error",
+         "sharded trace performs a collective the impl's Partitioning "
+         "does not declare"),
+    Rule("SHD002", "error",
+         "declared Partitioning collective never observed on any audit "
+         "mesh"),
+    Rule("SHD003", "error",
+         "collective declared *_f32 reduces a non-f32 operand"),
+    Rule("PAL001", "error",
+         "BlockSpec index map leaves the operand's block grid at a grid "
+         "corner"),
+    Rule("PAL002", "error",
+         "block shape does not divide the (padded) operand shape"),
+    Rule("PAL003", "error",
+         "floating-point scratch accumulator narrower than f32"),
+    Rule("PAL004", "error",
+         "pallas_call interpret flag disagrees with the route"),
+    Rule("SRC001", "error",
+         "jnp contraction without preferred_element_type=jnp.float32"),
+)}
+
+
+def rule(rule_id: str) -> Rule:
+    return RULES[rule_id]
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one audit target."""
+
+    rule_id: str
+    severity: str
+    target: str                  # "family/impl/policy[@mesh][#surface]"
+    message: str
+
+    @property
+    def key(self) -> str:
+        """The baseline-suppression coordinate (message-independent, so
+        rewording a rule never invalidates a reviewed suppression)."""
+        return f"{self.rule_id}|{self.target}"
+
+    def as_dict(self) -> dict[str, str]:
+        return {"rule": self.rule_id, "severity": self.severity,
+                "target": self.target, "message": self.message,
+                "key": self.key}
+
+    def __str__(self) -> str:
+        return f"{self.severity.upper()} {self.rule_id} {self.target}: " \
+               f"{self.message}"
+
+
+def make_finding(rule_id: str, target: str, message: str) -> Finding:
+    r = RULES[rule_id]
+    return Finding(rule_id=r.rule_id, severity=r.severity, target=target,
+                   message=message)

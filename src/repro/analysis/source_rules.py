@@ -1,0 +1,87 @@
+"""Source-level precision rules (SRC group): the AST sweep.
+
+The jaxpr rules only see code that is REACHABLE from a registered
+audit surface.  A raw ``jnp.einsum`` in a model file (the exact bug
+class this PR fixes in ``models/ssm.py``) runs under whatever dtype
+its operands happen to carry: the moment a policy casts activations to
+bf16, a contraction without ``preferred_element_type=jnp.float32``
+multiplies AND accumulates in bf16 — the paper's worst-precision
+quadrant — without any test tripping until tolerances drift.  So the
+auditor also walks the source tree: every ``jnp.einsum`` /
+``jnp.dot`` / ``jnp.matmul`` / ``jnp.tensordot`` call must pin its
+accumulator (``np.*`` calls are exempt — those are the fp64 oracles).
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+
+from repro.analysis.rules import Finding, make_finding
+
+__all__ = ["scan_source", "default_source_root"]
+
+_CONTRACTIONS = ("einsum", "dot", "matmul", "tensordot")
+_JNP_NAMES = ("jnp",)          # the repo-wide import alias
+
+
+def default_source_root() -> str:
+    """``src/repro`` relative to this package (the audited tree)."""
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _is_jnp_contraction(node: ast.Call) -> str | None:
+    fn = node.func
+    if not isinstance(fn, ast.Attribute) or fn.attr not in _CONTRACTIONS:
+        return None
+    base = fn.value
+    if isinstance(base, ast.Name) and base.id in _JNP_NAMES:
+        return fn.attr
+    # jax.numpy.einsum spelled out
+    if (isinstance(base, ast.Attribute) and base.attr == "numpy"
+            and isinstance(base.value, ast.Name) and base.value.id == "jax"):
+        return fn.attr
+    return None
+
+
+def _scan_file(path: str, rel: str) -> list[Finding]:
+    with open(path, encoding="utf-8") as f:
+        src = f.read()
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [make_finding("SRC001", f"{rel}:{e.lineno or 0}",
+                             f"unparseable source: {e.msg}")]
+    out: list[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _is_jnp_contraction(node)
+        if name is None:
+            continue
+        kwargs = {kw.arg for kw in node.keywords}
+        if "preferred_element_type" in kwargs or None in kwargs:
+            continue            # explicit accumulator (or **kwargs pass-through)
+        out.append(make_finding(
+            "SRC001", f"{rel}:{node.lineno}",
+            f"jnp.{name} without preferred_element_type=jnp.float32 — "
+            f"accumulates in the operand dtype once a policy narrows "
+            f"the inputs"))
+    return out
+
+
+def scan_source(root: str | None = None) -> list[Finding]:
+    """SRC findings over every ``.py`` under ``root`` (default:
+    the installed ``src/repro`` tree)."""
+    root = root or default_source_root()
+    findings: list[Finding] = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames
+                             if d not in ("__pycache__",))
+        for fname in sorted(filenames):
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            rel = os.path.relpath(path, root)
+            findings.extend(_scan_file(path, rel))
+    return findings

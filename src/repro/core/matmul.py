@@ -217,7 +217,7 @@ class MatmulRoute(Route):
         object.__setattr__(self, "backends",
                            ops.normalize_backends(merged))
 
-    def with_impl(self, family: str, name: str) -> "MatmulRoute":
+    def with_impl(self, family: str, name: str) -> MatmulRoute:
         legacy_field = dict(self._LEGACY_FIELDS).get(family)
         if legacy_field is not None:
             return dataclasses.replace(self, **{legacy_field: name})
@@ -297,7 +297,7 @@ class MatmulPolicy(ExecutionPolicy):
     def from_precision(cls, policy: PrecisionPolicy, *,
                        backend: str = "xla",
                        tiles: TileConfig | None = None,
-                       **backend_overrides) -> "MatmulPolicy":
+                       **backend_overrides) -> MatmulPolicy:
         """Lift a plain PrecisionPolicy onto a backend."""
         fields = {f.name: getattr(policy, f.name)
                   for f in dataclasses.fields(PrecisionPolicy)}

@@ -25,7 +25,8 @@ acyclic (models/ and kernels/ import this subsystem).
 
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+from collections.abc import Callable
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -76,6 +77,29 @@ def _run(problem: dict, route: Route) -> jax.Array:
                              causal=True, policy=route)
 
 
+def _audit_decode(problem: dict, route: Route) -> jax.Array:
+    """Decode-surface closure for the static auditor: the make_problem
+    k/v double as a post-write dense cache, q's first row as the
+    current token."""
+    k = problem["k"]
+    pos = jnp.full((k.shape[0],), k.shape[1] - 1, jnp.int32)
+    return attention_decode(problem["q"][:, :1], k, problem["v"], pos,
+                            policy=route)
+
+
+def _audit_paged_decode(problem: dict, route: Route) -> jax.Array:
+    """Paged-decode closure: an all-trash paged pool with the same
+    logical capacity (page contents don't matter for a trace)."""
+    from repro.core.ops import paged
+    k = problem["k"]
+    b, s, kv, hd = k.shape
+    cache = paged.init_paged(b, s, kv, hd, page_size=8,
+                             num_pages=b * paged.num_logical_pages(s, 8) + 1)
+    pos = jnp.full((b,), s - 1, jnp.int32)
+    return attention_paged_decode(problem["q"][:, :1], cache, pos,
+                                  policy=route)
+
+
 def _oracle(problem: dict) -> np.ndarray:
     """Dense fp64 causal softmax attention (GQA layout)."""
     qn = np.asarray(problem["q"], np.float64)
@@ -109,6 +133,15 @@ register_family(OpSpec(
     # error, so the GEMM ladder bounds hold with margin.
     error_bound=lambda policy: LADDER_BOUNDS[policy],
     grad_args=("q",),
+    # Score + value contractions: every pass is TWO dots.
+    audit_contractions=2,
+    # dp=4: b=2 can't batch-shard, sq=skv=16 can -> the reference
+    # impl's sequence-parallel path with its all_gather_kv:sp MUST
+    # fire; dp=2,tp=2 shards batch and KV heads exactly (collective-
+    # free on every impl).
+    audit_meshes=("dp=4", "dp=2,tp=2"),
+    audit_runs=(("decode", 2, _audit_decode),
+                ("paged_decode", 2, _audit_paged_decode)),
 ))
 
 
@@ -192,7 +225,7 @@ register_impl("attention", "pallas_fused",
 def attention_forward(q: jax.Array, k: jax.Array, v: jax.Array, *,
                       causal: bool = True, window: int | None = None,
                       softcap: float | None = None,
-                      policy: "str | Route" = "bf16",
+                      policy: str | Route = "bf16",
                       kv_chunk: int = 2048) -> jax.Array:
     """Fused-attention dispatch (train/prefill/encode/cross shapes).
 
@@ -216,7 +249,7 @@ def attention_forward(q: jax.Array, k: jax.Array, v: jax.Array, *,
 def attention_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      pos: jax.Array, *, window: int | None = None,
                      softcap: float | None = None,
-                     policy: "str | Route" = "bf16") -> jax.Array:
+                     policy: str | Route = "bf16") -> jax.Array:
     """Single-token fused-attention decode against a KV cache.
 
     ``pos`` is the PER-ROW (B,) position vector of the continuous-
@@ -243,7 +276,7 @@ def attention_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 def attention_paged_decode(q: jax.Array, cache, pos: jax.Array, *,
                            window: int | None = None,
                            softcap: float | None = None,
-                           policy: "str | Route" = "bf16") -> jax.Array:
+                           policy: str | Route = "bf16") -> jax.Array:
     """Single-token fused-attention decode against a PAGED KV cache.
 
     ``cache`` is a post-write ``core.ops.paged.PagedKVCache`` (the

@@ -79,6 +79,10 @@ register_family(OpSpec(
     oracle=_oracle,
     error_bound=lambda policy: LADDER_BOUNDS[policy],
     grad_args=("a",),
+    # tp=3: n=40 doesn't divide but k=132 does -> row-parallel, the
+    # psum_f32:tp epilogue MUST appear; dp=2,tp=2: column-parallel, no
+    # collective may appear.  Together they pin the declared set.
+    audit_meshes=("tp=3", "dp=2,tp=2"),
 ))
 
 
@@ -350,7 +354,7 @@ _lowered_einsum.defvjp(_lowered_fwd, _lowered_bwd)
 
 
 def routed_einsum(spec: str, a: jax.Array, b: jax.Array,
-                  policy: "str | Route" = "bf16") -> jax.Array:
+                  policy: str | Route = "bf16") -> jax.Array:
     """Two-operand einsum under a (precision, backends, tiles) route.
 
     fp32 out always (the accumulator type). Non-reference impls require
@@ -368,7 +372,7 @@ def routed_einsum(spec: str, a: jax.Array, b: jax.Array,
     return _lowered_einsum(spec, route, a, b)
 
 
-def gemm(a: jax.Array, b: jax.Array, *, policy: "str | Route" = "bf16",
+def gemm(a: jax.Array, b: jax.Array, *, policy: str | Route = "bf16",
          backend: str | None = None, tiles: TileConfig | None = None,
          interpret: bool | None = None) -> jax.Array:
     """Policy-routed C = A @ B through a registry impl (2-D entry).

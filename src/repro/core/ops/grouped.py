@@ -99,10 +99,13 @@ register_family(OpSpec(
     valid_mask=lambda problem: problem["_valid"],
     error_bound=lambda policy: LADDER_BOUNDS[policy],
     grad_args=("x",),
+    # ep=3 divides e=3 exactly -> expert-parallel windows + the
+    # psum_f32:ep reassembly; tp=2 column-shards f=24 alongside.
+    audit_meshes=("ep=3,tp=2",),
 ))
 
 
-def grouped_tiles(policy: "str | Route", m: int, n: int,
+def grouped_tiles(policy: str | Route, m: int, n: int,
                   k: int) -> TileConfig:
     """The tile config the grouped impl will run (m, n, k) with.
 
@@ -166,7 +169,7 @@ def _pallas_grouped_matmul(x, w, group_offsets, *, route: Route):
 
 
 def grouped_matmul(x: jax.Array, w: jax.Array, group_offsets: jax.Array,
-                   *, policy: "str | Route" = "bf16") -> jax.Array:
+                   *, policy: str | Route = "bf16") -> jax.Array:
     """Ragged grouped-GEMM dispatch (the MoE expert contraction).
 
     x: (N, D) token rows sorted by group in the aligned layout above;

@@ -32,7 +32,8 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Any, Callable, Iterable
+from collections.abc import Callable, Iterable
+from typing import Any
 
 from repro.core.precision import POLICIES
 
@@ -154,6 +155,18 @@ class OpSpec:
     family's bench matrix, and ``make_problem`` / ``run`` / ``oracle``
     / ``error_bound`` / ``grad_args`` let the generic contract suite
     parity-test every (impl, policy) without family-specific tests.
+
+    The audit hooks drive the STATIC auditor (``repro.analysis``) the
+    same way — no family-specific auditor code:
+    ``audit_contractions`` is the number of MXU contraction sites one
+    forward call performs (the pass-count rule checks
+    ``dots == num_passes(policy) * audit_contractions``);
+    ``audit_meshes`` names the mesh specs whose sharded traces must
+    jointly exercise every declared ``Partitioning`` collective; and
+    ``audit_runs`` lists extra feature-gated entry points as
+    ``(feature_tag, contractions, fn(problem, route) -> array)`` —
+    audited only for impls declaring that feature (attention registers
+    its ``decode`` / ``paged_decode`` surfaces here).
     """
 
     family: str
@@ -169,10 +182,20 @@ class OpSpec:
     valid_mask: Callable[[dict], Any] | None = None  # rows to compare
     error_bound: Callable[[str], float] | None = None
     grad_args: tuple[str, ...] = ()
+    audit_contractions: int = 1
+    audit_meshes: tuple[str, ...] = ()
+    audit_runs: tuple[tuple[str, int, Callable[..., Any]], ...] = ()
 
     def __post_init__(self) -> None:
         if not self.label:
             object.__setattr__(self, "label", f"{self.family} backend")
+
+    @property
+    def auditable(self) -> bool:
+        """Whether ``repro.analysis`` can statically audit this family
+        (the same hooks the contract suite needs: a problem builder and
+        a routed runner)."""
+        return self.make_problem is not None and self.run is not None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -322,12 +345,13 @@ def capability_rows() -> list[dict[str, str]]:
                 "tiles": ",".join(c.tile_schema) or "-",
                 "shardable": (",".join(sorted(c.partitioning.roles))
                               if c.partitioning else "-"),
+                "audited": "yes" if spec.auditable else "-",
             })
     return rows
 
 
 _COLS = ("family", "impl", "role", "policies", "fused", "features", "tiles",
-         "shardable")
+         "shardable", "audited")
 
 
 def capability_markdown() -> str:

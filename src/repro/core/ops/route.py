@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Mapping
+from collections.abc import Mapping
 
 import jax
 
@@ -93,7 +93,7 @@ class Route:
     def uses_reference(self, family: str) -> bool:
         return self.impl(family) == registry.reference_impl(family)
 
-    def with_impl(self, family: str, name: str) -> "Route":
+    def with_impl(self, family: str, name: str) -> Route:
         d = dict(self.backends)
         d[family] = name
         return dataclasses.replace(self, backends=normalize_backends(d))
@@ -116,7 +116,7 @@ class Route:
         return self.impl("grouped")
 
 
-def as_route(policy: "str | Route") -> Route:
+def as_route(policy: str | Route) -> Route:
     """Normalize a policy argument: strings mean (rung, all-reference)."""
     if isinstance(policy, Route):
         return policy
@@ -281,7 +281,7 @@ class ExecutionPolicy(PrecisionPolicy):
     @classmethod
     def from_precision(cls, policy: PrecisionPolicy, *,
                        backends=None, tiles: TileConfig | None = None,
-                       **kw) -> "ExecutionPolicy":
+                       **kw) -> ExecutionPolicy:
         """Lift a plain PrecisionPolicy onto a backends mapping."""
         fields = {f.name: getattr(policy, f.name)
                   for f in dataclasses.fields(PrecisionPolicy)}

@@ -42,6 +42,7 @@ any of this: the single-device route emits a byte-identical jaxpr.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 
@@ -50,7 +51,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-__all__ = ["MeshSpec", "active_mesh", "unsharded_route",
+__all__ = ["MeshSpec", "active_mesh", "unsharded_route", "abstract_meshes",
            "sharded_gemm_2d", "sharded_attention_forward",
            "sharded_attention_decode", "sharded_grouped_matmul"]
 
@@ -101,7 +102,7 @@ class MeshSpec:
         return ",".join(parts)
 
     @classmethod
-    def parse(cls, text: str) -> "MeshSpec":
+    def parse(cls, text: str) -> MeshSpec:
         """Parse the unified ``--mesh`` grammar: ``dp=2,tp=2,ep=2``
         (any subset of dp/tp/ep/pod, missing roles default to 1);
         ``none`` / ``1`` mean the identity mesh."""
@@ -126,7 +127,7 @@ class MeshSpec:
 
     @classmethod
     def from_shape(cls, shape: tuple[int, ...], axes: tuple[str, ...],
-                   ) -> "MeshSpec":
+                   ) -> MeshSpec:
         """Lift a (shape, axis-names) mesh description (the historical
         ``choose_mesh_shape`` return) into a MeshSpec."""
         by_axis = dict(zip(axes, shape))
@@ -168,7 +169,36 @@ def _build_mesh(spec: MeshSpec):
                          devices=devices[:spec.size])
 
 
-def active_mesh(mesh: "MeshSpec | None") -> "MeshSpec | None":
+# When True, the sharded dispatchers resolve MeshSpecs to ABSTRACT
+# meshes: ``shard_map`` then traces (jaxprs, eval_shape) without any
+# devices.  This is the static auditor's hook — it must see the sharded
+# jaxpr (collectives included) on a single-CPU CI runner.
+_ABSTRACT_BUILD = False
+
+
+@contextlib.contextmanager
+def abstract_meshes():
+    """Trace sharded dispatch on ``AbstractMesh``es (no devices needed).
+
+    Within this context every ``spec.build()`` the sharded variants
+    perform returns ``spec.abstract()`` instead, so ``jax.make_jaxpr``
+    over a mesh-carrying route succeeds on any host.  Tracing only —
+    executing the traced computation still requires real devices.
+    """
+    global _ABSTRACT_BUILD
+    prev = _ABSTRACT_BUILD
+    _ABSTRACT_BUILD = True
+    try:
+        yield
+    finally:
+        _ABSTRACT_BUILD = prev
+
+
+def _mesh_for(spec: MeshSpec):
+    return spec.abstract() if _ABSTRACT_BUILD else spec.build()
+
+
+def active_mesh(mesh: MeshSpec | None) -> MeshSpec | None:
     """None unless ``mesh`` actually distributes anything — the identity
     short-circuit every dispatcher checks first."""
     if mesh is None or mesh.is_identity:
@@ -198,7 +228,7 @@ def sharded_gemm_2d(impl, a: jax.Array, b: jax.Array, route) -> jax.Array:
     if dp == 1 and not col and not row:
         return _impl_gemm_2d(impl, a, b, unsharded_route(route))
 
-    mesh = spec.build()
+    mesh = _mesh_for(spec)
     m_ax = "data" if dp > 1 else None
     inner = unsharded_route(route)
     if col:
@@ -255,7 +285,7 @@ def sharded_attention_forward(impl, q, k, v, *, causal, window, softcap,
                                softcap=softcap, route=unsharded_route(route),
                                kv_chunk=kv_chunk)
 
-    mesh = spec.build()
+    mesh = _mesh_for(spec)
     b_ax = "data" if dp > 1 else None
     h_ax = "model" if tp > 1 else None
     inner = unsharded_route(route)
@@ -304,7 +334,7 @@ def sharded_attention_decode(impl, q, k_cache, v_cache, pos, *, window,
     if dp == 1 and tp == 1:
         return impl.fn.decode(q, k_cache, v_cache, pos, window=window,
                               softcap=softcap, route=inner)
-    mesh = spec.build()
+    mesh = _mesh_for(spec)
     b_ax = "data" if dp > 1 else None
     h_ax = "model" if tp > 1 else None
     in_specs = (P(b_ax, None, h_ax, None, None),
@@ -339,7 +369,7 @@ def sharded_grouped_matmul(impl, x, w, group_offsets, route) -> jax.Array:
         inner = dataclasses.replace(
             inner, tiles=grouped_tiles(inner, x.shape[0], f, d))
 
-    mesh = spec.build()
+    mesh = _mesh_for(spec)
     e_ax = "expert" if ep > 1 else None
     f_ax = "model" if tp > 1 else None
     in_specs = (P(None, None), P(e_ax, None, f_ax), P(None))

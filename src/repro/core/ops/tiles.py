@@ -23,7 +23,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-from typing import Sequence
+from collections.abc import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -114,7 +114,7 @@ class TileConfig:
     bn: int = 256
     bk: int = 256
 
-    def clamp(self, m: int, n: int, k: int) -> "TileConfig":
+    def clamp(self, m: int, n: int, k: int) -> TileConfig:
         """Shrink blocks to MXU-friendly sizes no larger than the
         (sublane-/lane-rounded) problem so padding stays small."""
         return TileConfig(

@@ -45,7 +45,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Sequence
+from collections.abc import Sequence
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -248,11 +249,11 @@ class PrecisionPolicy:
         return v if v is not None else self.default
 
     @classmethod
-    def uniform(cls, policy: str) -> "PrecisionPolicy":
+    def uniform(cls, policy: str) -> PrecisionPolicy:
         return cls(default=policy)
 
     @classmethod
-    def mixed_hpc(cls) -> "PrecisionPolicy":
+    def mixed_hpc(cls) -> PrecisionPolicy:
         """The paper's HPC recommendation: refine where error accumulates."""
         return cls(default="bf16", logits="bf16x3", attention="refine_a")
 

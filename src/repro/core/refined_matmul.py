@@ -28,7 +28,7 @@ __all__ = ["peinsum", "pmatmul", "refined_matmul"]
 
 
 def peinsum(spec: str, a: jax.Array, b: jax.Array,
-            policy: "str | ops.Route" = "bf16") -> jax.Array:
+            policy: str | ops.Route = "bf16") -> jax.Array:
     """Two-operand einsum computed under a precision policy / route.
 
     Returns fp32 (the accumulator type). ``spec`` is any two-operand
@@ -42,7 +42,7 @@ def peinsum(spec: str, a: jax.Array, b: jax.Array,
 
 
 def pmatmul(a: jax.Array, b: jax.Array,
-            policy: "str | ops.Route" = "bf16") -> jax.Array:
+            policy: str | ops.Route = "bf16") -> jax.Array:
     """Policy-routed ``a @ b`` (contract last dim of a with first of b)."""
     if a.ndim < 1 or b.ndim != 2:
         raise ValueError(f"pmatmul expects (..., k) x (k, n); got {a.shape} x {b.shape}")
@@ -50,7 +50,7 @@ def pmatmul(a: jax.Array, b: jax.Array,
 
 
 def refined_matmul(a: jax.Array, b: jax.Array,
-                   policy: "str | ops.Route" = "refine_ab",
+                   policy: str | ops.Route = "refine_ab",
                    *, backend: str | None = None) -> jax.Array:
     """Paper-shaped 2-D GEMM under a policy (benchmarks/tests entry point).
 

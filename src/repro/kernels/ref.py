@@ -77,7 +77,8 @@ def wkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
         rt, kt, vt, wt = inp                       # (B, H, K) each
         kv = kt[..., :, None] * vt[..., None, :]   # (B, H, K, K)
         out = jnp.einsum("bhk,bhkv->bhv", rt,
-                         state + u[None, :, :, None] * kv)
+                         state + u[None, :, :, None] * kv,
+                         preferred_element_type=jnp.float32)
         new = state * jnp.exp(wt)[..., None] + kv
         return new, out
 

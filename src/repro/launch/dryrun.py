@@ -268,6 +268,11 @@ def main() -> None:
                          "(any subset) or 'auto'; cells then compile on "
                          "that mesh with registry-routed sharded ops. "
                          "Composes with --backend")
+    ap.add_argument("--audit", action="store_true",
+                    help="statically audit the resolved route (impl x "
+                         "precision rungs x mesh, per arch) with "
+                         "repro.analysis instead of compiling cells; "
+                         "exit 1 on unsuppressed findings")
     args = ap.parse_args()
 
     if args.list:
@@ -278,6 +283,32 @@ def main() -> None:
     from repro.core import ops
     backends = ops.parse_backend_flags(args.backend)
 
+    archs = [args.arch] if args.arch else list(ARCHS)
+
+    if args.audit:
+        # Scoped static analysis: exactly the (family, impl, rung)
+        # surfaces each arch's resolved ExecutionPolicy routes to —
+        # the pre-deploy vet for a --backend/--mesh combination.
+        from repro.analysis import (apply_baseline, audit_execution_policy,
+                                    load_baseline)
+        baseline = load_baseline(None)
+        n_bad = 0
+        for arch in archs:
+            cfg = get_config(arch)
+            mesh_spec = resolve_mesh_spec(args.mesh, cfg)
+            policy = execution_policy_for(cfg, backends=backends,
+                                          mesh=mesh_spec)
+            result = apply_baseline(audit_execution_policy(policy), baseline)
+            for f in result.unsuppressed:
+                print(f"[{arch}] {f}")
+            print(f"[audit  ] {arch}: {len(result.unsuppressed)} "
+                  f"finding(s), {len(result.suppressed)} suppressed",
+                  flush=True)
+            n_bad += len(result.unsuppressed)
+        if n_bad:
+            raise SystemExit(1)
+        return
+
     meshes = [False, True]
     if args.multi_pod_only:
         meshes = [True]
@@ -285,7 +316,6 @@ def main() -> None:
         meshes = [False]
 
     cells = []
-    archs = [args.arch] if args.arch else list(ARCHS)
     shapes = [args.shape] if args.shape else list(LM_SHAPES)
     for arch in archs:
         for shape in shapes:

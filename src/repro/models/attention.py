@@ -214,7 +214,7 @@ def attention(
     num_heads: int,
     num_kv_heads: int,
     head_dim: int,
-    policy: "str | Route",
+    policy: str | Route,
     rope_theta: float | None = 10_000.0,   # None -> no RoPE (whisper)
     window: int | None = None,             # sliding window (local layers)
     softcap: float | None = None,

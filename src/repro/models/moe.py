@@ -178,7 +178,7 @@ def _sorted_ffn(p: dict, xf: jax.Array, gate_vals, expert_idx, *,
 # ================================================================== FFN
 
 def moe_ffn(p: dict, x: jax.Array, *, num_experts: int, top_k: int,
-            capacity_factor: float, mlp_kind: str, policy: "str | Route",
+            capacity_factor: float, mlp_kind: str, policy: str | Route,
             router_policy: str = "f32", dropless: bool = False,
             ) -> tuple[jax.Array, jax.Array]:
     """x: (B, S, D) -> (out (B, S, D), aux_loss scalar).

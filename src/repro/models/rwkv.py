@@ -138,7 +138,8 @@ def _wkv_chunked(r, k, v, logw, u, chunk: int, policy="bf16"):
         scores = jnp.where(mask[None, None], scores, 0.0)  # 2-D mask
         intra = peinsum("bhts,bhsv->bhtv", scores, vv, policy)
         # current-token bonus u
-        bonus = jnp.einsum("bhck,bhck->bhc", rr * u[None, :, None, :], kk)
+        bonus = jnp.einsum("bhck,bhck->bhc", rr * u[None, :, None, :], kk,
+                           preferred_element_type=jnp.float32)
         cur = bonus[..., None] * vv
         out = inter + intra + cur
         # state update: decay to chunk end, add decayed outer products
@@ -190,8 +191,11 @@ def rwkv6_layer(p: dict, x: jax.Array, *, head_dim: int, policy: str,
     if decode:
         st = state.wkv                                  # (B,H,K,V)
         rr, kk, vv = r32[:, 0], k32[:, 0], v32[:, 0]    # (B,H,K)
-        bonus = jnp.einsum("bhk,bhk->bh", rr * u[None], kk)
-        out = jnp.einsum("bhk,bhkv->bhv", rr, st) + bonus[..., None] * vv
+        bonus = jnp.einsum("bhk,bhk->bh", rr * u[None], kk,
+                           preferred_element_type=jnp.float32)
+        out = jnp.einsum("bhk,bhkv->bhv", rr, st,
+                         preferred_element_type=jnp.float32
+                         ) + bonus[..., None] * vv
         new_wkv = st * jnp.exp(logw[:, 0])[..., None] + (
             kk[..., None] * vv[:, :, None, :])
         out = out[:, None]                              # (B,1,H,V)

@@ -105,19 +105,22 @@ def _ssd_chunked(x, bmat, cmat, rel, dt, chunk: int, policy: str):
         xx, bb, ccm, rr, dd = inp          # per-chunk slices
         ll = jnp.cumsum(rr, axis=1)        # (B,C,H) inclusive log decay
         # inter-chunk: y_t += C_t . (exp(ll_t) * state_in)
-        y_inter = jnp.einsum("bcn,bhpn,bch->bchp", ccm, state, jnp.exp(ll))
+        y_inter = jnp.einsum("bcn,bhpn,bch->bchp", ccm, state, jnp.exp(ll),
+                             preferred_element_type=jnp.float32)
         # intra-chunk: scores[t,s] = (C_t.B_s) exp(ll_t-ll_s) dt_s, s<=t
         cb = peinsum("btn,bsn->bts", ccm, bb, policy)
         dec_ts = jnp.exp(jnp.clip(
             ll[:, :, None, :] - ll[:, None, :, :], None, 0.0))  # (B,t,s,H)
         scores = cb[:, :, :, None] * dec_ts * dd[:, None, :, :]
         scores = jnp.where(mask[None, :, :, None], scores, 0.0)
-        y_intra = jnp.einsum("btsh,bshp->bthp", scores, xx)
+        y_intra = jnp.einsum("btsh,bshp->bthp", scores, xx,
+                             preferred_element_type=jnp.float32)
         # state update: decay to chunk end + decayed outer products
         dec_end = jnp.exp(ll[:, -1:, :] - ll)                   # (B,C,H)
         state = state * jnp.exp(ll[:, -1])[:, :, None, None]
         state = state + jnp.einsum("bch,bchp,bcn->bhpn",
-                                   dd * dec_end, xx, bb)
+                                   dd * dec_end, xx, bb,
+                                   preferred_element_type=jnp.float32)
         return state, y_inter + y_intra
 
     state0 = jnp.zeros((b, h, p, n), jnp.float32)
@@ -185,8 +188,10 @@ def mamba2_layer(p: dict, x: jax.Array, *, head_dim: int, ssm_state: int,
         st = state.ssd                                        # (B,H,P,N)
         a_t = jnp.exp(rel[:, 0])                              # (B,H)
         st = st * a_t[:, :, None, None] + jnp.einsum(
-            "bh,bhp,bn->bhpn", dt[:, 0], x32[:, 0], b32[:, 0])
-        y = jnp.einsum("bn,bhpn->bhp", c32[:, 0], st)[:, None]  # (B,1,H,P)
+            "bh,bhp,bn->bhpn", dt[:, 0], x32[:, 0], b32[:, 0],
+            preferred_element_type=jnp.float32)
+        y = jnp.einsum("bn,bhpn->bhp", c32[:, 0], st,
+                       preferred_element_type=jnp.float32)[:, None]
         new_ssd = st
     else:
         ch = min(chunk, s)

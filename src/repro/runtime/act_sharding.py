@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
-from typing import Callable
+from collections.abc import Callable
 
 import jax
 

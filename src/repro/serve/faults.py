@@ -93,7 +93,7 @@ class FaultSpec:
         return s
 
     @classmethod
-    def parse(cls, text: str) -> "FaultSpec":
+    def parse(cls, text: str) -> FaultSpec:
         parts = text.strip().split("@")
         if len(parts) not in (2, 3):
             raise ValueError(
@@ -122,7 +122,7 @@ class FaultPlan:
     faults: tuple[FaultSpec, ...]
 
     @classmethod
-    def parse(cls, text: str) -> "FaultPlan":
+    def parse(cls, text: str) -> FaultPlan:
         """``SEED:FAULT[,FAULT...]`` (the ``--chaos`` grammar)."""
         head, sep, rest = text.partition(":")
         if not sep or not head.strip().lstrip("-").isdigit():
